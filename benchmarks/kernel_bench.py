@@ -1,0 +1,78 @@
+"""Kernel microbenchmarks.
+
+On this CPU container Pallas runs in interpret mode, so wall time is not a
+TPU signal; what is reported per kernel is (a) oracle agreement across a
+shape sweep and (b) the analytic arithmetic intensity of the chosen BlockSpec
+tiling (FLOPs per HBM byte) — the quantity that decides MXU-bound vs
+HBM-bound on the real chip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import Row, timed
+
+
+def _gram_rows():
+    rows = []
+    for d, n, r, bn in ((128, 4096, 128, 512), (256, 8192, 64, 512),
+                        (512, 2048, 128, 256)):
+        x = jax.random.normal(jax.random.PRNGKey(0), (d, n))
+        q = jax.random.normal(jax.random.PRNGKey(1), (d, r))
+        out, us = timed(lambda: np.asarray(
+            ops.gram_apply(x, q, block_n=bn, use_pallas=True)))
+        want = np.asarray(ref.gram_apply_ref(x, q))
+        err = float(np.abs(out - want).max())
+        flops = 4 * d * n * r
+        bytes_moved = (d * n + 2 * d * r) * 4          # stream X once, Q/V resident
+        rows.append(Row(
+            f"kernel/gram_apply/d{d}n{n}r{r}", us,
+            {"max_err_vs_ref": f"{err:.1e}",
+             "flops": flops,
+             "arith_intensity_flops_per_byte": round(flops / bytes_moved, 1),
+             "vmem_tile_kb": round((d * bn + d * r + bn * r) * 4 / 1024, 0)}))
+    return rows
+
+
+def _flash_rows():
+    rows = []
+    for b, h, s, hd in ((1, 4, 1024, 64), (2, 8, 512, 128)):
+        q = jax.random.normal(jax.random.PRNGKey(0), (b, h, s, hd))
+        k = jax.random.normal(jax.random.PRNGKey(1), (b, h, s, hd))
+        v = jax.random.normal(jax.random.PRNGKey(2), (b, h, s, hd))
+        out, us = timed(lambda: np.asarray(
+            ops.flash_attention(q, k, v, causal=True, use_pallas=True)))
+        want = np.asarray(ref.flash_attention_ref(q, k, v, causal=True))
+        err = float(np.abs(out - want).max())
+        flops = 4 * b * h * s * s // 2 * hd
+        hbm = 4 * b * h * s * hd * 4
+        rows.append(Row(
+            f"kernel/flash_attn/b{b}h{h}s{s}hd{hd}", us,
+            {"max_err_vs_ref": f"{err:.1e}",
+             "arith_intensity_flops_per_byte": round(flops / hbm, 1)}))
+    return rows
+
+
+def _gram_qr_rows():
+    rows = []
+    for d, r, bd in ((8192, 64, 1024), (16384, 128, 2048)):
+        v = jax.random.normal(jax.random.PRNGKey(0), (d, r))
+        out, us = timed(lambda: np.asarray(
+            ops.gram_qr(v, block_d=bd, use_pallas=True)))
+        want = np.asarray(ref.gram_qr_ref(v))
+        err = float(np.abs(out - want).max() / max(np.abs(want).max(), 1))
+        flops = 2 * d * r * r
+        rows.append(Row(
+            f"kernel/gram_qr/d{d}r{r}", us,
+            {"rel_err_vs_ref": f"{err:.1e}",
+             "arith_intensity_flops_per_byte": round(flops / (d * r * 4), 1),
+             "vmem_tile_kb": round((bd * r + r * r) * 4 / 1024, 0)}))
+    return rows
+
+
+def run():
+    return _gram_rows() + _flash_rows() + _gram_qr_rows()

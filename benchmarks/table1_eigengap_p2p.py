@@ -1,0 +1,33 @@
+"""Table I — P2P communications, S-DOT vs SA-DOT, across eigengaps.
+
+Paper setting: N=20, ER p=0.25, r=5, T_o=200, consensus schedules
+{ceil(0.5t+1), t+1, 2t+1, 50}; data d=20, n_i=500 per node.
+"""
+from __future__ import annotations
+
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.sdot import sdot
+from repro.core.topology import erdos_renyi
+
+from .common import PAPER_SCHEDULES, Row, p2p_per_node_k, sample_problem, timed
+
+N, P, R, T_O, D, N_PER = 20, 0.25, 5, 200, 20, 500
+
+
+def run():
+    rows = []
+    g = erdos_renyi(N, P, seed=1)
+    eng = DenseConsensus(g)
+    for gap in (0.3, 0.7, 0.9):
+        covs, q_true = sample_problem(d=D, r=R, n_nodes=N, n_per=N_PER,
+                                      gap=gap, seed=0)
+        for label, (kind, cap) in PAPER_SCHEDULES.items():
+            sched = consensus_schedule(kind, T_O, t_max=50, cap=cap)
+            res, us = timed(sdot, covs=covs, engine=eng, r=R, t_outer=T_O,
+                            schedule=sched, q_true=q_true)
+            rows.append(Row(
+                f"table1/gap{gap}/Tc={label}", us,
+                {"p2p_k": round(res.ledger.per_node_p2p(N) / 1e3, 2),
+                 "p2p_k_model": round(p2p_per_node_k(g, int(sched.sum())), 2),
+                 "final_err": f"{res.error_trace[-1]:.2e}"}))
+    return rows

@@ -1,0 +1,38 @@
+"""Table IV — star topology: the hub relays everything, so its P2P count is
+(N-1)x every edge node's — the central-bottleneck effect."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.sdot import sdot
+from repro.core.topology import star
+
+from .common import Row, sample_problem, timed
+
+N, R, T_O = 20, 5, 200
+
+
+def run():
+    rows = []
+    covs, q_true = sample_problem(d=20, r=R, n_nodes=N, n_per=500, gap=0.7,
+                                  seed=0)
+    g = star(N)
+    eng = DenseConsensus(g)
+    for label, kind, t_max, cap in (
+            ("2t+1", "lin2", 50, 50), ("50", "const", 50, None),
+            ("min(2t+1,100)", "lin2", 100, 100),
+            ("min(5t+1,100)", "lin5", 100, 100),
+            ("100", "const", 100, None)):
+        sched = consensus_schedule(kind, T_O, t_max=t_max, cap=cap)
+        res, us = timed(sdot, covs=covs, engine=eng, r=R, t_outer=T_O,
+                        schedule=sched, q_true=q_true)
+        rounds = int(sched.sum())
+        center_k = g.degrees[0] * rounds / 1e3
+        edge_k = g.degrees[1] * rounds / 1e3
+        rows.append(Row(
+            f"table4/star/Tc={label}", us,
+            {"center_p2p_k": round(center_k, 2),
+             "edge_p2p_k": round(edge_k, 2),
+             "final_err": f"{res.error_trace[-1]:.2e}"}))
+    return rows

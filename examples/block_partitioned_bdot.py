@@ -1,0 +1,48 @@
+"""B-DOT — block-partitioned distributed PSA (beyond the paper).
+
+The paper's conclusion names data partitioned by BOTH samples and features
+as the open problem for data massive in both d and n. This example runs the
+B-DOT composition implemented in repro.core.bdot: a 4 x 5 grid of nodes,
+each holding one (d/4 x n/5) block, estimates the global top-r eigenspace
+with only block-local payloads (n_j x r column partials, d_i x r row
+partials, r x r QR Grams).
+
+Run:  PYTHONPATH=src python examples/block_partitioned_bdot.py
+"""
+import jax.numpy as jnp
+
+from repro.core.bdot import bdot
+from repro.core.consensus import DenseConsensus
+from repro.core.linalg import eigh_topr
+from repro.core.topology import erdos_renyi
+from repro.data.pipeline import (gaussian_eigengap_data, partition_features,
+                                 partition_samples)
+
+D, N, R, I, J = 40, 4000, 5, 4, 5
+
+
+def main():
+    x, _, _ = gaussian_eigengap_data(D, N, R, 0.6, seed=0)
+    _, q_true = eigh_topr(x @ x.T, R)
+    fslabs = partition_features(x, I)
+    blocks = [partition_samples(sl, J) for sl in fslabs]
+    print(f"{I}x{J} grid; block at node (i,j): "
+          f"{blocks[0][0].shape} of the global {x.shape}")
+
+    cols = [DenseConsensus(erdos_renyi(I, 0.7, seed=j)) for j in range(J)]
+    rows = [DenseConsensus(erdos_renyi(J, 0.7, seed=10 + i)) for i in range(I)]
+    res = bdot(blocks=blocks, col_engines=cols, row_engines=rows, r=R,
+               t_outer=60, t_c=50, q_true=q_true)
+
+    q = res.q_full
+    print(f"final subspace error: {res.error_trace[-1]:.2e}")
+    print(f"orthonormality |Q^T Q - I|_max: "
+          f"{float(jnp.abs(q.T @ q - jnp.eye(R)).max()):.2e}")
+    print(f"largest single message: {max(N // J, D // I) * R} elems "
+          f"(vs S-DOT {D * R}, F-DOT {N * R})")
+    assert res.error_trace[-1] < 1e-4
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

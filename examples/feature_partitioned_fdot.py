@@ -1,0 +1,44 @@
+"""F-DOT — feature-wise partitioned PSA (the paper's Alg. 2).
+
+A sensor-array setting: each of 10 nodes observes 2 of the 20 features of a
+common signal. Together they estimate the top-4 principal subspace of the
+global covariance; each node only ever learns ITS OWN rows of the basis.
+
+Run:  PYTHONPATH=src python examples/feature_partitioned_fdot.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import DenseConsensus
+from repro.core.fdot import fdot
+from repro.core.linalg import eigh_topr
+from repro.core.metrics import subspace_error
+from repro.core.topology import erdos_renyi
+from repro.data.pipeline import gaussian_eigengap_data, partition_features
+
+D, R, N_NODES, N_SAMPLES = 20, 4, 10, 4000
+
+
+def main():
+    x, _, _ = gaussian_eigengap_data(D, N_SAMPLES, R, 0.6, seed=0)
+    _, q_true = eigh_topr(x @ x.T, R)
+    blocks = partition_features(x, N_NODES)
+    print(f"{N_NODES} nodes, {blocks[0].shape[0]} features each, "
+          f"{N_SAMPLES} shared samples")
+
+    engine = DenseConsensus(erdos_renyi(N_NODES, p=0.5, seed=1))
+    res = fdot(data_blocks=blocks, engine=engine, r=R, t_outer=80, t_c=50,
+               q_true=q_true)
+
+    q = res.q_full
+    print(f"final subspace error: {res.error_trace[-1]:.2e}")
+    print(f"orthonormality |Q^T Q - I|_max: "
+          f"{float(jnp.abs(q.T @ q - jnp.eye(R)).max()):.2e}")
+    print(f"P2P per node: {res.ledger.per_node_p2p(N_NODES)/1e3:.1f}K "
+          f"(consensus payloads: n x r partials + r x r Grams only)")
+    assert res.error_trace[-1] < 1e-4
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver — LM training with the paper's technique in the loop.
+
+Trains a ~100M-param qwen2-family model with the production trainer
+(checkpoint/restart, async saves) and PSA-compressed cross-pod gradient
+reduction: each pod is one "node" of the paper's network, S-DOT maintains
+the shared gradient subspace, and cross-pod traffic shrinks ~d/r.
+
+CPU note: the default flags train a scaled-down model for 60 steps so the
+example finishes in minutes; pass --full-100m --steps 300 on real hardware.
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/train_lm_psa_compress.py
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import tempfile
+
+# multi-pod needs >= 4 placeholder devices BEFORE jax initializes
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+from repro.configs import get_arch, reduced_config  # noqa: E402
+from repro.launch.train import train  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--full-100m", action="store_true",
+                    help="~100M-param config (use on real hardware)")
+    ap.add_argument("--ckpt-dir", default="")
+    args_in = ap.parse_args()
+
+    ckpt = args_in.ckpt_dir or tempfile.mkdtemp(prefix="psa_train_")
+
+    # assemble trainer args (same namespace the CLI builds)
+    targs = argparse.Namespace(
+        arch="qwen2-7b", reduced=True, mesh="multipod",
+        steps=args_in.steps, batch=4, seq=64, lr=1e-3, warmup=10,
+        seed=0, data_seed=0, psa=True, psa_rank=16,
+        ckpt_dir=ckpt, ckpt_every=20, keep_last=2, log_every=10)
+
+    if args_in.full_100m:
+        # ~100M params: d_model=768, 12 layers, vocab 32k
+        import repro.launch.train as T
+        base = get_arch("qwen2-7b")
+        cfg100 = dataclasses.replace(
+            reduced_config(base), d_model=768, n_layers=12, n_heads=12,
+            n_kv_heads=4, d_ff=2048, vocab_size=32_000, head_dim=None)
+        T.get_arch = lambda _aid: cfg100           # inject
+        targs.reduced = False
+        targs.batch, targs.seq = 8, 512
+
+    out = train(targs)
+    print(f"\ntrain summary: {out}")
+    assert out["last_loss"] < out["first_loss"], "loss must decrease"
+    print(f"checkpoints in {ckpt}: restart the same command to auto-resume")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

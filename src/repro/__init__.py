@@ -1,0 +1,2 @@
+"""repro — distributed PSA (S-DOT / SA-DOT / F-DOT) training framework in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,21 @@
+"""Core distributed-PSA library (the paper's contribution).
+
+Public API:
+    topology     — graphs + doubly-stochastic weights + mixing time
+    consensus    — gossip engines (dense simulation / SPMD shard_map)
+    oi           — centralized orthogonal iteration
+    sdot         — S-DOT and SA-DOT (sample-partitioned)
+    fdot         — F-DOT + distributed CholeskyQR (feature-partitioned)
+    bdot         — B-DOT (block-partitioned; beyond-paper, the paper's §VI)
+    baselines    — SeqPM, SeqDistPM, DSA, DPGD, DeEPCA, d-PM
+    metrics      — subspace error (paper eq. 11), comm ledgers
+"""
+from . import baselines, bdot, consensus, fdot, linalg, metrics, oi, sdot, topology  # noqa: F401
+from .bdot import bdot as run_bdot  # noqa: F401
+from .consensus import DenseConsensus, SpmdConsensus, consensus_schedule  # noqa: F401
+from .fdot import fdot as run_fdot  # noqa: F401
+from .linalg import cholesky_qr2, orthonormal_init  # noqa: F401
+from .metrics import CommLedger, subspace_error  # noqa: F401
+from .oi import orthogonal_iteration  # noqa: F401
+from .sdot import sadot as run_sadot, sdot as run_sdot  # noqa: F401
+from .topology import Graph, erdos_renyi, local_degree_weights, mixing_time, ring, star  # noqa: F401

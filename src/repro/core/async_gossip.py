@@ -1,0 +1,106 @@
+"""Asynchronous / straggler-tolerant consensus — the paper's §V future work.
+
+The paper measures (Table V) that one slow node stalls the whole synchronous
+network every iteration and concludes that mitigating stragglers "requires
+dealing with asynchronicity in the networks", left as future work. This
+module implements it:
+
+* ``AsyncConsensus`` — a gossip engine in which every round each node is
+  awake independently with probability ``p_awake``; sleeping nodes neither
+  send nor mix (their neighbors renormalize their weights over the awake
+  subgraph, preserving double stochasticity per round, so the average is
+  conserved and the iteration remains a valid consensus step).
+* ``straggler_wall_clock`` — a wall-clock model comparing the synchronous
+  network (every round costs the slowest node's delay) with the async one
+  (a delayed node simply misses rounds; the round time stays nominal but
+  more rounds are needed for the same contraction).
+
+The headline result (benchmarks/async_straggler.py): with one persistent
+straggler of delay D >> t_round, synchronous S-DOT pays (t_round + D) per
+round while async S-DOT pays t_round per round and only ~1/N of the mixing
+opportunities are lost — wall-clock speedup approaching (t_round + D) /
+t_round for large networks, at a modest increase in rounds-to-floor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import CommLedger
+from .topology import Graph, local_degree_weights
+
+__all__ = ["AsyncConsensus", "straggler_wall_clock"]
+
+
+@dataclasses.dataclass
+class AsyncConsensus:
+    """Gossip with per-round random node availability.
+
+    Each round, node i is awake w.p. ``p_awake[i]``. The effective mixing
+    matrix for the round keeps only edges between awake nodes and returns
+    every skipped weight to the diagonal — doubly stochastic by
+    construction, so sum_i Z_i is invariant and the debiasing of Alg. 1
+    still applies (we track the realized product of mixing matrices for the
+    exact per-node debias weight).
+    """
+
+    graph: Graph
+    p_awake: np.ndarray          # (N,) probability each node is awake
+    seed: int = 0
+
+    def __post_init__(self):
+        self.weights = local_degree_weights(self.graph)
+        self._rng = np.random.default_rng(self.seed)
+        if np.isscalar(self.p_awake) or np.ndim(self.p_awake) == 0:
+            self.p_awake = np.full(self.graph.n_nodes, float(self.p_awake))
+
+    def _round_matrix(self) -> np.ndarray:
+        awake = self._rng.random(self.graph.n_nodes) < self.p_awake
+        w = self.weights.copy()
+        n = self.graph.n_nodes
+        mask = np.outer(awake, awake)
+        off = ~np.eye(n, dtype=bool)
+        dropped = np.where(off & ~mask, w, 0.0)
+        w = np.where(off & mask, w, 0.0)
+        np.fill_diagonal(w, self.weights.diagonal() + dropped.sum(axis=1))
+        return w, awake
+
+    def run_debiased(self, z_stack: jnp.ndarray, t_c: int,
+                     ledger: Optional[CommLedger] = None):
+        """t_c async rounds + exact realized debias: approximates sum_j Z_j."""
+        n = self.graph.n_nodes
+        z = np.asarray(z_stack, np.float64)
+        prod = np.eye(n)
+        for _ in range(int(t_c)):
+            w, awake = self._round_matrix()
+            z = np.einsum("ij,j...->i...", w, z)
+            prod = w @ prod
+            if ledger is not None:
+                sends = float((w > 0).sum() - n)   # off-diagonal messages
+                ledger.p2p += sends
+                ledger.matrices += sends
+                ledger.scalars += sends * np.prod(z_stack.shape[1:])
+        scale = np.maximum(prod[:, 0], 1e-6)       # realized [Pi W e_1]_i
+        bshape = (-1,) + (1,) * (z_stack.ndim - 1)
+        return jnp.asarray(z / scale.reshape(bshape), jnp.float32)
+
+
+def straggler_wall_clock(*, n_nodes: int, t_round: float, delay: float,
+                         rounds_sync: int, rounds_async: int) -> dict:
+    """Wall-clock model, one persistent straggler (paper Table V setting).
+
+    Synchronous: every round blocks on the straggler -> (t_round + delay).
+    Asynchronous: rounds never block (the straggler is simply asleep while
+    busy); it is awake a fraction t_round/(t_round+delay) of rounds.
+    """
+    sync = rounds_sync * (t_round + delay)
+    async_ = rounds_async * t_round
+    return {
+        "sync_s": sync,
+        "async_s": async_,
+        "speedup": sync / async_ if async_ else float("inf"),
+        "straggler_duty_cycle": t_round / (t_round + delay),
+    }

@@ -1,0 +1,173 @@
+"""Network topologies and doubly-stochastic weight matrices.
+
+Reproduces the graph constructions used in the paper's experiments
+(Erdos-Renyi, ring, star) plus a 2-D torus that models a TPU pod-level
+DCI interconnect. Weight matrices follow the "local-degree weights"
+method of Xiao & Boyd '04 (paper ref [16]), which the paper uses for
+all consensus experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "erdos_renyi",
+    "ring",
+    "star",
+    "torus2d",
+    "complete",
+    "local_degree_weights",
+    "metropolis_weights",
+    "mixing_time",
+    "spectral_gap",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Undirected graph over N nodes with an adjacency matrix (no self loops)."""
+
+    adjacency: np.ndarray  # (N, N) 0/1 symmetric, zero diagonal
+
+    @property
+    def n_nodes(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1)
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.adjacency.sum()) // 2
+
+    def neighbors(self, i: int) -> np.ndarray:
+        return np.nonzero(self.adjacency[i])[0]
+
+    def is_connected(self) -> bool:
+        n = self.n_nodes
+        seen = np.zeros(n, dtype=bool)
+        stack = [0]
+        seen[0] = True
+        while stack:
+            u = stack.pop()
+            for v in self.neighbors(u):
+                if not seen[v]:
+                    seen[v] = True
+                    stack.append(int(v))
+        return bool(seen.all())
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0, ensure_connected: bool = True) -> Graph:
+    """Erdos-Renyi G(n, p); resamples until connected (as in the paper)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(10_000):
+        upper = rng.random((n, n)) < p
+        adj = np.triu(upper, k=1)
+        adj = (adj | adj.T).astype(np.float64)
+        g = Graph(adj)
+        if not ensure_connected or g.is_connected():
+            return g
+    raise RuntimeError(f"could not sample a connected ER graph (n={n}, p={p})")
+
+
+def ring(n: int) -> Graph:
+    adj = np.zeros((n, n))
+    idx = np.arange(n)
+    adj[idx, (idx + 1) % n] = 1.0
+    adj[(idx + 1) % n, idx] = 1.0
+    if n == 2:  # avoid double edge
+        adj = np.clip(adj, 0.0, 1.0)
+    return Graph(adj)
+
+
+def star(n: int) -> Graph:
+    adj = np.zeros((n, n))
+    adj[0, 1:] = 1.0
+    adj[1:, 0] = 1.0
+    return Graph(adj)
+
+
+def torus2d(rows: int, cols: int) -> Graph:
+    """2-D torus — the topology of a TPU ICI/DCI slice."""
+    n = rows * cols
+    adj = np.zeros((n, n))
+
+    def nid(r: int, c: int) -> int:
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            u = nid(r, c)
+            for v in (nid(r + 1, c), nid(r, c + 1)):
+                if u != v:
+                    adj[u, v] = adj[v, u] = 1.0
+    return Graph(adj)
+
+
+def complete(n: int) -> Graph:
+    adj = np.ones((n, n)) - np.eye(n)
+    return Graph(adj)
+
+
+def local_degree_weights(g: Graph) -> np.ndarray:
+    """Doubly-stochastic W via local-degree (max-degree of edge endpoints).
+
+    w_ij = 1 / (1 + max(deg_i, deg_j)) for (i,j) in E, w_ii = 1 - sum_j w_ij.
+    This is the construction from Xiao & Boyd used by the paper.
+    """
+    a = g.adjacency
+    deg = g.degrees
+    n = g.n_nodes
+    w = np.zeros((n, n))
+    pair_max = np.maximum(deg[:, None], deg[None, :])
+    mask = a > 0
+    w[mask] = 1.0 / (1.0 + pair_max[mask])
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def metropolis_weights(g: Graph) -> np.ndarray:
+    """Metropolis-Hastings weights; also doubly stochastic, slightly different mixing."""
+    a = g.adjacency
+    deg = g.degrees
+    n = g.n_nodes
+    w = np.zeros((n, n))
+    mask = a > 0
+    pair_max = np.maximum(deg[:, None], deg[None, :])
+    w[mask] = 1.0 / (1.0 + pair_max[mask])
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 - |lambda_2(W)|; gossip contraction factor per round."""
+    ev = np.linalg.eigvals(w)
+    ev = np.sort(np.abs(ev))[::-1]
+    second = ev[1] if len(ev) > 1 else 0.0
+    return float(1.0 - second)
+
+
+def mixing_time(w: np.ndarray, max_t: int = 100_000) -> Optional[int]:
+    """tau_mix per paper eq. (5): first t with max_i ||e_i^T W^t - 1/N|| <= 1/2.
+
+    Returns None when the chain is periodic / non-mixing (e.g. even ring),
+    mirroring the paper's observation that tau_mix -> inf for ring topologies.
+    """
+    n = w.shape[0]
+    target = np.full((n, n), 1.0 / n)
+    wt = np.eye(n)
+    for t in range(1, max_t + 1):
+        wt = wt @ w
+        dev = np.linalg.norm(wt - target, axis=1).max()
+        if dev <= 0.5:
+            return t
+        if t > 64 and dev > 0.999:  # not contracting at all
+            break
+    return None

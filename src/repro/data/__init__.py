@@ -1,0 +1,2 @@
+from .pipeline import (gaussian_eigengap_data, make_lm_batch,  # noqa: F401
+                       partition_features, partition_samples, synthetic_lm_stream)

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: blocked causal (optionally sliding-window) attention.
+
+Online-softmax ("flash") attention for the LM-side prefill path. Grid is
+(batch*heads, q_blocks, kv_blocks) with the kv dimension innermost; running
+max / normalizer / accumulator live in VMEM scratch and the output block is
+written once, on the last kv step.
+
+VMEM working set per step: (bq + 2*bk) * hd * 4B + softmax tiles — with
+bq = bk = 128, hd = 128 this is ~200 KiB, far under the ~16 MiB VMEM budget,
+leaving headroom for the compiler's double buffering of the K/V streams.
+
+The sliding-window mask makes this the kernel for h2o-danube (SWA) and
+recurrentgemma (local attention) as well; `window=None` is full causal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window, block_q: int,
+                  block_k: int, q_offset: int, kv_valid: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (bq, hd)
+    k = k_ref[0]                                   # (bk, hd)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+    # absolute positions; q_offset aligns real queries to the END of the real
+    # kv stream so the same kernel serves prefill (sq == skv) and chunked
+    # decode (sq < skv); kv_valid masks back-padding of the key stream.
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + q_offset
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = kpos < kv_valid
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_scr[...]                            # (bq, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)                    # kill fully-masked rows
+    alpha = jnp.exp(m_prev - m_new)                # rescale old state
+    l_new = alpha * l_scr[...] + p.sum(axis=1, keepdims=True)
+    acc = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)            # padded rows: emit zeros
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "q_offset", "kv_valid", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, window: int | None = None,
+                           scale: float | None = None, block_q: int = 128,
+                           block_k: int = 128, q_offset: int = 0,
+                           kv_valid: int | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (b, h, sq, hd); k, v: (b, h, skv, hd) — same head counts (wrapper
+    expands GQA groups). sq % block_q == skv % block_k == 0 (ops.py pads).
+
+    ``q_offset``: absolute position of the first (real) query row relative to
+    the key stream. ``kv_valid``: number of real (unpadded) key rows.
+    """
+    b, h, sq, hd = q.shape
+    _, _, skv, _ = k.shape
+    scale = (hd ** -0.5) if scale is None else scale
+    kv_valid = skv if kv_valid is None else kv_valid
+
+    qr = q.reshape(b * h, sq, hd)
+    kr = k.reshape(b * h, skv, hd)
+    vr = v.reshape(b * h, skv, hd)
+    grid = (b * h, sq // block_q, skv // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, q_offset=q_offset, kv_valid=kv_valid)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, hd)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: tall-skinny Gram  G = V^T V  (CholeskyQR's hot matmul).
+
+Step 12 of Alg. 1 (and both passes of CholeskyQR2, and F-DOT's distributed
+QR) reduce a tall (d x r) iterate to its (r x r) Gram. For large d the MXU
+wants V streamed through VMEM in row blocks with the (r x r) accumulator
+resident:
+
+    for each row block V_b (bd x r):   G += V_b^T V_b
+
+Arithmetic intensity: 2*bd*r^2 FLOPs per bd*r*4 bytes = r/2 FLOPs/byte —
+memory-bound for small r, which is exactly why the accumulator must stay in
+VMEM and V must be read once. Accumulation over the sequential TPU grid is
+safe (same out block revisited).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gram_qr_pallas"]
+
+
+def _gram_qr_kernel(v_ref, g_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    v = v_ref[...]                                   # (bd, r)
+    g_ref[...] += jax.lax.dot_general(
+        v, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(g_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram_qr_pallas(v: jnp.ndarray, *, block_d: int = 1024,
+                   interpret: bool = False) -> jnp.ndarray:
+    """G = V^T V. v: (d, r) with d % block_d == 0 (ops.py pads)."""
+    d, r = v.shape
+    assert d % block_d == 0
+    return pl.pallas_call(
+        _gram_qr_kernel,
+        grid=(d // block_d,),
+        in_specs=[pl.BlockSpec((block_d, r), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=interpret,
+    )(v)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused gram-apply  V = X (X^T Q).
+
+This is the compute hot spot of S-DOT (Alg. 1, Step 5): every node applies
+its local covariance M_i = X_i X_i^T / n_i to the subspace iterate Q. For
+large d, materializing M_i (d x d) is HBM-hostile; the fused form streams X
+through VMEM once per column-block and performs two MXU matmuls per tile:
+
+    for each column block X_b (d x bn):   S_b = X_b^T Q   (bn x r)
+                                          V  += X_b S_b   (d  x r)
+
+Arithmetic intensity: 4*d*bn*r flops per (d*bn + d*r) * bytes moved — for
+r = 128 this is comfortably compute-bound on the MXU.
+
+Grid layout: (n_blocks,) outer sequential grid walks column blocks; the
+(d x r) output block is revisited every step and accumulated in VMEM
+(TPU grids are sequential, so accumulation over the grid is safe). Both d and
+r must be padded to multiples of 128 by the wrapper (ops.py); bn is the
+column tile, chosen so (d*bn + d*r + bn*r) * 4 bytes fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gram_apply_pallas"]
+
+
+def _gram_kernel(x_ref, q_ref, v_ref):
+    """One grid step: accumulate X_b (X_b^T Q) into the output block."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    x = x_ref[...]          # (d, bn)
+    q = q_ref[...]          # (d, r)
+    s = jax.lax.dot_general(
+        x, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b^T Q: (bn, r)
+    v = jax.lax.dot_general(
+        x, s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b S: (d, r)
+    v_ref[...] += v.astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def gram_apply_pallas(x: jnp.ndarray, q: jnp.ndarray, *, block_n: int = 512,
+                      interpret: bool = False) -> jnp.ndarray:
+    """V = X (X^T Q); shapes (d, n) x (d, r) -> (d, r), n % block_n == 0.
+
+    Call through ops.gram_apply which pads/normalizes and picks block sizes.
+    """
+    d, n = x.shape
+    d2, r = q.shape
+    assert d == d2, "x and q must share the feature dimension"
+    assert n % block_n == 0, "ops.py pads n to a block multiple"
+    n_blocks = n // block_n
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((d, block_n), lambda j: (0, j)),   # X column block
+            pl.BlockSpec((d, r), lambda j: (0, 0)),         # Q (resident)
+        ],
+        out_specs=pl.BlockSpec((d, r), lambda j: (0, 0)),   # V (accumulated)
+        out_shape=jax.ShapeDtypeStruct((d, r), jnp.float32),
+        interpret=interpret,
+    )(x, q)
+    return out

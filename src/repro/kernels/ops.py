@@ -1,0 +1,106 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle padding to hardware-aligned tiles, GQA head expansion, CPU
+fallback (interpret mode or the pure-jnp oracle), and normalization — so the
+rest of the codebase never calls pallas_call directly.
+
+On this CPU-only container the kernels run with ``interpret=True`` (the
+kernel body executes in Python against the same BlockSpec tiling the TPU
+would use); on TPU the identical code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .gram_qr import gram_qr_pallas
+from .gram_update import gram_apply_pallas
+
+__all__ = ["gram_apply", "gram_qr", "flash_attention", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_pallas", "interpret"))
+def gram_apply(x: jnp.ndarray, q: jnp.ndarray, *, block_n: int = 512,
+               use_pallas: bool = True, interpret: bool | None = None) -> jnp.ndarray:
+    """V = X (X^T Q) / n. x: (d, n), q: (d, r) -> (d, r).
+
+    Zero-padding n is exact (padded columns contribute X_b S_b = 0); the
+    normalizer uses the true n.
+    """
+    d, n = x.shape
+    if not use_pallas or d * block_n * 4 > 8 * 2**20:  # VMEM guard: fall back
+        return ref.gram_apply_ref(x, q)
+    interp = (not on_tpu()) if interpret is None else interpret
+    xp = _pad_to(x, 1, block_n)
+    v = gram_apply_pallas(xp, q, block_n=block_n, interpret=interp)
+    return (v / n).astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "use_pallas", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    use_pallas: bool = True,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """GQA-aware attention. q: (b, hq, sq, hd); k/v: (b, hkv, skv, hd).
+
+    hq % hkv == 0; kv heads are expanded to query heads before the kernel
+    (on real TPU the broadcast is free — the expanded operand is an HLO
+    broadcast the partitioner keeps unmaterialized per-shard).
+    """
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, "query heads must be a multiple of kv heads"
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    small = sq < block_q or skv < block_k
+    if not use_pallas or small:
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+    interp = (not on_tpu()) if interpret is None else interpret
+    # back-pad both streams; real positions are communicated to the kernel
+    # via q_offset (first real query's position in the key stream) and
+    # kv_valid (number of real keys), so padding never leaks into the mask.
+    qp = _pad_to(q, 2, block_q)
+    kp = _pad_to(k, 2, block_k)
+    vp = _pad_to(v, 2, block_k)
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+        q_offset=skv - sq, kv_valid=skv, interpret=interp)
+    return out[:, :, :sq, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "use_pallas", "interpret"))
+def gram_qr(v: jnp.ndarray, *, block_d: int = 1024, use_pallas: bool = True,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """G = V^T V. v: (d, r) -> (r, r) f32. Zero-padding d is exact."""
+    d, r = v.shape
+    if not use_pallas or d < block_d:
+        return ref.gram_qr_ref(v)
+    interp = (not on_tpu()) if interpret is None else interpret
+    vp = _pad_to(v, 0, block_d)
+    return gram_qr_pallas(vp, block_d=block_d, interpret=interp)

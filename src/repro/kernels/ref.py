@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gram_apply_ref", "flash_attention_ref", "gram_qr_ref"]
+
+
+def gram_apply_ref(x: jnp.ndarray, q: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
+    """V = X (X^T Q) / n  — Step 5 of Alg. 1 without materializing M = XX^T.
+
+    x: (d, n) local data block, q: (d, r) subspace iterate -> (d, r).
+    """
+    acc = jnp.promote_types(x.dtype, jnp.float32)
+    s = x.astype(acc).T @ q.astype(acc)            # (n, r)
+    v = x.astype(acc) @ s                          # (d, r)
+    if normalize:
+        v = v / x.shape[1]
+    return v.astype(q.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Standard softmax attention oracle.
+
+    q: (b, h, sq, hd), k/v: (b, h, skv, hd). ``window``: optional sliding
+    window (attend to keys within [i - window + 1, i]).
+    """
+    acc = jnp.float32
+    hd = q.shape[-1]
+    scale = (hd ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(acc), k.astype(acc)) * scale
+    sq, skv = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)    # align ends (decode-friendly)
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(acc))
+    return out.astype(q.dtype)
+
+
+def gram_qr_ref(v: jnp.ndarray) -> jnp.ndarray:
+    """G = V^T V in f32 (oracle for the CholeskyQR Gram kernel)."""
+    acc = jnp.promote_types(v.dtype, jnp.float32)
+    v32 = v.astype(acc)
+    return (v32.T @ v32).astype(jnp.float32)

@@ -1,0 +1,2 @@
+# Intentionally empty: dryrun.py must set XLA_FLAGS before jax is imported,
+# so nothing here may import jax (or submodules that do).

@@ -1,0 +1,191 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``cost_analysis()`` supplies per-device HLO FLOPs and bytes accessed.
+Collective traffic is NOT in cost_analysis — we parse the post-partitioner
+HLO text and sum the result-shape bytes of every collective op, weighting by
+the wire cost of a ring implementation of that collective:
+
+    all-reduce       2 (n-1)/n      (reduce-scatter + all-gather)
+    all-gather         (n-1)/n  x n_shards ... == full result x (n-1)/n
+    reduce-scatter     (n-1)/n      (of the INPUT size; we see result => x n)
+    all-to-all         (n-1)/n
+    collective-permute 1            (point-to-point)
+
+Shapes in the compiled module are per-device, so "result bytes" are local
+payloads; wire-bytes-per-device is what the ICI roofline needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+__all__ = ["collective_bytes", "roofline_terms", "CollectiveStats",
+           "cross_pod_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"all-reduce-start|all-gather-start|collective-permute-start)\b")
+_GROUPS_RE = re.compile(r"replica_groups=\{?([^}]*)\}?")
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: (n - 1) / max(n, 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    """Largest replica group size on the line (the collective's world)."""
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return default
+    txt = m.group(1)
+    iota = re.search(r"\[(\d+),(\d+)\]", line[m.start():m.start() + 120])
+    if "<=[" in line:  # iota format: [groups,size]<=[...]
+        m2 = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[", line)
+        if m2:
+            return int(m2.group(2))
+    sizes = [len([t for t in grp.split(",") if t.strip() != ""])
+             for grp in re.findall(r"\{([^{}]*)\}", "{" + txt + "}")]
+    return max(sizes) if sizes else default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    by_kind: Dict[str, float]
+    result_bytes: Dict[str, float]
+    count: Dict[str, int]
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    by_kind: Dict[str, float] = {}
+    raw: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        op = op.replace("-start", "")
+        nbytes = _shape_bytes(type_str)
+        world = _group_size(line, n_devices)
+        if op == "reduce-scatter":
+            nbytes *= world          # result is 1/world of the input payload
+        wire = _WIRE_FACTOR[op](world) * nbytes
+        by_kind[op] = by_kind.get(op, 0.0) + wire
+        raw[op] = raw.get(op, 0.0) + nbytes
+        count[op] = count.get(op, 0) + 1
+    return CollectiveStats(by_kind, raw, count)
+
+
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{([^}]*(?:\},\{[^}]*)*)\}")
+
+
+def _groups_on_line(line: str, n_devices: int):
+    """Materialize the replica groups of a collective HLO line (exact for
+    both iota and explicit formats)."""
+    import numpy as np
+    m = _IOTA_RE.search(line)
+    if m:
+        g, s, dims, perm = m.groups()
+        dims = [int(x) for x in dims.split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if perm:
+            ids = ids.transpose([int(x) for x in perm.split(",")])
+        return ids.reshape(int(g), int(s)).tolist()
+    m = _GROUPS_RE.search(line)
+    if m:
+        groups = [[int(t) for t in grp.split(",") if t.strip()]
+                  for grp in re.findall(r"\{([^{}]*)\}", "{" + m.group(1) + "}")]
+        groups = [g for g in groups if g]
+        if groups:
+            return groups
+    return [list(range(n_devices))]
+
+
+def cross_pod_bytes(hlo_text: str, n_devices: int, pod_size: int):
+    """Split collective wire bytes into intra-pod vs cross-pod traffic.
+
+    A collective whose replica group spans more than one pod (device //
+    pod_size differs within the group) pays the scarce DCI links; this is
+    the number the paper's PSA compression is supposed to shrink.
+    """
+    intra = 0.0
+    cross = 0.0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, op = m.groups()
+        op = op.replace("-start", "")
+        nbytes = _shape_bytes(type_str)
+        if op == "collective-permute":
+            mp = _PAIRS_RE.search(line)
+            is_cross = False
+            if mp:
+                pairs = re.findall(r"\{(\d+),(\d+)\}", "{" + mp.group(1) + "}")
+                is_cross = any(int(a) // pod_size != int(b) // pod_size
+                               for a, b in pairs)
+            if is_cross:
+                cross += nbytes
+            else:
+                intra += nbytes
+            continue
+        groups = _groups_on_line(line, n_devices)
+        world = max(len(g) for g in groups)
+        if op == "reduce-scatter":
+            nbytes *= world
+        wire = _WIRE_FACTOR[op](world) * nbytes
+        spans = any(len({d // pod_size for d in g}) > 1 for g in groups)
+        if spans:
+            cross += wire
+        else:
+            intra += wire
+    return {"intra_pod_bytes": intra, "cross_pod_bytes": cross}
+
+
+def roofline_terms(*, flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, hw) -> Dict[str, float]:
+    """The three per-step time lower bounds (seconds), per device."""
+    t_compute = flops_per_dev / hw.PEAK_FLOPS_BF16
+    t_memory = bytes_per_dev / hw.HBM_BW
+    t_collective = wire_bytes_per_dev / hw.ICI_LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_collective),
+    }

@@ -1,0 +1,43 @@
+"""Production mesh builders.
+
+Functions, not module constants, so importing never touches jax device state
+(device count is locked on first backend init — the dry-run needs to set
+XLA_FLAGS before that happens).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (one v5e pod, 256 chips) or 2x16x16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(devices=None, *, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    import numpy as np
+    devices = jax.devices() if devices is None else devices
+    n = len(devices)
+    if multi_pod:
+        assert n % 2 == 0 and n >= 4
+        rest = n // 2
+        dm = max(d for d in (1, 2, 4) if rest % d == 0)
+        from jax.sharding import Mesh
+        return Mesh(np.array(devices).reshape(2, rest // dm, dm),
+                    ("pod", "data", "model"))
+    from jax.sharding import Mesh
+    dm = max(d for d in (1, 2, 4) if n % d == 0)
+    return Mesh(np.array(devices).reshape(n // dm, dm), ("data", "model"))
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline (per chip)."""
+    PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+    HBM_BW = 819e9                 # B/s
+    ICI_LINK_BW = 50e9             # B/s per link
+    HBM_BYTES = 16 * 2**30

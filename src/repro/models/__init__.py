@@ -1,0 +1,4 @@
+"""Model zoo: unified decoder stack + per-family token mixers + sharding."""
+from . import attention, layers, moe, recurrent, sharding, transformer  # noqa: F401
+from .transformer import (decode_step, forward, init_decode_state,  # noqa: F401
+                          init_params)

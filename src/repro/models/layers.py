@@ -1,0 +1,49 @@
+"""Shared building blocks: norms, RoPE, embeddings, dense FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rope", "swiglu_ffn", "init_dense", "init_norm", "embed_lookup"]
+
+
+def init_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    acc = jnp.float32
+    var = jnp.mean(jnp.square(x.astype(acc)), axis=-1, keepdims=True)
+    out = x.astype(acc) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(acc)).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding. x: (b, h, s, hd); positions: (b, s) or (s,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None]
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (b,1,s,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_ffn(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+               w_down: jnp.ndarray) -> jnp.ndarray:
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def embed_lookup(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Token embedding gather; vocab dim may be sharded (SPMD handles it)."""
+    return jnp.take(embed, tokens, axis=0)

@@ -1,0 +1,313 @@
+"""Recurrent token mixers: xLSTM (mLSTM/sLSTM) and RG-LRU (RecurrentGemma).
+
+All three support a full-sequence training path and an O(1)-state decode path
+(this is what makes their architectures runnable at long_500k).
+
+* mLSTM — matrix-memory LSTM == gated linear attention. Implemented in
+  *chunked* form: within a chunk the decay-weighted quadratic form, across
+  chunks a (hd_k x hd_v) state recurrence. Sub-quadratic in sequence length
+  and MXU-friendly (three matmuls per chunk).
+* sLSTM — scalar-memory LSTM with exponential gating and recurrent (head
+  block-diagonal) connections; genuinely sequential -> lax.scan over time.
+* RG-LRU — gated diagonal linear recurrence (Griffin); full-sequence path
+  uses an associative scan, decode carries the diagonal state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import init_dense
+
+__all__ = [
+    "init_mlstm", "apply_mlstm", "init_mlstm_state",
+    "init_slstm", "apply_slstm", "init_slstm_state",
+    "init_rglru", "apply_rglru", "init_rglru_state",
+]
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+MLSTM_HEAD_DIM = 128  # MXU-native; head count = up_proj / 128 (see DESIGN.md)
+
+
+def _mlstm_hd(cfg: ModelConfig) -> int:
+    return min(MLSTM_HEAD_DIM, 2 * cfg.d_model)
+
+
+def mlstm_heads(cfg: ModelConfig) -> int:
+    return (2 * cfg.d_model) // _mlstm_hd(cfg)
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    up = 2 * d
+    h = mlstm_heads(cfg)
+    hd = _mlstm_hd(cfg)
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": init_dense(ks[0], d, up, dt),
+        "w_gate": init_dense(ks[1], d, up, dt),
+        # per-head block-diagonal projections (xLSTM-style): (h, hd, hd)
+        "w_q": (jax.random.normal(ks[2], (h, hd, hd)) * hd ** -0.5).astype(dt),
+        "w_k": (jax.random.normal(ks[3], (h, hd, hd)) * hd ** -0.5).astype(dt),
+        "w_v": (jax.random.normal(ks[4], (h, hd, hd)) * hd ** -0.5).astype(dt),
+        "w_if": init_dense(ks[5], up, 2 * h, dt, scale=0.01),  # input/forget gates
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]).astype(dt),
+        "w_down": init_dense(ks[6], up, d, dt),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    h = mlstm_heads(cfg)
+    hd = _mlstm_hd(cfg)
+    return {
+        "c": jnp.zeros((n_layers, batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, h, hd), jnp.float32),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, chunk: int):
+    """Chunked gated linear attention.
+
+    q,k,v: (b, h, s, hd); li: log input gate (b, h, s); lf: log forget gate.
+    Returns (out, final_state c, final n). State c: (b,h,hd,hd), n: (b,h,hd).
+    """
+    b, h, s, hd = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    qc = q.reshape(b, h, nc, chunk, hd).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    kc = k.reshape(b, h, nc, chunk, hd).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    vc = v.reshape(b, h, nc, chunk, hd).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    lic = li.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3).astype(jnp.float32)
+    lfc = lf.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3).astype(jnp.float32)
+    scale = hd ** -0.5
+
+    def step(carry, inp):
+        c_state, n_state = carry                     # (b,h,hd,hd), (b,h,hd)
+        qb, kb, vb, lib, lfb = inp
+        f_cum = jnp.cumsum(lfb, axis=-1)             # (b,h,L) log prod of forgets
+        f_tot = f_cum[..., -1:]
+        # inter-chunk: q_t decayed by all forgets up to t
+        q_dec = qb * jnp.exp(f_cum)[..., None] * scale
+        inter = jnp.einsum("bhld,bhde->bhle", q_dec, c_state)
+        n_inter = jnp.einsum("bhld,bhd->bhl", q_dec, n_state)
+        # intra-chunk: A_ts = exp(F_t - F_s + i_s) (q_t . k_s), s <= t
+        w = f_cum[..., :, None] - f_cum[..., None, :] + lib[..., None, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w = jnp.where(causal[None, None], w, -jnp.inf)
+        a = jnp.exp(w) * jnp.einsum("bhld,bhmd->bhlm", qb * scale, kb)
+        a = jnp.where(causal[None, None], a, 0.0)
+        intra = jnp.einsum("bhlm,bhmd->bhld", a, vb)
+        # normalizer: n_t = q_t . (decayed sum of i_s k_s) == SIGNED row sums
+        # of a (the one-step recurrence computes q.n with signs; abs here
+        # would diverge from the decode path)
+        n_in = a.sum(-1)
+        denom = jnp.maximum(jnp.abs(n_inter + n_in), 1.0)
+        out = (inter + intra) / denom[..., None]
+        # state update: C' = exp(F_L) C + sum_s exp(F_L - F_s + i_s) k_s v_s^T
+        decay_s = jnp.exp(f_tot - f_cum + lib)       # (b,h,L)
+        k_dec = kb * decay_s[..., None]
+        c_new = jnp.exp(f_tot)[..., None] * c_state + \
+            jnp.einsum("bhld,bhle->bhde", k_dec, vb)
+        n_new = jnp.exp(f_tot) * n_state + k_dec.sum(axis=2)
+        return (c_new, n_new), out
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    (c_fin, n_fin), outs = jax.lax.scan(step, (c0, n0), (qc, kc, vc, lic, lfc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    return out, c_fin, n_fin
+
+
+def apply_mlstm(p, x, cfg: ModelConfig, *, state=None, chunk: int | None = None):
+    """Full-seq (state None) or one-step decode (state = {"c","n"})."""
+    b, s, d = x.shape
+    h = mlstm_heads(cfg)
+    up = 2 * d
+    hd = _mlstm_hd(cfg)
+    u = x @ p["w_up"]
+    g = jax.nn.silu(x @ p["w_gate"])
+    uh = u.reshape(b, s, h, hd)
+    q = jnp.einsum("bshd,hde->bhse", uh, p["w_q"])
+    k = jnp.einsum("bshd,hde->bhse", uh, p["w_k"])
+    v = jnp.einsum("bshd,hde->bhse", uh, p["w_v"])
+    gates = u @ p["w_if"] + p["b_if"]                 # (b, s, 2h)
+    li = jax.nn.log_sigmoid(gates[..., :h]).transpose(0, 2, 1)   # (b,h,s)
+    lf = jax.nn.log_sigmoid(gates[..., h:]).transpose(0, 2, 1)
+
+    if state is None:
+        out, c_fin, n_fin = _mlstm_chunk_scan(
+            q, k, v, li, lf, chunk or cfg.mlstm_chunk)
+        new_state = {"c": c_fin, "n": n_fin}
+    else:
+        # one token: C' = f C + i k v^T ; out = (q.C') / max(|q.n'|, 1)
+        fi = jnp.exp(lf[..., 0])[..., None, None]     # (b,h,1,1)
+        ii = jnp.exp(li[..., 0])[..., None, None]
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, :, 0].astype(jnp.float32),
+                        v[:, :, 0].astype(jnp.float32))
+        c_new = fi * state["c"] + ii * kv
+        n_new = fi[..., 0] * state["n"] + ii[..., 0] * k[:, :, 0].astype(jnp.float32)
+        qv = q[:, :, 0].astype(jnp.float32) * (hd ** -0.5)
+        num = jnp.einsum("bhd,bhde->bhe", qv, c_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qv, n_new)), 1.0)
+        out = (num / den[..., None])[:, :, None, :]   # (b,h,1,hd)
+        new_state = {"c": c_new, "n": n_new}
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, up).astype(x.dtype)
+    return (out * g) @ p["w_down"], new_state
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+SLSTM_HEAD_DIM = 128
+
+
+def _slstm_hd(d: int) -> int:
+    return min(SLSTM_HEAD_DIM, d)
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    f_up = 4 * d // 3
+    hd = _slstm_hd(d)
+    nh = d // hd
+    return {
+        "w_gates": init_dense(ks[0], d, 4 * d, dt),           # i,f,z,o from x
+        # recurrent connections are head block-diagonal (xLSTM-style)
+        "r_gates": (jax.random.normal(ks[1], (nh, hd, 4 * hd))
+                    * 0.5 * hd ** -0.5).astype(dt),
+        "b_gates": jnp.zeros((4 * d,), dt),
+        "w_ffn_up": init_dense(ks[2], d, 2 * f_up, dt),       # gated ffn
+        "w_ffn_down": init_dense(ks[3], f_up, d, dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    d = cfg.d_model
+    z = jnp.zeros((n_layers, batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z}
+
+
+def _slstm_cell(p, d, carry, xt):
+    c, n, hprev = carry
+    b = xt.shape[0]
+    hd = _slstm_hd(d)
+    nh = d // hd
+    # recurrent term: per-head block-diagonal, laid out as (b, 4, h, hd)
+    hh = hprev.astype(xt.dtype).reshape(b, nh, hd)
+    gr = jnp.einsum("bhd,hde->bhe", hh, p["r_gates"])        # (b, h, 4*hd)
+    gr = gr.reshape(b, nh, 4, hd).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    gx = (xt @ p["w_gates"]).reshape(b, 4, nh, hd).reshape(b, 4 * d)
+    gates = gx + gr + p["b_gates"]
+    gates = gates.astype(jnp.float32)
+    i = jnp.exp(jnp.minimum(gates[..., :d], 8.0))           # exp input gate
+    f = jax.nn.sigmoid(gates[..., d:2 * d])
+    z = jnp.tanh(gates[..., 2 * d:3 * d])
+    o = jax.nn.sigmoid(gates[..., 3 * d:])
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new), h_new
+
+
+def apply_slstm(p, x, cfg: ModelConfig, *, state=None):
+    b, s, d = x.shape
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry = (zeros, zeros, zeros)
+        xs = x.transpose(1, 0, 2)                            # (s, b, d)
+        carry, hs = jax.lax.scan(lambda cr, xt: _slstm_cell(p, d, cr, xt), carry, xs)
+        h = hs.transpose(1, 0, 2).astype(x.dtype)
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2]}
+    else:
+        carry = (state["c"], state["n"], state["h"])
+        carry, hnew = _slstm_cell(p, d, carry, x[:, 0])
+        h = hnew[:, None].astype(x.dtype)
+        new_state = {"c": carry[0], "n": carry[1], "h": carry[2]}
+    # small gated FFN (xLSTM post-up/down, factor 4/3)
+    f_up = p["w_ffn_down"].shape[0]
+    u = h @ p["w_ffn_up"]
+    out = (jax.nn.silu(u[..., :f_up]) * u[..., f_up:]) @ p["w_ffn_down"]
+    return out, new_state
+
+
+# ===========================================================================
+# RG-LRU (Griffin recurrent block)
+# ===========================================================================
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": init_dense(ks[0], d, d, dt),          # recurrence branch
+        "w_gate_in": init_dense(ks[1], d, d, dt),     # multiplicative branch
+        "conv_w": (jax.random.normal(ks[2], (4, d), jnp.float32) * 0.1).astype(dt),
+        "w_rgate": init_dense(ks[3], d, d, dt, scale=0.01),
+        "w_igate": init_dense(ks[4], d, d, dt, scale=0.01),
+        "lam": (8.0 * jnp.ones((d,))).astype(jnp.float32),   # softplus param
+        "w_out": init_dense(ks[5], d, d, dt),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, n_layers: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, 3, d), jnp.float32),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def apply_rglru(p, x, cfg: ModelConfig, *, state=None):
+    b, s, d = x.shape
+    u = x @ p["w_in"]
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+
+    if state is None:
+        # temporal conv (width 4, causal) via shifted adds
+        pads = jnp.pad(u, ((0, 0), (3, 0), (0, 0)))
+        conv = sum(pads[:, 3 - i:s + 3 - i] * p["conv_w"][i] for i in range(4))
+        r = jax.nn.sigmoid(conv @ p["w_rgate"]).astype(jnp.float32)
+        i_g = jax.nn.sigmoid(conv @ p["w_igate"]).astype(jnp.float32)
+        log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])      # (b,s,d)
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+        bx = beta * (i_g * conv.astype(jnp.float32))
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        h_fin = h[:, -1]
+        conv_state = u[:, -3:].astype(jnp.float32) if s >= 3 else jnp.pad(
+            u.astype(jnp.float32), ((0, 0), (3 - s, 0), (0, 0)))
+        new_state = {"h": h_fin, "conv": conv_state}
+        out = h.astype(x.dtype)
+    else:
+        conv_buf = jnp.concatenate(
+            [state["conv"], u[:, 0:1].astype(jnp.float32)], axis=1)   # (b,4,d)
+        # buf is oldest->newest; conv_w[i] weights the token i steps back, so
+        # the newest entry (buf[3]) takes conv_w[0] — reverse the kernel.
+        conv = (conv_buf * p["conv_w"][::-1].astype(jnp.float32)).sum(axis=1)
+        r = jax.nn.sigmoid(conv @ p["w_rgate"].astype(jnp.float32))
+        i_g = jax.nn.sigmoid(conv @ p["w_igate"].astype(jnp.float32))
+        log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])
+        a = jnp.exp(log_a)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+        h_new = a * state["h"] + beta * (i_g * conv)
+        new_state = {"h": h_new, "conv": conv_buf[:, 1:]}
+        out = h_new[:, None].astype(x.dtype)
+
+    return (out * gate) @ p["w_out"], new_state

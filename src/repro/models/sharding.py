@@ -1,0 +1,211 @@
+"""Logical->mesh sharding rules (MaxText-style, path-based).
+
+Axis conventions (DESIGN.md sec.5):
+  * batch             -> all data-parallel axes ("pod","data") / ("data",)
+  * TP (heads / ffn / vocab / experts) -> "model"
+  * FSDP (ZeRO-3 weight shard)         -> "data"
+
+A mesh axis is only assigned to a tensor dim when the dim size is divisible
+by the axis size — otherwise the dim is replicated. This keeps the SPMD
+partitioner out of uneven-padding corner cases; the roofline table shows
+what replication costs where (and the hillclimb attacks the worst cells).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+__all__ = ["dp_axes", "param_specs", "batch_specs", "decode_state_specs",
+           "named", "constraint_spec"]
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _maybe(mesh: Mesh, dim: int, axes):
+    """axes if dim divides evenly over them, else replicate."""
+    return axes if dim % _axsize(mesh, axes) == 0 else None
+
+
+def _leaf_spec(path: Tuple[str, ...], shape, mesh: Mesh, fsdp="data", tp="model"):
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    in_groups = "groups" in names
+    nd = len(shape)
+    dims = list(shape)
+
+    def spec(*entries):
+        full = ([None] + list(entries)) if in_groups else list(entries)
+        assert len(full) == nd, (names, shape, full)
+        return P(*full)
+
+    body = dims[1:] if in_groups else dims
+
+    if name == "embed":
+        # shard the MODEL dim, not vocab: the token gather then partitions as
+        # a pass-through on the indexed dim (vocab-sharded gather trips XLA's
+        # SPMD gather partitioner inside shard_map-auto regions).
+        if nd == 3:  # audio: (K, V, D)
+            return P(None, None, _maybe(mesh, dims[2], (fsdp, tp)))
+        return P(None, _maybe(mesh, dims[1], (fsdp, tp)))
+    if name == "lm_head":
+        return P(_maybe(mesh, dims[0], fsdp), _maybe(mesh, dims[1], tp))
+    if name in ("final_norm", "norm1", "norm2", "b_gates", "b_if", "lam",
+                "bq", "bk", "bv", "conv_w"):
+        return spec(*([None] * len(body)))
+    if name == "router":  # (D, E)
+        return spec(_maybe(mesh, body[0], fsdp), None)
+    if name in ("w_q", "w_k", "w_v", "r_gates") and len(body) == 3:
+        # block-diagonal per-head projections (h, hd, x): shard heads over TP
+        return spec(_maybe(mesh, body[0], tp), None, None)
+    if name in ("w_gate", "w_up") and len(body) == 3:     # moe experts (E, D, F)
+        return spec(_maybe(mesh, body[0], tp), _maybe(mesh, body[1], fsdp), None)
+    if name == "w_down" and len(body) == 3:               # moe (E, F, D)
+        return spec(_maybe(mesh, body[0], tp), None, _maybe(mesh, body[2], fsdp))
+    if name in ("wq", "wk", "wv", "w_up", "w_gate", "w_ffn_up", "w_gates",
+                "r_gates", "w_in", "w_gate_in", "w_q", "w_k", "w_v",
+                "w_rgate", "w_igate", "w_if"):            # (D_in, F_out)
+        return spec(_maybe(mesh, body[0], fsdp), _maybe(mesh, body[1], tp))
+    if name in ("wo", "w_down", "w_ffn_down", "w_out"):   # (F_in, D_out)
+        return spec(_maybe(mesh, body[0], tp), _maybe(mesh, body[1], fsdp))
+    # default: replicate
+    return spec(*([None] * len(body)))
+
+
+def param_specs(params, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching the param pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf.shape, mesh), params)
+
+
+def named(mesh: Mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    """Specs for the input batch dict (tokens / labels / patch_embeds)."""
+    dp = dp_axes(mesh)
+    bax = dp if global_batch % _axsize(mesh, dp) == 0 else None
+    toks = P(bax, None, None) if cfg.frontend == "audio_codec" else P(bax, None)
+    out = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vlm_patches":
+        out["patch_embeds"] = P(bax, None, None)
+    return out
+
+
+def constraint_spec(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> P:
+    """Activation constraint (b, s, d) applied at block boundaries."""
+    dp = dp_axes(mesh)
+    bax = dp if global_batch % _axsize(mesh, dp) == 0 else None
+    return P(bax, None, None)
+
+
+def activation_specs(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                     seq_len: int | None = None, dp=None):
+    """Specs pinned onto intermediate activations (with_sharding_constraint).
+
+    Without these, XLA's sharding propagation is free to reshard (b, s, d)
+    activations over the model axis mid-layer, which costs a full all-gather
+    per transition (measured: ~50x the collective bytes of the constrained
+    program on qwen2-7b/train_4k — see EXPERIMENTS.md §Perf iteration 1).
+
+    * act   — residual-stream (b, s, d): batch over the data axes, d
+              replicated (Megatron TP keeps the stream replicated between
+              the row/col-parallel matmul pairs).
+    * seq   — batch-unshardable long-context decode: shard s over data.
+    * logits— (b, s, V): vocab over the model axis when it divides.
+    """
+    dp = dp_axes(mesh) if dp is None else dp
+    bax = dp if global_batch % _axsize(mesh, dp) == 0 else None
+    act = P(bax, None, None)
+    if bax is None and seq_len is not None and \
+            seq_len % _axsize(mesh, dp) == 0:
+        act = P(None, dp, None)            # sequence-parallel fallback
+    vax = "model" if cfg.vocab_size % _axsize(mesh, "model") == 0 else None
+    if cfg.frontend == "audio_codec":
+        logits = P(bax, None, None, vax)
+    else:
+        logits = P(bax, None, vax)
+    # attention internals (b, h, s, hd): shard heads over "model" only when
+    # the head count divides — otherwise XLA invents expensive reshardings
+    # (measured: a 30x collective-permute family on qwen2, EXPERIMENTS §Perf)
+    tp = _axsize(mesh, "model")
+    if cfg.n_heads % tp == 0:
+        attn_q = P(bax, "model", None, None)
+        attn_kv = P(bax, "model", None, None)  # post GQA expansion (h == n_heads)
+    else:
+        # indivisible head count: constraining would force replication ALs —
+        # measured worse than letting the partitioner choose (§Perf, qwen2
+        # iteration 2a, refuted). Leave attention internals unconstrained.
+        attn_q = attn_kv = None
+    moe = None
+    if cfg.moe is not None:
+        eax = "model" if cfg.moe.n_experts % tp == 0 else None
+        # (data-shard axis, expert axis, #data shards) — apply_moe routes
+        # per data shard (local capacity) so the token sort stays shardable;
+        # see models/moe.apply_moe and EXPERIMENTS.md §Perf (kimi-k2).
+        moe = {"dp": bax, "e": eax, "n_dp": _axsize(mesh, dp) if bax else 1}
+    return {"act": act, "logits": logits, "attn_q": attn_q,
+            "attn_kv": attn_kv, "moe": moe}
+
+
+def decode_state_specs(state, cfg: ModelConfig, mesh: Mesh, global_batch: int):
+    """Sharding for KV caches / recurrent states.
+
+    Large batches shard over the data axes; batch=1 long-context decode
+    shards the cache *length* over "data" instead (sequence-parallel decode —
+    softmax stats are combined by the partitioner's all-reduce).
+    """
+    dp = dp_axes(mesh)
+    big_batch = global_batch % _axsize(mesh, dp) == 0
+
+    def leaf(path, x):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        nd = x.ndim
+        if name == "index":
+            return P()
+        if name in ("k", "v", "k_scale", "v_scale"):   # (g, b, kv, S, hd|1)
+            kv_ax = _maybe(mesh, x.shape[2], "model")
+            # kv heads not divisible by the model axis (MHA archs like
+            # musicgen, kv=1 GQA): shard the cache LENGTH over "model"
+            # instead — attention partitions over keys with a partial-softmax
+            # reduce, and the per-device cache capacity shrinks by the model
+            # axis (38.7 GB -> 2.4 GB for musicgen decode_32k).
+            s_model = _maybe(mesh, x.shape[3], "model") if kv_ax is None else None
+            if big_batch:
+                return P(None, dp, kv_ax, s_model, None)
+            # batch=1 long-context: length takes every axis that divides
+            s_axes = tuple(a for a in (list(dp) + ["model"])
+                           if kv_ax is None or a != "model")
+            return P(None, None, kv_ax, _maybe(mesh, x.shape[3], s_axes), None)
+        if name == "c" and nd == 5:     # mlstm (g, b, h, hdk, hdv)
+            return P(None, dp if big_batch else None,
+                     _maybe(mesh, x.shape[2], "model"), None, None)
+        if name == "n" and nd == 4:     # mlstm (g, b, h, hd)
+            return P(None, dp if big_batch else None,
+                     _maybe(mesh, x.shape[2], "model"), None)
+        if nd == 3 and name in ("c", "n", "h"):   # slstm/rglru (g, b, d)
+            return P(None, dp if big_batch else None,
+                     _maybe(mesh, x.shape[2], "model"))
+        if name == "conv":              # (g, b, 3, d)
+            return P(None, dp if big_batch else None, None,
+                     _maybe(mesh, x.shape[3], "model"))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf, state)

@@ -1,0 +1,319 @@
+"""Unified decoder stack for all assigned architectures.
+
+Layers are organized as ``n_groups`` repeats of the config's block pattern
+(e.g. recurrentgemma: ("rglru","rglru","attn")); parameters are *stacked*
+over the group axis and the stack is applied with ``lax.scan`` — HLO size is
+O(pattern length), not O(n_layers), which keeps 61-layer Kimi-K2 compiles
+tractable with 512 SPMD partitions.
+
+Three entry points:
+  * forward(params, batch, cfg)              — training / prefill logits
+  * init_decode_state(cfg, batch, max_len)   — per-family caches/states
+  * decode_step(params, state, tokens, cfg)  — one-token serving step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import apply_attn, init_attn
+from .layers import embed_lookup, init_dense, init_norm, rms_norm, swiglu_ffn
+from .moe import apply_moe, init_moe
+from .recurrent import (apply_mlstm, apply_rglru, apply_slstm, init_mlstm,
+                        init_rglru, init_slstm)
+
+__all__ = ["init_params", "forward", "init_decode_state", "decode_step",
+           "block_has_ffn"]
+
+ATTN_KINDS = ("attn", "swa")
+
+
+def block_has_ffn(cfg: ModelConfig, kind: str) -> bool:
+    if kind in ATTN_KINDS:
+        return cfg.moe is not None or cfg.d_ff > 0
+    if kind == "rglru":
+        return cfg.d_ff > 0
+    return False  # mlstm / slstm have internal FFN-equivalents
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = cfg.jnp_dtype
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.d_model, dt)}
+    if kind in ATTN_KINDS:
+        p["mixer"] = init_attn(k1, cfg)
+    elif kind == "mlstm":
+        p["mixer"] = init_mlstm(k1, cfg)
+    elif kind == "slstm":
+        p["mixer"] = init_slstm(k1, cfg)
+    elif kind == "rglru":
+        p["mixer"] = init_rglru(k1, cfg)
+    else:
+        raise ValueError(f"unknown block kind {kind}")
+    if block_has_ffn(cfg, kind):
+        p["norm2"] = init_norm(cfg.d_model, dt)
+        if cfg.moe is not None and kind in ATTN_KINDS:
+            p["ffn"] = init_moe(k2, cfg)
+        else:
+            ks = jax.random.split(k3, 3)
+            p["ffn"] = {
+                "w_gate": init_dense(ks[0], cfg.d_model, cfg.d_ff, dt),
+                "w_up": init_dense(ks[1], cfg.d_model, cfg.d_ff, dt),
+                "w_down": init_dense(ks[2], cfg.d_ff, cfg.d_model, dt),
+            }
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    keys = jax.random.split(key, 4)
+    dt = cfg.jnp_dtype
+    pattern = cfg.pattern_for_layers()
+
+    def init_group(gkey):
+        bkeys = jax.random.split(gkey, len(pattern))
+        return {f"blk{i}_{kind}": _init_block(bkeys[i], cfg, kind)
+                for i, kind in enumerate(pattern)}
+
+    gkeys = jax.random.split(keys[0], cfg.n_groups)
+    groups = jax.vmap(init_group)(gkeys)
+
+    if cfg.frontend == "audio_codec":
+        embed = (jax.random.normal(
+            keys[1], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)
+        head = init_dense(keys[2], cfg.d_model, cfg.n_codebooks * cfg.vocab_size, dt)
+    else:
+        embed = (jax.random.normal(
+            keys[1], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)
+        head = None if cfg.tie_embeddings else init_dense(
+            keys[2], cfg.d_model, cfg.vocab_size, dt)
+
+    params = {
+        "embed": embed,
+        "groups": groups,
+        "final_norm": init_norm(cfg.d_model, dt),
+    }
+    if head is not None:
+        params["lm_head"] = head
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _apply_block_full(p, x, cfg: ModelConfig, kind: str, use_pallas: bool,
+                      act_specs=None):
+    from jax.ad_checkpoint import checkpoint_name
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        window = cfg.window if kind == "swa" else None
+        out, _ = apply_attn(p["mixer"], h, cfg, window=window,
+                            use_pallas=use_pallas, act_specs=act_specs)
+    elif kind == "mlstm":
+        out, _ = apply_mlstm(p["mixer"], h, cfg)
+    elif kind == "slstm":
+        out, _ = apply_slstm(p["mixer"], h, cfg)
+    elif kind == "rglru":
+        out, _ = apply_rglru(p["mixer"], h, cfg)
+    # named save points for the selective-remat policy (remat="names"):
+    # everything between them (norms, gates, the big FFN intermediate) is
+    # recomputed; the mixer and FFN outputs — the tensors whose recompute
+    # would re-run TP all-reduces — are saved.
+    x = x + checkpoint_name(out, "mixer_out")
+    if block_has_ffn(cfg, kind):
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe is not None and kind in ATTN_KINDS:
+            y = apply_moe(p["ffn"], h2, cfg, act_specs=act_specs)
+        else:
+            f = p["ffn"]
+            y = swiglu_ffn(h2, f["w_gate"], f["w_up"], f["w_down"])
+        x = x + checkpoint_name(y, "ffn_out")
+    return x
+
+
+def embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Token embedding with optional modality frontend (STUB frontends:
+    precomputed patch/frame embeddings arrive via the batch dict).
+
+    ``inputs_embeds`` short-circuits the lookup — used by the PSA train step,
+    which performs the gather OUTSIDE its manual-pod shard_map region (the
+    XLA SPMD partitioner cannot partition gathers inside shard_map auto
+    sub-meshes at scale; measured CHECK-crash at 512 devices)."""
+    if "inputs_embeds" in batch:
+        return batch["inputs_embeds"]
+    tokens = batch["tokens"]
+    if cfg.frontend == "audio_codec":
+        # tokens: (b, s, K); sum codebook embeddings
+        x = sum(embed_lookup(params["embed"][k], tokens[..., k])
+                for k in range(cfg.n_codebooks))
+    else:
+        x = embed_lookup(params["embed"], tokens)
+    if cfg.frontend == "vlm_patches" and "patch_embeds" in batch:
+        # splice precomputed image-patch embeddings over the prefix positions
+        npfx = cfg.n_prefix_tokens
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, npfx:]], axis=1)
+    return x
+
+
+def _constrain(x, spec):
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig, *,
+            use_pallas: bool = False, remat: bool = True,
+            unroll_layers: bool = False, act_specs=None) -> jnp.ndarray:
+    """Returns logits (b, s, V) (audio: (b, s, K, V)).
+
+    ``unroll_layers=True`` replaces the layer-group scan with a Python loop —
+    used by the dry-run so HLO cost/collective analysis sees every layer
+    (XLA cost_analysis counts while-loop bodies once).
+
+    ``act_specs`` (sharding.activation_specs) pins the residual stream and
+    the logits to their intended shardings at every group boundary — without
+    it the SPMD partitioner inserts per-layer activation all-gathers
+    (EXPERIMENTS.md §Perf iteration 1).
+
+    ``remat``: True = full per-group remat (minimum HBM, +~33% FLOPs and the
+    TP all-reduces re-run in backward); "names" = selective (save mixer/FFN
+    outputs, recompute only the cheap elementwise span — no collective is
+    re-run); False = save everything.
+    """
+    act = act_specs["act"] if act_specs else None
+    x = _constrain(embed_inputs(params, batch, cfg), act)
+    pattern = cfg.pattern_for_layers()
+
+    def group_body(x, gparams):
+        for i, kind in enumerate(pattern):
+            x = _apply_block_full(gparams[f"blk{i}_{kind}"], x, cfg, kind,
+                                  use_pallas, act_specs=act_specs)
+        return _constrain(x, act), None
+
+    if remat == "names":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "mixer_out", "ffn_out")
+        body = jax.checkpoint(group_body, policy=policy)
+    elif remat:
+        body = jax.checkpoint(group_body)
+    else:
+        body = group_body
+    if unroll_layers:
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda l: l[g], params["groups"])
+            x, _ = body(x, gp)
+    else:
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    head = params.get("lm_head")
+    if head is None:  # tied
+        emb = params["embed"]
+        logits = x @ emb.T if cfg.frontend != "audio_codec" else None
+    else:
+        logits = x @ head
+    if cfg.frontend == "audio_codec":
+        b, s, _ = x.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    if act_specs:
+        logits = _constrain(logits, act_specs["logits"])
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """Per-pattern-position stacked caches/states + the step counter."""
+    from .attention import init_kv_cache
+    from .recurrent import init_mlstm_state, init_rglru_state, init_slstm_state
+
+    state: Dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    caches = {}
+    for i, kind in enumerate(cfg.pattern_for_layers()):
+        name = f"blk{i}_{kind}"
+        if kind == "attn":
+            caches[name] = init_kv_cache(cfg, batch, max_len, cfg.n_groups)
+        elif kind == "swa":
+            wlen = min(cfg.window or max_len, max_len)
+            caches[name] = init_kv_cache(cfg, batch, wlen, cfg.n_groups)
+        elif kind == "mlstm":
+            caches[name] = init_mlstm_state(cfg, batch, cfg.n_groups)
+        elif kind == "slstm":
+            caches[name] = init_slstm_state(cfg, batch, cfg.n_groups)
+        elif kind == "rglru":
+            caches[name] = init_rglru_state(cfg, batch, cfg.n_groups)
+    state["caches"] = caches
+    return state
+
+
+def _apply_block_decode(p, x, cfg: ModelConfig, kind: str, cache, index):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        out, new_cache = apply_attn(p["mixer"], h, cfg,
+                                    window=cfg.window if kind == "swa" else None,
+                                    cache=cache, cache_index=index)
+    elif kind == "mlstm":
+        out, new_cache = apply_mlstm(p["mixer"], h, cfg, state=cache)
+    elif kind == "slstm":
+        out, new_cache = apply_slstm(p["mixer"], h, cfg, state=cache)
+    elif kind == "rglru":
+        out, new_cache = apply_rglru(p["mixer"], h, cfg, state=cache)
+    x = x + out
+    if block_has_ffn(cfg, kind):
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.moe is not None and kind in ATTN_KINDS:
+            x = x + apply_moe(p["ffn"], h2, cfg)
+        else:
+            f = p["ffn"]
+            x = x + swiglu_ffn(h2, f["w_gate"], f["w_up"], f["w_down"])
+    return x, new_cache
+
+
+def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                unroll_layers: bool = False, act_specs=None):
+    """One serving step. tokens: (b, 1) (audio: (b, 1, K)).
+
+    Returns (logits, new_state). The KV/recurrent caches advance by one.
+    """
+    act = act_specs["act"] if act_specs else None
+    index = state["index"]
+    x = _constrain(embed_inputs(params, {"tokens": tokens}, cfg), act)
+    pattern = cfg.pattern_for_layers()
+
+    def group_body(x, scans):
+        gparams, gcaches = scans
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            name = f"blk{i}_{kind}"
+            x, nc = _apply_block_decode(
+                gparams[name], x, cfg, kind, gcaches[name], index)
+            new_caches[name] = nc
+        return x, new_caches
+
+    if unroll_layers:
+        outs = []
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda l: l[g], params["groups"])
+            gc = jax.tree.map(lambda l: l[g], state["caches"])
+            x, nc = group_body(x, (gp, gc))
+            outs.append(nc)
+        new_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *outs)
+    else:
+        x, new_caches = jax.lax.scan(group_body, x, (params["groups"], state["caches"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x @ (head if head is not None else params["embed"].T)
+    if cfg.frontend == "audio_codec":
+        b, s, _ = x.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    if act_specs:
+        logits = _constrain(logits, act_specs["logits"])
+    return logits, {"index": index + 1, "caches": new_caches}

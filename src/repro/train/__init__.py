@@ -1,0 +1,2 @@
+from .step import (loss_fn, make_serve_step, make_train_step,  # noqa: F401
+                   make_psa_train_step)

@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: deliberately does NOT set
+--xla_force_host_platform_device_count — smoke tests and benches must see the
+single real CPU device; SPMD tests spawn subprocesses that set it themselves.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def psa_problem():
+    """Standard small PSA problem: d=20, r=5, N=10 nodes, gap 0.7."""
+    import jax.numpy as jnp
+    from repro.data.pipeline import gaussian_eigengap_data, partition_samples
+
+    d, r, n_nodes, n_per = 20, 5, 10, 500
+    x, c, q_pop = gaussian_eigengap_data(d, n_nodes * n_per, r, 0.7, seed=0)
+    blocks = partition_samples(x, n_nodes)
+    covs = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    # ground truth of the *sample* covariance (what the algorithms estimate)
+    m = covs.sum(0)
+    from repro.core.linalg import eigh_topr
+    _, q_true = eigh_topr(m, r)
+    return dict(d=d, r=r, n_nodes=n_nodes, x=x, blocks=blocks, covs=covs,
+                m=m, q_true=q_true, q_pop=q_pop)
+
+
+@pytest.fixture(scope="session")
+def er_engine(psa_problem):
+    from repro.core.consensus import DenseConsensus
+    from repro.core.topology import erdos_renyi
+
+    g = erdos_renyi(psa_problem["n_nodes"], 0.5, seed=1)
+    return DenseConsensus(g)

@@ -1,0 +1,65 @@
+"""Asynchronous gossip (paper §V future work): average conservation,
+consensus convergence, and straggler-tolerant S-DOT."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_gossip import AsyncConsensus, straggler_wall_clock
+from repro.core.sdot import sdot
+from repro.core.topology import erdos_renyi
+
+
+def _z(n=10, d=6, r=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d, r)), jnp.float32)
+
+
+def test_round_matrix_doubly_stochastic():
+    eng = AsyncConsensus(erdos_renyi(10, 0.5, seed=1), p_awake=0.6, seed=0)
+    for _ in range(20):
+        w, awake = eng._round_matrix()
+        assert np.allclose(w.sum(0), 1.0, atol=1e-12)
+        assert np.allclose(w.sum(1), 1.0, atol=1e-12)
+        # sleeping nodes do not mix: their row is e_i
+        for i in np.nonzero(~awake)[0]:
+            assert w[i, i] == pytest.approx(1.0)
+
+
+def test_async_consensus_converges_to_sum():
+    eng = AsyncConsensus(erdos_renyi(10, 0.5, seed=1), p_awake=0.7, seed=0)
+    z0 = _z()
+    out = eng.run_debiased(z0, 300)
+    assert float(jnp.abs(out - z0.sum(0)[None]).max()) < 1e-4
+
+
+def test_async_slower_than_sync_in_rounds():
+    """Dropped rounds cost contraction: async error at equal round count is
+    no better than synchronous."""
+    from repro.core.consensus import DenseConsensus
+    g = erdos_renyi(10, 0.4, seed=2)
+    z0 = _z(seed=3)
+    e_sync = float(jnp.abs(DenseConsensus(g).run_debiased(z0, 30)
+                           - z0.sum(0)[None]).max())
+    errs = []
+    for seed in range(5):
+        eng = AsyncConsensus(g, p_awake=0.5, seed=seed)
+        errs.append(float(jnp.abs(eng.run_debiased(z0, 30)
+                                  - z0.sum(0)[None]).max()))
+    assert np.median(errs) >= e_sync * 0.9
+
+
+def test_async_sdot_reaches_floor(psa_problem):
+    p = psa_problem
+    eng = AsyncConsensus(erdos_renyi(p["n_nodes"], 0.5, seed=1),
+                         p_awake=0.7, seed=0)
+    res = sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=60, t_c=50,
+               q_true=p["q_true"])
+    assert res.error_trace[-1] < 1e-5
+
+
+def test_straggler_wall_clock_model():
+    wc = straggler_wall_clock(n_nodes=10, t_round=0.001, delay=0.01,
+                              rounds_sync=1000, rounds_async=1000)
+    assert wc["sync_s"] == pytest.approx(11.0)
+    assert wc["async_s"] == pytest.approx(1.0)
+    assert wc["speedup"] == pytest.approx(11.0)

@@ -1,0 +1,72 @@
+"""Baselines from the paper's Figs. 4-6: sanity + the paper's ordering claims."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import d_pm, deepca, dpgd, dsa, seq_dist_pm, seq_pm
+from repro.core.consensus import DenseConsensus
+from repro.core.linalg import eigh_topr
+from repro.core.sdot import sdot
+from repro.core.topology import erdos_renyi
+from repro.data.pipeline import gaussian_eigengap_data, partition_features
+
+
+def test_seq_pm_converges(psa_problem):
+    p = psa_problem
+    q, errs = seq_pm(p["m"], p["r"], iters_per_vec=60, q_true=p["q_true"])
+    assert errs[-1] < 1e-4
+    # sequential plateau: early error (first vector converging) stays high
+    assert errs[len(errs) // p["r"] - 1] > errs[-1] * 10
+
+
+def test_seq_dist_pm_converges(psa_problem, er_engine):
+    p = psa_problem
+    q_nodes, errs = seq_dist_pm(p["covs"], er_engine, p["r"],
+                                iters_per_vec=60, t_c=50, q_true=p["q_true"])
+    assert errs[-1] < 1e-3
+
+
+def test_dsa_reaches_neighborhood(psa_problem, er_engine):
+    p = psa_problem
+    q, errs = dsa(p["covs"], er_engine, p["r"], t_outer=300, lr=0.05,
+                  q_true=p["q_true"])
+    assert errs[-1] < 0.1
+    assert errs[-1] < errs[0]
+
+
+def test_dpgd_reaches_neighborhood(psa_problem, er_engine):
+    p = psa_problem
+    q, errs = dpgd(p["covs"], er_engine, p["r"], t_outer=300, lr=0.05,
+                   q_true=p["q_true"])
+    assert errs[-1] < 0.2
+    assert errs[-1] < errs[0]
+
+
+def test_deepca_converges(psa_problem, er_engine):
+    p = psa_problem
+    q, errs = deepca(p["covs"], er_engine, p["r"], t_outer=150, t_mix=3,
+                     q_true=p["q_true"])
+    assert errs[-1] < 1e-4
+
+
+def test_sdot_beats_neighborhood_methods(psa_problem, er_engine):
+    """Paper Fig. 4: S-DOT's floor is orders below DSA/DPGD's."""
+    p = psa_problem
+    res = sdot(covs=p["covs"], engine=er_engine, r=p["r"], t_outer=100,
+               t_c=50, q_true=p["q_true"])
+    _, e_dsa = dsa(p["covs"], er_engine, p["r"], t_outer=300, lr=0.05,
+                   q_true=p["q_true"])
+    _, e_dpgd = dpgd(p["covs"], er_engine, p["r"], t_outer=300, lr=0.05,
+                     q_true=p["q_true"])
+    assert res.error_trace[-1] < e_dsa[-1] / 100
+    assert res.error_trace[-1] < e_dpgd[-1] / 100
+
+
+def test_d_pm_feature_partitioned():
+    d, r, n_nodes = 10, 3, 10
+    x, c, _ = gaussian_eigengap_data(d, 2000, r, 0.5, seed=7)
+    _, q_true = eigh_topr(x @ x.T, r)
+    blocks = partition_features(x, n_nodes)
+    eng = DenseConsensus(erdos_renyi(n_nodes, 0.5, seed=8))
+    q, errs = d_pm(blocks, eng, r, iters_per_vec=80, t_c=60, q_true=q_true)
+    assert errs[-1] < 1e-3

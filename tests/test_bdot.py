@@ -1,0 +1,74 @@
+"""B-DOT — block-partitioned DOT (the paper's §VI future-work direction)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bdot import bdot
+from repro.core.consensus import DenseConsensus
+from repro.core.linalg import eigh_topr
+from repro.core.topology import complete, erdos_renyi
+from repro.data.pipeline import (gaussian_eigengap_data, partition_features,
+                                 partition_samples)
+
+
+def _grid_problem(d=24, r=4, I=4, J=5, n=3000, gap=0.6, seed=0):
+    x, _, _ = gaussian_eigengap_data(d, n, r, gap, seed=seed)
+    _, q_true = eigh_topr(x @ x.T, r)
+    fslabs = partition_features(x, I)
+    blocks = [partition_samples(sl, J) for sl in fslabs]
+    return x, blocks, q_true
+
+
+def test_bdot_converges():
+    x, blocks, q_true = _grid_problem()
+    I, J = len(blocks), len(blocks[0])
+    cols = [DenseConsensus(erdos_renyi(I, 0.7, seed=j)) for j in range(J)]
+    rows = [DenseConsensus(erdos_renyi(J, 0.7, seed=10 + i)) for i in range(I)]
+    res = bdot(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+               t_outer=60, t_c=60, q_true=q_true)
+    assert res.error_trace[-1] < 1e-5
+    q = res.q_full
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(4), atol=1e-4)
+
+
+def test_bdot_blocks_cover_data():
+    x, blocks, _ = _grid_problem()
+    rebuilt = jnp.concatenate(
+        [jnp.concatenate(row, axis=1) for row in blocks], axis=0)
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(x))
+
+
+def test_bdot_payloads_are_blockwise():
+    """Per-node traffic never includes a full d x r or d x n object."""
+    x, blocks, q_true = _grid_problem()
+    I, J = len(blocks), len(blocks[0])
+    cols = [DenseConsensus(complete(I)) for _ in range(J)]
+    rows = [DenseConsensus(complete(J)) for _ in range(I)]
+    res = bdot(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+               t_outer=3, t_c=10, q_true=q_true)
+    # ledger counts elements actually moved; bound them by the blockwise
+    # payload model: per outer iter per stage
+    d, n, r = 24, 3000, 4
+    n_j, d_i = n // J, d // I
+    per_iter_elems = (
+        10 * (I * (I - 1)) * n_j * r * J          # stage 1 per column
+        + 10 * (J * (J - 1)) * d_i * r * I        # stage 2 per row
+        + 2 * 10 * (I * (I - 1)) * r * r          # QR grams (2 passes)
+    )
+    assert res.ledger.scalars == pytest.approx(3 * per_iter_elems)
+
+
+def test_bdot_matches_centralized_oi_exact_consensus():
+    import jax
+    from repro.core.linalg import orthonormal_init
+    from repro.core.oi import orthogonal_iteration
+    from repro.core.metrics import subspace_error
+    x, blocks, q_true = _grid_problem()
+    I, J = len(blocks), len(blocks[0])
+    cols = [DenseConsensus(complete(I)) for _ in range(J)]
+    rows = [DenseConsensus(complete(J)) for _ in range(I)]
+    q0 = orthonormal_init(jax.random.PRNGKey(1), 24, 4)
+    res = bdot(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+               t_outer=8, t_c=150, q_init=q0)
+    q_oi = orthogonal_iteration(x @ x.T, q0, 8)
+    assert float(subspace_error(q_oi, res.q_full)) < 1e-5

@@ -1,0 +1,126 @@
+"""Assigned-architecture configs must match the assignment table exactly."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_arch, get_psa_config, \
+    reduced_config, valid_cells
+
+# (arch, n_layers, d_model, n_heads, n_kv, d_ff, vocab)
+TABLE = {
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+    "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+    "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "paligemma-3b": (18, 2048, 8, 1, 16384, 257216),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCH_IDS) == 10
+    assert set(ARCH_IDS) == set(TABLE)
+
+
+@pytest.mark.parametrize("aid", sorted(TABLE))
+def test_arch_matches_assignment(aid):
+    cfg = get_arch(aid)
+    nl, dm, nh, nkv, dff, vs = TABLE[aid]
+    assert cfg.n_layers == nl
+    assert cfg.d_model == dm
+    assert cfg.n_heads == nh
+    assert cfg.n_kv_heads == nkv
+    assert cfg.d_ff == dff
+    assert cfg.vocab_size == vs
+
+
+def test_moe_configs():
+    kimi = get_arch("kimi-k2-1t-a32b")
+    assert kimi.moe is not None and kimi.moe.n_experts == 384 \
+        and kimi.moe.top_k == 8
+    phi = get_arch("phi3.5-moe-42b-a6.6b")
+    assert phi.moe is not None and phi.moe.n_experts == 16 and phi.moe.top_k == 2
+
+
+def test_param_counts_in_range():
+    """Headline parameter counts should land near the names on the tin."""
+    expected = {
+        "qwen2-7b": (6e9, 9e9),
+        "internlm2-20b": (17e9, 23e9),
+        "command-r-35b": (30e9, 40e9),
+        "h2o-danube-1.8b": (1.4e9, 2.3e9),
+        "recurrentgemma-2b": (2e9, 3.8e9),  # 256k vocab embed dominates
+        "paligemma-3b": (1.8e9, 3.5e9),   # backbone only (SigLIP is a stub)
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "xlstm-1.3b": (1.0e9, 1.8e9),
+        "kimi-k2-1t-a32b": (0.85e12, 1.25e12),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+    }
+    for aid, (lo, hi) in expected.items():
+        n = get_arch(aid).param_count()
+        assert lo <= n <= hi, f"{aid}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_active_params_moe():
+    kimi = get_arch("kimi-k2-1t-a32b")
+    act = kimi.active_param_count()
+    assert 25e9 <= act <= 40e9, f"kimi active {act/1e9:.1f}B"
+    phi = get_arch("phi3.5-moe-42b-a6.6b")
+    act = phi.active_param_count()
+    assert 4e9 <= act <= 9e9, f"phi active {act/1e9:.1f}B"
+    dense = get_arch("qwen2-7b")
+    assert dense.active_param_count() == dense.param_count()
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+    assert SHAPES["train_4k"].kind == "train"
+    assert SHAPES["prefill_32k"].kind == "prefill"
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+def test_valid_cells_40_with_documented_skips():
+    cells = valid_cells()
+    assert len(cells) == 40
+    skips = {c["arch"] for c in cells if c["skip"]}
+    subq = {"xlstm-1.3b", "h2o-danube-1.8b", "recurrentgemma-2b"}
+    assert skips == set(ARCH_IDS) - subq
+    for c in cells:
+        if c["skip"]:
+            assert c["shape"] == "long_500k" and c["reason"]
+
+
+def test_subquadratic_flags():
+    assert get_arch("xlstm-1.3b").subquadratic
+    assert get_arch("h2o-danube-1.8b").subquadratic      # SWA
+    assert get_arch("recurrentgemma-2b").subquadratic
+    assert not get_arch("qwen2-7b").subquadratic
+
+
+def test_block_patterns_tile_layers():
+    for aid in ARCH_IDS:
+        cfg = get_arch(aid)
+        assert cfg.n_layers % len(cfg.block_pattern) == 0
+        assert cfg.n_groups * len(cfg.block_pattern) == cfg.n_layers
+
+
+def test_reduced_config_is_small_same_family():
+    for aid in ARCH_IDS:
+        cfg = get_arch(aid)
+        small = reduced_config(cfg)
+        assert small.family == cfg.family
+        assert small.block_pattern == cfg.block_pattern
+        assert small.param_count() < 3e7
+        assert (small.moe is None) == (cfg.moe is None)
+
+
+def test_psa_config_defaults():
+    psa = get_psa_config()
+    assert psa.rank >= 1 and psa.gossip_rounds >= 1 and psa.oi_iters >= 1

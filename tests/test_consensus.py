@@ -1,0 +1,108 @@
+"""Consensus averaging: convergence, debiasing, Proposition 1 error bound."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import (DenseConsensus, consensus_schedule,
+                                  debias_weights)
+from repro.core.topology import (erdos_renyi, local_degree_weights, ring,
+                                 spectral_gap, star)
+
+
+def _blocks(n, d, r, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d, r)), jnp.float32)
+
+
+def test_gossip_converges_to_mean():
+    g = erdos_renyi(12, 0.4, seed=0)
+    eng = DenseConsensus(g)
+    z0 = _blocks(12, 8, 3)
+    out = eng.run(z0, 400)
+    mean = z0.mean(0)
+    assert jnp.abs(out - mean[None]).max() < 1e-5
+
+
+def test_debiased_run_approximates_sum():
+    g = erdos_renyi(10, 0.5, seed=1)
+    eng = DenseConsensus(g)
+    z0 = _blocks(10, 6, 2)
+    out = eng.run_debiased(z0, 300)
+    total = z0.sum(0)
+    assert jnp.abs(out - total[None]).max() < 1e-4
+
+
+def test_debias_weights_definition():
+    w = local_degree_weights(erdos_renyi(9, 0.4, seed=2))
+    t_c = 7
+    expected = np.linalg.matrix_power(w.T, t_c) @ np.eye(9)[0]
+    assert np.allclose(debias_weights(w, t_c), expected)
+
+
+def test_proposition1_geometric_decay():
+    """Prop. 1: consensus error decays as delta ~ lambda_2(W)^{Tc} — i.e.
+    log-linearly in T_c at the rate of the spectral contraction."""
+    g = erdos_renyi(10, 0.5, seed=3)
+    w = local_degree_weights(g)
+    lam2 = 1.0 - spectral_gap(w)
+    eng = DenseConsensus(g)
+    z0 = _blocks(10, 12, 4, seed=5)
+    z_sum = np.asarray(z0.sum(0))
+    errs = {}
+    for t_c in (10, 40):
+        out = np.asarray(eng.run_debiased(z0, t_c))
+        errs[t_c] = np.linalg.norm(out - z_sum[None], axis=(1, 2)).max()
+    measured_rate = (errs[40] / errs[10]) ** (1 / 30)
+    assert measured_rate <= lam2 * 1.1, (measured_rate, lam2)
+    # and Prop. 1's absolute form with the contraction delta, modest constant
+    z_abs = np.abs(np.asarray(z0)).sum(0)
+    delta = 25 * lam2 ** 40
+    assert errs[40] <= delta * np.linalg.norm(z_abs)
+
+
+def test_consensus_error_decreases_with_tc():
+    g = erdos_renyi(10, 0.3, seed=4)
+    eng = DenseConsensus(g)
+    z0 = _blocks(10, 10, 3, seed=6)
+    z_sum = z0.sum(0)
+    errs = []
+    # t_c must exceed the graph diameter for the debias weight to be > 0
+    for t_c in (8, 32, 128, 512):
+        out = eng.run_debiased(z0, t_c)
+        errs.append(float(jnp.abs(out - z_sum[None]).max()))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-3
+
+
+def test_star_consensus_works():
+    eng = DenseConsensus(star(8))
+    z0 = _blocks(8, 5, 2, seed=7)
+    out = eng.run_debiased(z0, 200)
+    assert jnp.abs(out - z0.sum(0)[None]).max() < 1e-3
+
+
+def test_schedules():
+    t_o = 10
+    assert list(consensus_schedule("const", t_o, t_max=50)) == [50] * t_o
+    lin1 = consensus_schedule("lin1", t_o)
+    assert list(lin1) == [t + 1 for t in range(1, t_o + 1)]
+    lin2 = consensus_schedule("lin2", t_o)
+    assert list(lin2) == [2 * t + 1 for t in range(1, t_o + 1)]
+    capped = consensus_schedule("lin5", t_o, cap=20)
+    assert max(capped) == 20
+    half = consensus_schedule("lin_half", 4)
+    assert list(half) == [int(np.ceil(0.5 * t + 1)) for t in range(1, 5)]
+    with pytest.raises(ValueError):
+        consensus_schedule("nope", 5)
+
+
+def test_ledger_counts_match_topology():
+    from repro.core.metrics import CommLedger
+    g = erdos_renyi(10, 0.4, seed=8)
+    eng = DenseConsensus(g)
+    z0 = _blocks(10, 6, 2)
+    led = CommLedger()
+    eng.run_debiased(z0, 13, led)
+    # every round each directed edge carries one message
+    assert led.p2p == 13 * g.adjacency.sum()
+    assert led.scalars == led.p2p * 6 * 2

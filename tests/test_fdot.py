@@ -1,0 +1,98 @@
+"""F-DOT (Alg. 2) and the distributed CholeskyQR it relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import DenseConsensus
+from repro.core.fdot import distributed_cholesky_qr, fdot
+from repro.core.linalg import eigh_topr, orthonormal_init
+from repro.core.metrics import subspace_error
+from repro.core.topology import erdos_renyi
+from repro.data.pipeline import gaussian_eigengap_data, partition_features
+
+
+@pytest.fixture(scope="module")
+def fprob():
+    d, r, n_nodes = 20, 5, 10
+    x, c, _ = gaussian_eigengap_data(d, 4000, r, 0.7, seed=0)
+    _, q_true = eigh_topr(x @ x.T, r)
+    blocks = partition_features(x, n_nodes)
+    eng = DenseConsensus(erdos_renyi(n_nodes, 0.5, seed=1))
+    return dict(d=d, r=r, n_nodes=n_nodes, x=x, blocks=blocks, eng=eng,
+                q_true=q_true)
+
+
+def test_fdot_converges(fprob):
+    res = fdot(data_blocks=fprob["blocks"], engine=fprob["eng"], r=fprob["r"],
+               t_outer=80, t_c=50, q_true=fprob["q_true"])
+    assert res.error_trace[-1] < 1e-5
+
+
+def test_fdot_blocks_assemble_to_orthonormal(fprob):
+    res = fdot(data_blocks=fprob["blocks"], engine=fprob["eng"], r=fprob["r"],
+               t_outer=40, t_c=50)
+    q = res.q_full
+    gram = q.T @ q
+    np.testing.assert_allclose(np.asarray(gram), np.eye(fprob["r"]), atol=1e-3)
+
+
+def test_fdot_uneven_feature_split(fprob):
+    """d=20 over 7 nodes: last node gets the remainder slab."""
+    blocks = partition_features(fprob["x"], 7)
+    assert sum(b.shape[0] for b in blocks) == fprob["d"]
+    eng = DenseConsensus(erdos_renyi(7, 0.6, seed=2))
+    res = fdot(data_blocks=blocks, engine=eng, r=fprob["r"], t_outer=80,
+               t_c=50, q_true=fprob["q_true"])
+    assert res.error_trace[-1] < 1e-5
+
+
+def test_fdot_single_feature_per_node():
+    """The paper's Fig. 6 setting: d == N, one feature per node."""
+    d = r = None
+    n_nodes = 10
+    x, c, _ = gaussian_eigengap_data(n_nodes, 2000, 3, 0.5, seed=5)
+    _, q_true = eigh_topr(x @ x.T, 3)
+    blocks = partition_features(x, n_nodes)
+    assert all(b.shape[0] == 1 for b in blocks)
+    eng = DenseConsensus(erdos_renyi(n_nodes, 0.5, seed=6))
+    res = fdot(data_blocks=blocks, engine=eng, r=3, t_outer=100, t_c=50,
+               q_true=q_true)
+    assert res.error_trace[-1] < 1e-5
+
+
+def test_distributed_cholesky_qr_orthonormalizes(fprob):
+    rng = np.random.default_rng(3)
+    dims = [2, 3, 1, 4, 2, 3, 2, 1, 1, 1]
+    v_blocks = [jnp.asarray(rng.standard_normal((di, 4)), jnp.float32) * 3.0
+                for di in dims]
+    out = distributed_cholesky_qr(v_blocks, fprob["eng"], t_c=120)
+    q = jnp.concatenate(out, 0)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(4), atol=1e-4)
+    # span preserved
+    v = jnp.concatenate(v_blocks, 0)
+    assert float(subspace_error(jnp.linalg.qr(v)[0], q)) < 1e-6
+
+
+def test_distributed_qr_single_pass_worse_than_two(fprob):
+    rng = np.random.default_rng(4)
+    # ill-conditioned V stresses CholeskyQR; pass 2 should fix orthogonality
+    base = rng.standard_normal((20, 4))
+    base[:, 3] = base[:, 0] + 1e-3 * base[:, 3]
+    blocks = [jnp.asarray(base[i * 2:(i + 1) * 2], jnp.float32) for i in range(10)]
+    q1 = jnp.concatenate(
+        distributed_cholesky_qr(blocks, fprob["eng"], t_c=200, passes=1), 0)
+    q2 = jnp.concatenate(
+        distributed_cholesky_qr(blocks, fprob["eng"], t_c=200, passes=2), 0)
+    e1 = float(jnp.abs(q1.T @ q1 - jnp.eye(4)).max())
+    e2 = float(jnp.abs(q2.T @ q2 - jnp.eye(4)).max())
+    assert e2 <= e1 + 1e-7
+    assert e2 < 1e-4
+
+
+def test_fdot_ledger_counts(fprob):
+    res = fdot(data_blocks=fprob["blocks"], engine=fprob["eng"], r=fprob["r"],
+               t_outer=5, t_c=10)
+    edges = fprob["eng"].graph.adjacency.sum()
+    # per outer iter: t_c rounds for the (n x r) product + 2 QR passes x t_c
+    assert res.ledger.p2p == 5 * (10 + 2 * 10) * edges

@@ -1,0 +1,88 @@
+"""Numerics (CholeskyQR2) and subspace metrics, incl. property-based sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.linalg import cholesky_qr, cholesky_qr2, eigh_topr, \
+    orthonormal_init
+from repro.core.metrics import (principal_angles, projector_distance,
+                                subspace_error)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(4, 64), r=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_cholesky_qr2_orthonormal_property(d, r, seed):
+    r = min(r, d)
+    v = jax.random.normal(jax.random.PRNGKey(seed), (d, r)) * 10.0
+    q, rr = cholesky_qr2(v)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(q @ rr), np.asarray(v), rtol=2e-4,
+                               atol=2e-4)
+    # R upper triangular
+    assert np.allclose(np.tril(np.asarray(rr), -1), 0.0, atol=1e-5)
+
+
+def test_cholesky_qr2_ill_conditioned():
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((50, 4))
+    v[:, 3] = v[:, 0] + 1e-3 * v[:, 3]   # cond ~ 1e3 (fp32 CholeskyQR2 limit
+    # is cond^2 * eps < 1, i.e. cond << 3e3 — documented in linalg.py)
+    q, _ = cholesky_qr2(jnp.asarray(v, jnp.float32))
+    assert float(jnp.abs(q.T @ q - jnp.eye(4)).max()) < 1e-4
+
+
+def test_cholesky_qr_one_pass_weaker():
+    rng = np.random.default_rng(1)
+    v = rng.standard_normal((50, 4))
+    v[:, 3] = v[:, 0] + 1e-4 * v[:, 3]
+    v = jnp.asarray(v, jnp.float32)
+    q1, _ = cholesky_qr(v, eps=1e-12)
+    q2, _ = cholesky_qr2(v)
+    e1 = float(jnp.abs(q1.T @ q1 - jnp.eye(4)).max())
+    e2 = float(jnp.abs(q2.T @ q2 - jnp.eye(4)).max())
+    assert e2 <= e1
+
+
+def test_orthonormal_init():
+    q = orthonormal_init(jax.random.PRNGKey(0), 30, 5)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(5), atol=1e-5)
+
+
+def test_eigh_topr_ground_truth():
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((12, 12))
+    m = jnp.asarray(a @ a.T, jnp.float32)
+    vals, vecs = eigh_topr(m, 3)
+    assert np.all(np.diff(np.asarray(vals)) <= 1e-5)   # descending
+    full_vals = np.linalg.eigvalsh(np.asarray(m))[::-1]
+    np.testing.assert_allclose(np.asarray(vals), full_vals[:3], rtol=1e-4)
+
+
+def test_subspace_error_identities():
+    q = orthonormal_init(jax.random.PRNGKey(3), 20, 4)
+    assert float(subspace_error(q, q)) < 1e-6
+    # invariant to right rotation
+    rot = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(4), (4, 4)))[0]
+    assert float(subspace_error(q, q @ rot)) < 1e-6
+    # orthogonal complement: error = 1
+    full = orthonormal_init(jax.random.PRNGKey(5), 20, 20)
+    a, b = full[:, :4], full[:, 4:8]
+    assert abs(float(subspace_error(a, b)) - 1.0) < 1e-5
+
+
+def test_projector_distance_vs_subspace_error():
+    """||PP - QQ||_2 = sin(theta_max); E = mean sin^2 — consistent ordering."""
+    q1 = orthonormal_init(jax.random.PRNGKey(6), 20, 3)
+    q2 = orthonormal_init(jax.random.PRNGKey(7), 20, 3)
+    pd = float(projector_distance(q1, q2))
+    se = float(subspace_error(q1, q2))
+    assert 0 <= se <= pd ** 2 + 1e-6
+
+
+def test_principal_angles_range():
+    q1 = orthonormal_init(jax.random.PRNGKey(8), 10, 3)
+    q2 = orthonormal_init(jax.random.PRNGKey(9), 10, 3)
+    th = np.asarray(principal_angles(q1, q2))
+    assert np.all(th >= -1e-7) and np.all(th <= np.pi / 2 + 1e-6)

@@ -1,0 +1,167 @@
+"""AdamW and the PSA gradient-compression layer (paper technique in the
+optimizer; single-process paths — the pod-axis path is covered by
+test_spmd.py subprocess runs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PSAConfig
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.psa_compress import (compress_grads, compressible,
+                                      compression_ratio, psa_init,
+                                      psa_refresh)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def test_adamw_quadratic_converges():
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((8, 8)),
+                    jnp.float32)
+    params = {"w": jnp.zeros((8, 8))}
+    opt = AdamWConfig(lr=5e-2, weight_decay=0.0, warmup_steps=1)
+    state = adamw_init(params, opt)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - w) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params, state, _ = adamw_update(g, state, params, opt)
+    assert float(loss_fn(params)) < 1e-2
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros((4,))}
+    opt = AdamWConfig(grad_clip=1.0, warmup_steps=1)
+    state = adamw_init(params, opt)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, gnorm = adamw_update(huge, state, params, opt)
+    assert float(gnorm) == pytest.approx(2e6, rel=1e-3)  # reported pre-clip
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.zeros((16, 16), jnp.float32)}
+    opt = AdamWConfig(moment_dtype="bfloat16")
+    state = adamw_init(params, opt)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((16, 16))}
+    _, state, _ = adamw_update(g, state, params, opt)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_adamw_warmup():
+    opt = AdamWConfig(lr=1.0, warmup_steps=10, weight_decay=0.0)
+    params = {"w": jnp.zeros(())}
+    state = adamw_init(params, opt)
+    g = {"w": jnp.ones(())}
+    p1, state, _ = adamw_update(g, state, params, opt)
+    # step 1 of 10 warmup: effective lr 0.1 -> |delta| ~ 0.1
+    assert abs(float(p1["w"])) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# PSA compression
+# ---------------------------------------------------------------------------
+def test_compressible_rule():
+    cfg = PSAConfig(rank=4)
+    assert compressible(jnp.zeros((64, 32)), 4)
+    assert not compressible(jnp.zeros((8, 32)), 4)       # a < 4r
+    assert not compressible(jnp.zeros((64,)), 4)         # 1-D
+
+
+def test_full_rank_projection_is_lossless():
+    """If the projector spans the full row space, compress->decompress = id."""
+    cfg = PSAConfig(rank=16, error_feedback=True)
+    g = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
+    params = {"w": g}
+    st = psa_init(params, cfg)
+    # replace projector with a basis containing the column space of g
+    q, _ = jnp.linalg.qr(g)
+    st["proj"]["w"] = q
+    red, ef = compress_grads({"w": g}, st, cfg, pod_axis=None)
+    np.testing.assert_allclose(np.asarray(red["w"]), np.asarray(g), atol=1e-4)
+    assert float(jnp.abs(ef["w"]).max()) < 1e-4
+
+
+def test_error_feedback_accumulates_residual():
+    cfg = PSAConfig(rank=2, error_feedback=True)
+    g = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    params = {"w": g}
+    st = psa_init(params, cfg)
+    red, ef = compress_grads({"w": g}, st, cfg, pod_axis=None)
+    p = st["proj"]["w"]
+    resid = g - p @ (p.T @ g)
+    np.testing.assert_allclose(np.asarray(ef["w"]), np.asarray(resid),
+                               atol=1e-5)
+    # compressed + residual == original (lossless decomposition)
+    np.testing.assert_allclose(np.asarray(red["w"] + ef["w"]),
+                               np.asarray(g), atol=1e-5)
+
+
+def test_error_feedback_preserves_signal_over_steps():
+    """With EF, repeated compression of a CONSTANT gradient eventually
+    transmits everything: sum of reduced grads -> t*g - bounded residual."""
+    cfg = PSAConfig(rank=2, error_feedback=True)
+    g = jax.random.normal(jax.random.PRNGKey(2), (32, 8))
+    st = psa_init({"w": g}, cfg)
+    total = jnp.zeros_like(g)
+    e = st["ef"]
+    for t in range(1, 21):
+        red, e_new = compress_grads({"w": g}, {"proj": st["proj"], "ef": e},
+                                    cfg, pod_axis=None)
+        total = total + red["w"]
+        e = e_new
+    # ||sum red - t g|| = ||residual_t|| stays bounded by ||residual_1||
+    resid_norm = float(jnp.linalg.norm(total - 20 * g))
+    first = float(jnp.linalg.norm(e["w"]))
+    assert resid_norm <= first + 1e-3
+
+
+def test_psa_refresh_finds_gradient_subspace():
+    """OI refresh on a fixed low-rank gradient must recover its row space —
+    the paper's Theorem 1 at work inside the optimizer."""
+    from repro.core.metrics import subspace_error
+    cfg = PSAConfig(rank=4, oi_iters=30)
+    u = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(3), (64, 4)))[0]
+    b = jax.random.normal(jax.random.PRNGKey(4), (4, 16))
+    g = u @ b                                     # rank-4 gradient
+    st = psa_init({"w": g}, cfg)
+    st2 = psa_refresh({"w": g}, st, cfg, pod_axis=None)
+    err = float(subspace_error(u, st2["proj"]["w"]))
+    assert err < 1e-4, err
+
+
+def test_psa_grouped_projector():
+    """Stacked (G, a, b) leaves share one projector per group."""
+    cfg = PSAConfig(rank=2, oi_iters=5)
+    g = jax.random.normal(jax.random.PRNGKey(5), (3, 32, 8))
+    st = psa_init({"w": g}, cfg)
+    assert st["proj"]["w"].shape == (3, 32, 2)
+    red, ef = compress_grads({"w": g}, st, cfg, pod_axis=None)
+    assert red["w"].shape == g.shape
+    st2 = psa_refresh({"w": g}, st, cfg, pod_axis=None)
+    assert st2["proj"]["w"].shape == (3, 32, 2)
+    # each group projector orthonormal
+    for i in range(3):
+        p = st2["proj"]["w"][i]
+        np.testing.assert_allclose(np.asarray(p.T @ p), np.eye(2), atol=1e-4)
+
+
+def test_compression_ratio_math():
+    cfg = PSAConfig(rank=4)
+    params = {"big": jnp.zeros((128, 64)), "small": jnp.zeros((4, 4))}
+    ratio = compression_ratio(params, cfg)
+    expect = (4 * 64 + 16) / (128 * 64 + 16)
+    assert ratio == pytest.approx(expect)
+
+
+def test_uncompressible_leaves_pass_through():
+    cfg = PSAConfig(rank=8)
+    grads = {"scale": jnp.ones((16,)), "w": jnp.ones((64, 16))}
+    st = psa_init(grads, cfg)
+    assert st["proj"]["scale"] is None
+    red, ef = compress_grads(grads, st, cfg, pod_axis=None)
+    np.testing.assert_allclose(np.asarray(red["scale"]), 1.0)
+    assert ef["scale"] is None

@@ -1,0 +1,107 @@
+"""End-to-end behaviour: the paper's claims as executable assertions, and the
+dry-run/roofline machinery on tiny inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import DenseConsensus
+from repro.core.sdot import sadot, sdot
+from repro.core.topology import erdos_renyi, ring, star
+from repro.data.pipeline import gaussian_eigengap_data, partition_samples
+from repro.core.linalg import eigh_topr
+
+
+def _problem(gap, seed=0, n_nodes=10, d=20, r=5, n_per=500):
+    x, _, _ = gaussian_eigengap_data(d, n_nodes * n_per, r, gap, seed=seed)
+    blocks = partition_samples(x, n_nodes)
+    covs = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    _, q_true = eigh_topr(covs.sum(0), r)
+    return covs, q_true
+
+
+def test_theorem1_rate_tracks_eigengap():
+    """Smaller gap ratio (lambda_{r+1}/lambda_r) => faster convergence.
+    The paper's rate is c * gap^t: err(t) for gap .3 << err(t) for gap .9."""
+    eng = DenseConsensus(erdos_renyi(10, 0.5, seed=1))
+    errs = {}
+    for gap in (0.3, 0.9):
+        covs, q_true = _problem(gap)
+        res = sdot(covs=covs, engine=eng, r=5, t_outer=25, t_c=80,
+                   q_true=q_true)
+        errs[gap] = res.error_trace
+    assert errs[0.3][10] < errs[0.9][10] / 10
+
+
+def test_star_topology_converges_slower_than_er():
+    """Paper Table IV narrative: star's central bottleneck slows consensus.
+    With equal (small) T_c the star run has a worse error floor."""
+    covs, q_true = _problem(0.7)
+    r_er = sdot(covs=covs, engine=DenseConsensus(erdos_renyi(10, 0.5, seed=1)),
+                r=5, t_outer=40, t_c=4, q_true=q_true)
+    r_st = sdot(covs=covs, engine=DenseConsensus(star(10)),
+                r=5, t_outer=40, t_c=4, q_true=q_true)
+    assert r_er.error_trace[-1] < r_st.error_trace[-1]
+
+
+def test_paper_communication_tradeoff():
+    """Table I's shape: adaptive schedules cut P2P with no accuracy loss."""
+    covs, q_true = _problem(0.7)
+    eng = DenseConsensus(erdos_renyi(20, 0.25, seed=2), )
+    covs20, q20 = _problem(0.7, n_nodes=20)
+    s = sdot(covs=covs20, engine=eng, r=5, t_outer=50, t_c=50, q_true=q20)
+    a = sadot(covs=covs20, engine=eng, r=5, t_outer=50,
+              schedule_kind="lin_half", q_true=q20)
+    assert a.ledger.p2p < 0.75 * s.ledger.p2p
+    assert a.error_trace[-1] < 10 * max(s.error_trace[-1], 1e-9) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# launch layer on tiny inputs (no 512-device requirement)
+# ---------------------------------------------------------------------------
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = """
+  %ar = f32[128,256] all-reduce(f32[128,256] %x), replica_groups={{0,1,2,3}}
+  %ag = bf16[64]{0} all-gather(bf16[16]{0} %y), replica_groups=[2,4]<=[8]
+  %cp = f32[32,32] collective-permute(f32[32,32] %z)
+"""
+    st = collective_bytes(hlo, 8)
+    assert st.count == {"all-reduce": 1, "all-gather": 1,
+                        "collective-permute": 1}
+    ar_wire = 128 * 256 * 4 * 2 * 3 / 4
+    assert st.by_kind["all-reduce"] == pytest.approx(ar_wire)
+    ag_wire = 64 * 2 * 3 / 4
+    assert st.by_kind["all-gather"] == pytest.approx(ag_wire)
+    assert st.by_kind["collective-permute"] == pytest.approx(32 * 32 * 4)
+
+
+def test_roofline_terms_dominance():
+    from repro.launch.hlo_analysis import roofline_terms
+    from repro.launch.mesh import HW
+    t = roofline_terms(flops_per_dev=197e12, bytes_per_dev=819e7,
+                       wire_bytes_per_dev=50e7, hw=HW)
+    assert t["dominant"] == "compute"
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    t2 = roofline_terms(flops_per_dev=1, bytes_per_dev=819e9,
+                        wire_bytes_per_dev=1, hw=HW)
+    assert t2["dominant"] == "memory"
+
+
+def test_model_flops_formula():
+    from repro.configs import SHAPES, get_arch
+    from repro.launch.dryrun import model_flops
+    cfg = get_arch("qwen2-7b")
+    n = cfg.param_count()
+    assert model_flops(cfg, SHAPES["train_4k"]) == 6.0 * n * 4096 * 256
+    assert model_flops(cfg, SHAPES["decode_32k"]) == 2.0 * n * 128
+    moe = get_arch("kimi-k2-1t-a32b")
+    assert model_flops(moe, SHAPES["train_4k"]) == \
+        6.0 * moe.active_param_count() * 4096 * 256
+
+
+def test_straggler_model():
+    from repro.launch.analytic_cost import straggler_slowdown
+    base = straggler_slowdown(n_nodes=10, t_step=0.01, delay=0.0)
+    slow = straggler_slowdown(n_nodes=10, t_step=0.01, delay=0.01)
+    assert slow / base >= 1.5

@@ -1,0 +1,83 @@
+"""Graphs, weight matrices, mixing time — the substrate of every consensus."""
+import numpy as np
+import pytest
+
+from repro.core.topology import (Graph, complete, erdos_renyi,
+                                 local_degree_weights, metropolis_weights,
+                                 mixing_time, ring, spectral_gap, star,
+                                 torus2d)
+
+
+@pytest.mark.parametrize("maker,n", [
+    (lambda: erdos_renyi(20, 0.25, seed=0), 20),
+    (lambda: ring(11), 11),
+    (lambda: star(20), 20),
+    (lambda: torus2d(4, 4), 16),
+    (lambda: complete(8), 8),
+])
+def test_graph_basic(maker, n):
+    g = maker()
+    a = g.adjacency
+    assert a.shape == (n, n)
+    assert np.allclose(a, a.T), "adjacency must be symmetric"
+    assert np.all(np.diag(a) == 0), "no self loops"
+    assert g.is_connected()
+
+
+def test_er_respects_p_extremes():
+    g1 = erdos_renyi(12, 1.0, seed=3)
+    assert g1.n_edges == 12 * 11 // 2
+    # p small: still connected by resampling guarantee
+    g2 = erdos_renyi(12, 0.15, seed=3)
+    assert g2.is_connected()
+
+
+@pytest.mark.parametrize("g", [erdos_renyi(20, 0.25, seed=0), ring(9),
+                               star(10), torus2d(3, 5)])
+def test_local_degree_weights_doubly_stochastic(g):
+    w = local_degree_weights(g)
+    assert np.allclose(w.sum(0), 1.0, atol=1e-12)
+    assert np.allclose(w.sum(1), 1.0, atol=1e-12)
+    assert np.all(w >= -1e-15)
+    # support matches the graph (plus the diagonal)
+    assert np.all((w > 1e-12)[~np.eye(g.n_nodes, dtype=bool)] <= (g.adjacency > 0)[~np.eye(g.n_nodes, dtype=bool)])
+
+
+def test_metropolis_weights_doubly_stochastic():
+    g = erdos_renyi(15, 0.3, seed=2)
+    w = metropolis_weights(g)
+    assert np.allclose(w.sum(0), 1.0)
+    assert np.allclose(w.sum(1), 1.0)
+
+
+def test_mixing_time_periodic_chain_is_none():
+    """Paper §V: a periodic chain has tau_mix -> inf (returned as None).
+    The 2-cycle swap matrix is the canonical periodic chain: e_1 W^t
+    alternates between the two vertices and never approaches uniform."""
+    pure = np.array([[0.0, 1.0], [1.0, 0.0]])
+    assert mixing_time(pure, max_t=2000) is None
+    # local-degree weights keep w_ii > 0 => aperiodic => mixes (slowly)
+    assert mixing_time(local_degree_weights(ring(20)), max_t=100000) is not None
+
+
+def test_mixing_time_ordering_with_connectivity():
+    """Denser ER graphs mix faster (paper Table II narrative)."""
+    t_dense = mixing_time(local_degree_weights(erdos_renyi(20, 0.5, seed=0)))
+    t_sparse = mixing_time(local_degree_weights(erdos_renyi(20, 0.1, seed=0)))
+    assert t_dense is not None and t_sparse is not None
+    assert t_dense <= t_sparse
+
+
+def test_spectral_gap_complete_is_best():
+    gaps = {
+        "complete": spectral_gap(local_degree_weights(complete(12))),
+        "er.5": spectral_gap(local_degree_weights(erdos_renyi(12, 0.5, seed=0))),
+        "ring": spectral_gap(local_degree_weights(ring(12))),
+    }
+    assert gaps["complete"] >= gaps["er.5"] >= gaps["ring"] > 0
+
+
+def test_star_center_degree():
+    g = star(20)
+    assert g.degrees[0] == 19
+    assert np.all(g.degrees[1:] == 1)
