@@ -11,6 +11,7 @@ import time
 import traceback
 
 MODULES = [
+    "sdot_fused",
     "table1_eigengap_p2p",
     "table2_connectivity",
     "table3_ring",

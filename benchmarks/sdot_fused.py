@@ -1,0 +1,120 @@
+"""Fused vs eager S-DOT/SA-DOT executor benchmark (Table-III/IV scale).
+
+Measures the tentpole win: one jitted lax.scan for a whole run vs the eager
+per-outer-iteration dispatch chain. Reports walltime (post-warmup for the
+fused path; the eager path has no meaningful warmup — SA-DOT budgets change
+every iteration, so its inner-gossip jit recompiles per distinct T_c) and
+host-interaction counts (dispatches + syncs per run, counted analytically
+from the execution structure: the eager loop issues one gossip dispatch, one
+host matrix_power, one ledger Python loop and one float() sync per outer
+iteration; the fused path issues one dispatch and one trailing sync total).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sdot_fused [--smoke]
+    PYTHONPATH=src python -m benchmarks.run sdot_fused
+
+Writes BENCH_sdot_fused.json next to the repo root (acceptance artifact).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.sdot import sdot
+from repro.core.topology import ring, star
+
+from .common import Row, sample_problem
+
+N, R, D = 20, 5, 20
+
+
+def _time(fn, repeats=1):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.q_nodes)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_case(label, engine, covs, q_true, schedule, t_outer, repeats):
+    run = lambda fused: sdot(covs=covs, engine=engine, r=R, t_outer=t_outer,
+                             schedule=schedule, q_true=q_true, fused=fused)
+    _time(lambda: run(True))                      # warmup: compile fused
+    fused_s, fres = _time(lambda: run(True), repeats)
+    eager_s, eres = _time(lambda: run(False))     # eager: 1 rep (it's slow)
+    np.testing.assert_allclose(fres.error_trace, eres.error_trace, rtol=1e-4,
+                               atol=1e-6)         # same math, always
+    return {
+        "case": label,
+        "t_outer": t_outer,
+        "fused_ms": round(fused_s * 1e3, 2),
+        "eager_ms": round(eager_s * 1e3, 2),
+        "speedup": round(eager_s / fused_s, 1),
+        # host interactions per run (see module docstring)
+        "eager_host_interactions": 4 * t_outer,
+        "fused_host_interactions": 2,
+        "final_err": float(fres.error_trace[-1]),
+    }
+
+
+def run_bench(smoke: bool = False):
+    t_outer = 20 if smoke else 100
+    repeats = 1 if smoke else 3
+    covs, q_true = sample_problem(d=D, r=R, n_nodes=N, n_per=500, gap=0.7,
+                                  seed=0)
+    cases = [
+        ("ring/sdot/Tc=50", DenseConsensus(ring(N)),
+         consensus_schedule("const", t_outer, t_max=50)),
+        ("ring/sadot/2t+1cap50", DenseConsensus(ring(N)),
+         consensus_schedule("lin2", t_outer, cap=50)),
+        ("star/sadot/2t+1cap50", DenseConsensus(star(N)),
+         consensus_schedule("lin2", t_outer, cap=50)),
+    ]
+    return [bench_case(label, eng, covs, q_true, sched, t_outer, repeats)
+            for label, eng, sched in cases]
+
+
+def run():
+    """benchmarks.run entry point."""
+    rows = []
+    for rec in run_bench(smoke=False):
+        rows.append(Row(
+            f"sdot_fused/{rec['case']}", rec["fused_ms"] * 1e3,
+            {"eager_ms": rec["eager_ms"], "speedup": rec["speedup"],
+             "final_err": f"{rec['final_err']:.2e}"}))
+    return rows
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "sdot_fused",
+        "scale": {"n_nodes": N, "d": D, "r": R},
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    print(json.dumps(out, indent=2))
+    # smoke results go to a sibling file so they never clobber the committed
+    # full-scale artifact
+    name = "BENCH_sdot_fused.smoke.json" if smoke else "BENCH_sdot_fused.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    worst = min(r["speedup"] for r in results)
+    if not smoke and worst < 5.0:
+        print(f"# WARNING: worst-case speedup {worst}x below the 5x bar")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

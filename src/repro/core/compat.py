@@ -1,0 +1,42 @@
+"""JAX version-compatibility shims.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to ``jax.shard_map``
+(with ``check_rep``/``auto`` renamed to ``check_vma``/complement-of-
+``axis_names``). This module exposes one callable with the *new* keyword
+surface that works on both API generations, so the rest of the codebase can
+write modern call sites unconditionally.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+__all__ = ["shard_map", "LEGACY_SHARD_MAP"]
+
+# True on jax < 0.5 (experimental shard_map). The legacy partitioner CHECK-
+# crashes (hlo_sharding_util IsManualSubgroup) on sharding constraints that
+# name auto axes inside a partial-auto manual region; callers use this flag
+# to drop such perf-hint constraints there.
+LEGACY_SHARD_MAP = not hasattr(jax, "shard_map")
+
+if not LEGACY_SHARD_MAP:
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs,
+                  axis_names: Optional[Set[str]] = None,
+                  check_vma: Optional[bool] = None, **kwargs):
+        """New-API facade over the pre-0.5 experimental shard_map.
+
+        ``axis_names`` (manual axes) maps to the legacy ``auto`` argument
+        (its complement); ``check_vma`` maps to ``check_rep``.
+        """
+        legacy = {}
+        if axis_names is not None:
+            legacy["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if check_vma is not None:
+            legacy["check_rep"] = check_vma
+        legacy.update(kwargs)
+        return _legacy_shard_map(f, mesh, in_specs, out_specs, **legacy)

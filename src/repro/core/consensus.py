@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .compat import shard_map
 from .topology import Graph, local_degree_weights, ring
 from .metrics import CommLedger
 
@@ -35,6 +36,9 @@ __all__ = [
     "SpmdConsensus",
     "consensus_schedule",
     "debias_weights",
+    "debias_table",
+    "debiased_gossip",
+    "masked_gossip",
 ]
 
 
@@ -47,6 +51,62 @@ def _dense_gossip(w: jnp.ndarray, z_stack: jnp.ndarray, t_c: int) -> jnp.ndarray
 
     out, _ = jax.lax.scan(round_, z_stack, None, length=t_c)
     return out
+
+
+def masked_gossip(w: jnp.ndarray, z_stack: jnp.ndarray, t_c: jnp.ndarray,
+                  t_max: int) -> jnp.ndarray:
+    """``t_c`` gossip rounds where ``t_c`` is a *traced* value (<= t_max).
+
+    The scan always runs ``t_max`` rounds and masks rounds past t_c, so a
+    varying per-outer-iteration consensus budget stays inside one compiled
+    program (this is the inner scan of the fused S-DOT executor). Round
+    i < t_c applies exactly the same einsum as _dense_gossip, in the same
+    order — results match the eager engine to float-op identity.
+    """
+    wz = w.astype(z_stack.dtype)
+
+    def round_(z, i):
+        z_next = jnp.einsum("ij,j...->i...", wz, z)
+        return jnp.where(i < t_c, z_next, z), None
+
+    out, _ = jax.lax.scan(round_, z_stack, jnp.arange(t_max))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def debias_table(w: jnp.ndarray, t_max: int) -> jnp.ndarray:
+    """Device-side debias weights [W^t e_1] for every t in 0..t_max at once.
+
+    Returns (t_max + 1, N): row t equals ``debias_weights(w, t)`` (same
+    1e-6 clamp), computed as one cumulative scan of W^T matvecs instead of a
+    host-side ``np.linalg.matrix_power`` per outer iteration. Row t is
+    indexed *inside* the fused executor's outer scan by the traced budget.
+    """
+    n = w.shape[0]
+    e1 = jnp.zeros((n,), w.dtype).at[0].set(1.0)
+
+    def step(p, _):
+        p_next = w.T @ p
+        return p_next, p_next
+
+    _, rows = jax.lax.scan(step, e1, None, length=t_max)
+    table = jnp.concatenate([e1[None], rows], axis=0)
+    return jnp.maximum(table, 1e-6)
+
+
+def debiased_gossip(w: jnp.ndarray, table: jnp.ndarray, z_stack: jnp.ndarray,
+                    t_c: jnp.ndarray, t_max: int) -> jnp.ndarray:
+    """masked_gossip + debias-by-table-row: the fused executor's inner step.
+
+    Fully traceable (t_c may be a traced budget from the schedule array);
+    numerically this is run_debiased with the host matrix_power replaced by
+    table[t_c]. Free function so one jit cache serves every engine with the
+    same shapes.
+    """
+    out = masked_gossip(w, z_stack, t_c, t_max)
+    scale = table[t_c]                                       # (N,)
+    bshape = (-1,) + (1,) * (z_stack.ndim - 1)
+    return out / scale.astype(out.dtype).reshape(bshape)
 
 
 def debias_weights(w: np.ndarray, t_c: int) -> np.ndarray:
@@ -105,6 +165,7 @@ class DenseConsensus:
         if self.weights is None:
             self.weights = local_degree_weights(self.graph)
         self._w = jnp.asarray(self.weights)
+        self._debias_tables = {}  # t_max -> (t_max+1, N) device table
 
     def run(self, z_stack: jnp.ndarray, t_c: int) -> jnp.ndarray:
         """t_c gossip rounds on stacked blocks z_stack: (N, ...)."""
@@ -121,6 +182,36 @@ class DenseConsensus:
                 ledger.log_gossip_round(self.graph.adjacency, payload)
         bshape = (-1,) + (1,) * (z_stack.ndim - 1)
         return out / jnp.asarray(scale, out.dtype).reshape(bshape)
+
+    def debias_table(self, t_max: int) -> jnp.ndarray:
+        """Cached (t_max + 1, N) table of [W^t e_1] rows (see debias_table)."""
+        t_max = int(t_max)
+        if t_max not in self._debias_tables:
+            self._debias_tables[t_max] = debias_table(self._w, t_max)
+        return self._debias_tables[t_max]
+
+    def run_debiased_scan(self, z_stack: jnp.ndarray, t_c: jnp.ndarray, *,
+                          t_max: int,
+                          table: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Traceable twin of run_debiased, usable inside jit / lax.scan.
+
+        ``t_c`` may be a traced int32 (the per-outer-iteration budget pulled
+        from the schedule array); ``t_max`` is the static scan length (the
+        schedule's max). PRECONDITION: t_c <= t_max — the masked scan caps
+        gossip at t_max rounds and the table row gather clamps, so a larger
+        t_c would silently return the t_max answer (checked here for
+        concrete t_c; traced callers are responsible, as the fused executor
+        is by construction). Gossip is a masked scan and the debias divides
+        by a row of the precomputed device table — no host work, no
+        recompile per distinct t_c. Accounting is NOT done here: the fused
+        executor logs the whole schedule in closed form
+        (CommLedger.log_gossip_rounds).
+        """
+        if isinstance(t_c, (int, np.integer)) and t_c > t_max:
+            raise ValueError(f"t_c={t_c} exceeds the scan length t_max={t_max}")
+        if table is None:
+            table = self.debias_table(t_max)
+        return debiased_gossip(self._w, table, z_stack, t_c, t_max)
 
 
 class SpmdConsensus:
@@ -209,7 +300,7 @@ class SpmdConsensus:
             return zz[None]
 
         spec = P(axis)
-        fn = jax.shard_map(local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec)
+        fn = shard_map(local_fn, mesh=mesh, in_specs=(spec,), out_specs=spec)
         return jax.jit(fn)
 
 

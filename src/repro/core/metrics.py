@@ -8,11 +8,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
     "subspace_error",
+    "mean_subspace_error",
     "projector_distance",
     "principal_angles",
     "CommLedger",
@@ -28,6 +30,16 @@ def subspace_error(q_true, q_hat) -> jnp.ndarray:
     s = jnp.linalg.svd(q_true.T @ q_hat, compute_uv=False)
     r = q_true.shape[1]
     return jnp.mean(1.0 - jnp.clip(s[:r], 0.0, 1.0) ** 2)
+
+
+def mean_subspace_error(q_true, q_nodes) -> jnp.ndarray:
+    """Mean of eq. (11) over stacked per-node estimates q_nodes: (N, d, r).
+
+    Traceable (SVD of N tiny r x r matrices) — the fused S-DOT executor
+    evaluates this *inside* its outer scan so the whole error trace comes
+    back as one device array instead of T_o per-iteration host syncs.
+    """
+    return jax.vmap(lambda q: subspace_error(q_true, q))(q_nodes).mean()
 
 
 def projector_distance(q_true, q_hat) -> jnp.ndarray:
@@ -68,6 +80,21 @@ class CommLedger:
 
     def log_gossip_round(self, adjacency: np.ndarray, payload_elems: int) -> None:
         sends = float(adjacency.sum())  # directed messages this round
+        self.p2p += sends
+        self.matrices += sends
+        self.scalars += sends * payload_elems
+
+    def log_gossip_rounds(self, schedule: np.ndarray, adjacency: np.ndarray,
+                          payload_elems: int) -> None:
+        """Closed-form accounting for a whole run's consensus schedule.
+
+        Equivalent to calling log_gossip_round once per round of every outer
+        iteration (all increments are equal, so the sum is exact), but O(1)
+        instead of O(sum schedule) Python-loop iterations — this is what the
+        fused executor logs after its single device dispatch.
+        """
+        rounds = float(np.asarray(schedule, dtype=np.float64).sum())
+        sends = float(adjacency.sum()) * rounds
         self.p2p += sends
         self.matrices += sends
         self.scalars += sends * payload_elems

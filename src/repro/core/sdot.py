@@ -10,19 +10,33 @@ Engines:
     the paper's tables.
   * ``sdot_spmd_step`` — the building block used when node == TPU pod; exact
     psum intra-pod, gossip inter-pod (see optim/psa_compress.py).
+
+Execution modes (``fused`` flag):
+  * fused (default) — the ENTIRE run is one jitted ``lax.scan`` over outer
+    iterations: per-iteration consensus budgets are read from the schedule
+    array, the inner gossip is a masked scan (so varying T_{c,t} stays
+    traceable), debiasing indexes a precomputed device table of W^t e_1
+    rows, and the error trace is computed on device and returned as one
+    (T_o,) array. Zero host syncs per iteration, one compile per
+    (shapes, t_max) signature, communication accounted in closed form.
+  * eager (``fused=False``) — the original Python loop, one dispatch chain
+    per outer iteration. Kept as the bit-level correctness oracle
+    (tests/test_sdot_fused.py) and for step-by-step debugging.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .consensus import DenseConsensus, consensus_schedule
+from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .linalg import cholesky_qr2, orthonormal_init
-from .metrics import CommLedger, subspace_error
+from .metrics import CommLedger, mean_subspace_error, subspace_error
+from ..kernels import ops as kops
 
 __all__ = ["SDOTResult", "sdot", "sadot", "local_cov_apply"]
 
@@ -45,14 +59,61 @@ def local_cov_apply(covs: jnp.ndarray, q_nodes: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("nde,ner->ndr", covs, q_nodes)
 
 
+def _stack_data(xs: Sequence[jnp.ndarray]):
+    """Zero-pad ragged node blocks (d, n_i) to one (N, d, n_max) stack.
+
+    Padding is exact for the gram apply (padded columns are null in both
+    matmuls); the true n_i go along for the normalizer.
+    """
+    n_true = np.array([x.shape[1] for x in xs], np.float32)
+    n_max = int(n_true.max())
+    stack = jnp.stack([
+        jnp.pad(x, ((0, 0), (0, n_max - x.shape[1]))) for x in xs])
+    return stack, jnp.asarray(n_true)
+
+
 def _make_data_apply(xs: Sequence[jnp.ndarray]) -> Callable:
-    """Gram-free Step 5: Z_i = X_i (X_i^T Q_i), never forming M_i (d x d)."""
+    """Gram-free Step 5: Z_i = X_i (X_i^T Q_i), never forming M_i (d x d).
+
+    All nodes are served by ONE batched gram-apply dispatch (Pallas
+    (node, column-block) kernel on TPU, fused einsum elsewhere) instead of a
+    per-node Python loop — mandatory for the fused executor, and fewer
+    dispatches for the eager one too.
+    """
+    stack, n_true = _stack_data(xs)
 
     def apply(q_nodes):
-        zs = [x @ (x.T @ q_nodes[i]) / x.shape[1] for i, x in enumerate(xs)]
-        return jnp.stack(zs, axis=0)
+        return kops.batched_gram_apply(stack, q_nodes, n_true)
 
     return apply
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
+def _fused_run(operand, w, table, sched, q0_nodes, q_true, *, mode: str,
+               t_max: int, trace_err: bool):
+    """One compiled program for a whole S-DOT/SA-DOT run.
+
+    operand: covs (N,d,d) for mode='cov'; (x_stack, n_true) for mode='data'.
+    sched: (T_o,) int32 consensus budgets; t_max: static max budget (inner
+    masked-scan length); table: (t_max+1, N) debias rows [W^t e_1].
+    Returns (q_nodes, (T_o,) error trace — zeros when trace_err is False).
+    """
+
+    def apply_fn(q_nodes):
+        if mode == "cov":
+            return local_cov_apply(operand, q_nodes)
+        x_stack, n_true = operand
+        return kops.batched_gram_apply(x_stack, q_nodes, n_true)
+
+    def outer(q_nodes, t_c):
+        z0 = apply_fn(q_nodes)                                   # (N, d, r)
+        v = debiased_gossip(w, table, z0, t_c, t_max)
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)      # per-node QR
+        err = (mean_subspace_error(q_true, q_new) if trace_err
+               else jnp.float32(0.0))
+        return q_new, err
+
+    return jax.lax.scan(outer, q0_nodes, sched)
 
 
 def sdot(
@@ -67,47 +128,79 @@ def sdot(
     q_init: Optional[jnp.ndarray] = None,
     q_true: Optional[jnp.ndarray] = None,
     seed: int = 0,
+    fused: bool = True,
 ) -> SDOTResult:
     """Run S-DOT / SA-DOT over a simulated network.
 
     Exactly one of ``covs`` (N, d, d) or ``data`` (list of (d, n_i)) must be
     given. ``schedule`` overrides ``t_c`` (constant) and makes this SA-DOT.
+    ``fused=True`` (default) executes the whole run as a single compiled
+    scan; ``fused=False`` is the eager per-iteration oracle.
     """
     if (covs is None) == (data is None):
         raise ValueError("provide exactly one of covs / data")
     n = engine.graph.n_nodes
     if covs is not None:
         d = covs.shape[1]
-        apply_fn = lambda q: local_cov_apply(covs, q)
         if covs.shape[0] != n:
             raise ValueError("covs leading dim must equal number of nodes")
     else:
         d = data[0].shape[0]
-        apply_fn = _make_data_apply(data)
         if len(data) != n:
             raise ValueError("need one data block per node")
 
     if schedule is None:
         schedule = consensus_schedule("const", t_outer, t_max=t_c)
+    elif len(schedule) < t_outer:
+        # fail loudly: the fused scan would silently truncate the run and
+        # the eager loop would IndexError mid-flight
+        raise ValueError(f"schedule has {len(schedule)} entries but "
+                         f"t_outer={t_outer}")
     if q_init is None:
         q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     # all nodes start from the same Q_init (Theorem 1 requires it)
     q_nodes = jnp.broadcast_to(q_init[None], (n, d, r))
 
     ledger = CommLedger()
-    errs = [] if q_true is not None else None
+    payload = d * r
 
-    for t in range(t_outer):
-        z0 = apply_fn(q_nodes)                                   # (N, d, r)
-        v = engine.run_debiased(z0, int(schedule[t]), ledger)    # approx sum_j M_j Q_j
-        q_nodes = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)    # per-node QR
-        if errs is not None:
-            e = jax.vmap(lambda qq: subspace_error(q_true, qq))(q_nodes)
-            errs.append(float(e.mean()))
+    # engines without the scan interface (e.g. AsyncConsensus, whose round
+    # matrices are resampled on the host per call) run eagerly
+    if fused and not hasattr(engine, "debias_table"):
+        fused = False
+
+    if fused:
+        t_max = int(np.asarray(schedule[:t_outer]).max()) if t_outer else 0
+        table = engine.debias_table(t_max)
+        sched_dev = jnp.asarray(np.asarray(schedule[:t_outer]), jnp.int32)
+        if covs is not None:
+            operand, mode = covs, "cov"
+        else:
+            operand, mode = _stack_data(data), "data"
+        trace_err = q_true is not None
+        q_arg = q_true if trace_err else jnp.zeros((d, r), q_nodes.dtype)
+        q_nodes, errs = _fused_run(
+            operand, engine._w, table, sched_dev, q_nodes, q_arg,
+            mode=mode, t_max=t_max, trace_err=trace_err)
+        ledger.log_gossip_rounds(schedule[:t_outer], engine.graph.adjacency,
+                                 payload)
+        error_trace = np.asarray(errs) if trace_err else None
+    else:
+        apply_fn = ((lambda q: local_cov_apply(covs, q)) if covs is not None
+                    else _make_data_apply(data))
+        errs = [] if q_true is not None else None
+        for t in range(t_outer):
+            z0 = apply_fn(q_nodes)                                # (N, d, r)
+            v = engine.run_debiased(z0, int(schedule[t]), ledger)
+            q_nodes = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+            if errs is not None:
+                e = jax.vmap(lambda qq: subspace_error(q_true, qq))(q_nodes)
+                errs.append(float(e.mean()))
+        error_trace = np.asarray(errs) if errs is not None else None
 
     return SDOTResult(
         q_nodes=q_nodes,
-        error_trace=np.asarray(errs) if errs is not None else None,
+        error_trace=error_trace,
         consensus_trace=np.asarray(schedule[:t_outer]),
         ledger=ledger,
     )

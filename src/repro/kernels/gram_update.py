@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["gram_apply_pallas"]
+__all__ = ["gram_apply_pallas", "batched_gram_apply_pallas"]
 
 
 def _gram_kernel(x_ref, q_ref, v_ref):
@@ -71,4 +71,61 @@ def gram_apply_pallas(x: jnp.ndarray, q: jnp.ndarray, *, block_n: int = 512,
         out_shape=jax.ShapeDtypeStruct((d, r), jnp.float32),
         interpret=interpret,
     )(x, q)
+    return out
+
+
+def _batched_gram_kernel(x_ref, q_ref, v_ref):
+    """One (i, j) grid step: accumulate X_{i,b} (X_{i,b}^T Q_i) into V_i.
+
+    The column-block index j is the fast (innermost) grid dimension, so each
+    node's output block is revisited j = 0..n_blocks-1 consecutively —
+    sequential TPU grids make the accumulation safe; init happens at j == 0.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    x = x_ref[0]            # (d, bn) — node i's column block
+    q = q_ref[0]            # (d, r)  — node i's iterate
+    s = jax.lax.dot_general(
+        x, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b^T Q: (bn, r)
+    v = jax.lax.dot_general(
+        x, s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b S: (d, r)
+    v_ref[0, ...] += v.astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def batched_gram_apply_pallas(x_stack: jnp.ndarray, q_stack: jnp.ndarray, *,
+                              block_n: int = 512,
+                              interpret: bool = False) -> jnp.ndarray:
+    """V[i] = X_i (X_i^T Q_i) for all nodes in one kernel launch.
+
+    x_stack: (N, d, n) zero-padded node data (ragged n_i padded to a common
+    n — exact, padded columns contribute X_b S_b = 0); q_stack: (N, d, r).
+    Grid is (node, column-block); one launch replaces N separate gram-apply
+    dispatches, which is what lets the whole S-DOT scan body stay fused.
+    Call through ops.batched_gram_apply, which pads and normalizes by the
+    true per-node sample counts.
+    """
+    n_nodes, d, n = x_stack.shape
+    n2, d2, r = q_stack.shape
+    assert n_nodes == n2 and d == d2, "x_stack and q_stack must align"
+    assert n % block_n == 0, "ops.py pads n to a block multiple"
+    n_blocks = n // block_n
+
+    out = pl.pallas_call(
+        _batched_gram_kernel,
+        grid=(n_nodes, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, d, block_n), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, d, r), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, r), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, d, r), jnp.float32),
+        interpret=interpret,
+    )(x_stack, q_stack)
     return out

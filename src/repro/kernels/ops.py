@@ -18,9 +18,10 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .gram_qr import gram_qr_pallas
-from .gram_update import gram_apply_pallas
+from .gram_update import batched_gram_apply_pallas, gram_apply_pallas
 
-__all__ = ["gram_apply", "gram_qr", "flash_attention", "on_tpu"]
+__all__ = ["gram_apply", "batched_gram_apply", "gram_qr", "flash_attention",
+           "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -52,6 +53,40 @@ def gram_apply(x: jnp.ndarray, q: jnp.ndarray, *, block_n: int = 512,
     xp = _pad_to(x, 1, block_n)
     v = gram_apply_pallas(xp, q, block_n=block_n, interpret=interp)
     return (v / n).astype(q.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "use_pallas", "interpret"))
+def batched_gram_apply(x_stack: jnp.ndarray, q_stack: jnp.ndarray,
+                       n_true: jnp.ndarray, *, block_n: int = 512,
+                       use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """V[i] = X_i (X_i^T Q_i) / n_i — batched Step 5 for all nodes at once.
+
+    x_stack: (N, d, n) zero-padded blocks, q_stack: (N, d, r), n_true: (N,)
+    true per-node sample counts (zero-padding is exact; the normalizer uses
+    n_true). This is the dispatch point for the fused S-DOT executor's raw-
+    data path: one call per outer iteration regardless of N.
+
+    ``use_pallas=None`` auto-selects: the Pallas (node, column-block) kernel
+    on TPU, the fused-einsum oracle elsewhere (interpret-mode Pallas unrolls
+    the grid at trace time, which bloats the fused scan's XLA program on
+    CPU for no speed win). Pass use_pallas=True + interpret=True in tests to
+    exercise the kernel itself off-TPU.
+    """
+    n_nodes, d, n = x_stack.shape
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    vmem_bytes = (d * block_n + 2 * d * q_stack.shape[-1]) * 4
+    if not use_pallas or vmem_bytes > 8 * 2**20:
+        return ref.batched_gram_apply_ref(x_stack, q_stack, n_true)
+    interp = (not on_tpu()) if interpret is None else interpret
+    xp = _pad_to(x_stack, 2, block_n)
+    v = batched_gram_apply_pallas(xp, q_stack, block_n=block_n,
+                                  interpret=interp)
+    acc = v.dtype
+    v = v / n_true.astype(acc)[:, None, None]
+    return v.astype(q_stack.dtype)
 
 
 @functools.partial(

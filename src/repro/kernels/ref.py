@@ -3,7 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["gram_apply_ref", "flash_attention_ref", "gram_qr_ref"]
+__all__ = ["gram_apply_ref", "batched_gram_apply_ref", "flash_attention_ref",
+           "gram_qr_ref"]
 
 
 def gram_apply_ref(x: jnp.ndarray, q: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
@@ -17,6 +18,23 @@ def gram_apply_ref(x: jnp.ndarray, q: jnp.ndarray, normalize: bool = True) -> jn
     if normalize:
         v = v / x.shape[1]
     return v.astype(q.dtype)
+
+
+def batched_gram_apply_ref(x_stack: jnp.ndarray, q_stack: jnp.ndarray,
+                           n_true: jnp.ndarray) -> jnp.ndarray:
+    """V[i] = X_i (X_i^T Q_i) / n_i over stacked nodes.
+
+    x_stack: (N, d, n) zero-padded blocks (exact: padded columns are null in
+    both matmuls), q_stack: (N, d, r), n_true: (N,) real per-node sample
+    counts for the normalizer. One fused einsum pair — this is also the CPU
+    execution path of ops.batched_gram_apply.
+    """
+    acc = jnp.promote_types(x_stack.dtype, jnp.float32)
+    x32 = x_stack.astype(acc)
+    s = jnp.einsum("idn,idr->inr", x32, q_stack.astype(acc))
+    v = jnp.einsum("idn,inr->idr", x32, s)
+    v = v / n_true.astype(acc)[:, None, None]
+    return v.astype(q_stack.dtype)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

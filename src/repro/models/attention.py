@@ -34,20 +34,49 @@ def blockwise_attention(q, k, v, *, causal: bool = True,
     assert sq % q_chunk == 0 and skv % k_chunk == 0
     nq, nk = sq // q_chunk, skv // k_chunk
     scale = hd ** -0.5
+
+    if nq == 1 and nk == 1:
+        # single-chunk fast path: same ops as one (q_step, k_step) pass, no
+        # scans — less dispatch for short sequences, and the only form whose
+        # VJP the legacy (jax<0.5) partial-auto partitioner can partition
+        # (scan VJPs CHECK-crash there; see core/compat.py)
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, _NEG)
+        m = jnp.maximum(_NEG, logits.max(-1, keepdims=True))
+        p = jnp.where(mask[None, None], jnp.exp(logits - m), 0.0)
+        l = p.sum(-1, keepdims=True)
+        l = jnp.where(l == 0.0, 1.0, l)
+        acc = jnp.einsum("bhqk,bhkd->bhqd", p, v,
+                         preferred_element_type=jnp.float32)
+        return (acc / l).astype(q.dtype)
+
     qb = q.reshape(b, h, nq, q_chunk, hd).transpose(2, 0, 1, 3, 4)
     kb = k.reshape(b, h, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
     vb = v.reshape(b, h, nk, k_chunk, hd).transpose(2, 0, 1, 3, 4)
 
-    def q_step(_, qi_blk):
-        qi, qblk = qi_blk
+    # Chunk indices ride in the scan CARRY (counters), not as iota xs:
+    # scanning over a jnp.arange CHECK-crashes the legacy (jax<0.5) SPMD
+    # partitioner inside partial-auto shard_map regions (IsManualSubgroup,
+    # iota device-group expansion) — see core/compat.py. Counter carries
+    # compute the identical positions.
+    def q_step(qi, qblk):
         qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset      # (qc,)
-        init = (jnp.full((b, h, q_chunk, 1), _NEG, jnp.float32),
+        init = (jnp.int32(0),
+                jnp.full((b, h, q_chunk, 1), _NEG, jnp.float32),
                 jnp.zeros((b, h, q_chunk, 1), jnp.float32),
                 jnp.zeros((b, h, q_chunk, hd), jnp.float32))
 
-        def k_step(carry, ki_blk):
-            m, l, acc = carry
-            ki, kblk, vblk = ki_blk
+        def k_step(carry, kv_blk):
+            ki, m, l, acc = carry
+            kblk, vblk = kv_blk
             kpos = ki * k_chunk + jnp.arange(k_chunk)              # (kc,)
             logits = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
                                 preferred_element_type=jnp.float32) * scale
@@ -63,14 +92,13 @@ def blockwise_attention(q, k, v, *, causal: bool = True,
             l_new = alpha * l + p.sum(-1, keepdims=True)
             acc_new = alpha * acc + jnp.einsum(
                 "bhqk,bhkd->bhqd", p, vblk, preferred_element_type=jnp.float32)
-            return (m_new, l_new, acc_new), None
+            return (ki + 1, m_new, l_new, acc_new), None
 
-        (m, l, acc), _ = jax.lax.scan(
-            k_step, init, (jnp.arange(nk), kb, vb))
+        (_, m, l, acc), _ = jax.lax.scan(k_step, init, (kb, vb))
         l = jnp.where(l == 0.0, 1.0, l)
-        return None, (acc / l).astype(q.dtype)
+        return qi + 1, (acc / l).astype(q.dtype)
 
-    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    _, outs = jax.lax.scan(q_step, jnp.int32(0), qb)
     return outs.transpose(1, 2, 0, 3, 4).reshape(b, h, sq, hd)
 
 

@@ -1,0 +1,106 @@
+"""Hypothesis shape/dtype sweeps for the Pallas kernels.
+
+Kept separate from tests/test_kernels.py so the deterministic kernel tests
+collect and run even where ``hypothesis`` is not installed (the property
+sweeps are skipped there, not errored).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    d=st.sampled_from([16, 64, 128]),
+    n=st.integers(10, 700),
+    r=st.sampled_from([4, 16, 128]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 1000),
+)
+def test_gram_apply_matches_ref(d, n, r, dtype, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (d, n), jnp.float32).astype(dtype)
+    q = jax.random.normal(k2, (d, r), jnp.float32).astype(dtype)
+    out = ops.gram_apply(x, q, block_n=256, use_pallas=True)
+    want = ref.gram_apply_ref(x, q)
+    tol = 2e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_nodes=st.sampled_from([2, 3, 5]),
+    d=st.sampled_from([16, 64]),
+    n=st.integers(10, 600),
+    r=st.sampled_from([4, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_batched_gram_apply_matches_per_node(n_nodes, d, n, r, seed):
+    """Batched (node, column-block) kernel == per-node oracle, ragged n_i."""
+    rng = np.random.default_rng(seed)
+    n_true = rng.integers(max(1, n // 2), n + 1, size=n_nodes)
+    n_max = int(n_true.max())
+    x_stack = np.zeros((n_nodes, d, n_max), np.float32)
+    for i, ni in enumerate(n_true):
+        x_stack[i, :, :ni] = rng.standard_normal((d, ni))
+    q = jnp.asarray(rng.standard_normal((n_nodes, d, r)), jnp.float32)
+    out = ops.batched_gram_apply(jnp.asarray(x_stack), q,
+                                 jnp.asarray(n_true, jnp.float32),
+                                 block_n=256, use_pallas=True, interpret=True)
+    for i, ni in enumerate(n_true):
+        want = ref.gram_apply_ref(jnp.asarray(x_stack[i, :, :ni]), q[i])
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    hq=st.sampled_from([2, 4]),
+    gqa=st.sampled_from([1, 2]),
+    sq=st.sampled_from([128, 256, 300]),
+    hd=st.sampled_from([32, 64]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 100),
+)
+def test_flash_attention_matches_ref(b, hq, gqa, sq, hd, dtype, seed):
+    hkv = hq // gqa
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, hkv, sq, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, hkv, sq, hd), jnp.float32).astype(dtype)
+    out = ops.flash_attention(q, k, v, causal=True, use_pallas=True)
+    kx = jnp.repeat(k, gqa, 1)
+    vx = jnp.repeat(v, gqa, 1)
+    want = ref.flash_attention_ref(q, kx, vx, causal=True)
+    tol = 3e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    d=st.integers(10, 3000),
+    r=st.sampled_from([2, 8, 64]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 1000),
+)
+def test_gram_qr_matches_ref(d, r, dtype, seed):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (d, r),
+                          jnp.float32).astype(dtype)
+    out = ops.gram_qr(v, block_d=512, use_pallas=True)
+    want = ref.gram_qr_ref(v)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * max(d, 1))

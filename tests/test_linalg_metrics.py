@@ -1,9 +1,9 @@
-"""Numerics (CholeskyQR2) and subspace metrics, incl. property-based sweeps."""
+"""Numerics (CholeskyQR2) and subspace metrics. Deterministic cases only —
+the hypothesis sweep lives in test_linalg_property.py so this module collects
+without hypothesis."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.linalg import cholesky_qr, cholesky_qr2, eigh_topr, \
     orthonormal_init
@@ -11,17 +11,14 @@ from repro.core.metrics import (principal_angles, projector_distance,
                                 subspace_error)
 
 
-@settings(max_examples=25, deadline=None)
-@given(d=st.integers(4, 64), r=st.integers(1, 8), seed=st.integers(0, 10_000))
-def test_cholesky_qr2_orthonormal_property(d, r, seed):
-    r = min(r, d)
-    v = jax.random.normal(jax.random.PRNGKey(seed), (d, r)) * 10.0
-    q, rr = cholesky_qr2(v)
-    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(r), atol=1e-5)
-    np.testing.assert_allclose(np.asarray(q @ rr), np.asarray(v), rtol=2e-4,
-                               atol=2e-4)
-    # R upper triangular
-    assert np.allclose(np.tril(np.asarray(rr), -1), 0.0, atol=1e-5)
+def test_cholesky_qr2_orthonormal_deterministic():
+    for d, r, seed in ((4, 1, 0), (32, 5, 1), (64, 8, 2)):
+        v = jax.random.normal(jax.random.PRNGKey(seed), (d, r)) * 10.0
+        q, rr = cholesky_qr2(v)
+        np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(r), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(q @ rr), np.asarray(v),
+                                   rtol=2e-4, atol=2e-4)
+        assert np.allclose(np.tril(np.asarray(rr), -1), 0.0, atol=1e-5)
 
 
 def test_cholesky_qr2_ill_conditioned():
@@ -36,7 +33,11 @@ def test_cholesky_qr2_ill_conditioned():
 def test_cholesky_qr_one_pass_weaker():
     rng = np.random.default_rng(1)
     v = rng.standard_normal((50, 4))
-    v[:, 3] = v[:, 0] + 1e-4 * v[:, 3]
+    # cond ~1e3: inside the fp32 CholeskyQR validity range (cond^2 eps < 1)
+    # so the one-pass result is finite yet visibly less orthonormal; the
+    # original 1e-4 perturbation produced NaN for BOTH passes (cond^2 eps > 1)
+    # and the assert compared nan <= nan
+    v[:, 3] = v[:, 0] + 1e-3 * v[:, 3]
     v = jnp.asarray(v, jnp.float32)
     q1, _ = cholesky_qr(v, eps=1e-12)
     q2, _ = cholesky_qr2(v)

@@ -1,0 +1,23 @@
+"""Hypothesis sweep for CholeskyQR2 — split out of test_linalg_metrics.py so
+the deterministic numerics tests collect even without ``hypothesis``."""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.linalg import cholesky_qr2
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(4, 64), r=st.integers(1, 8), seed=st.integers(0, 10_000))
+def test_cholesky_qr2_orthonormal_property(d, r, seed):
+    r = min(r, d)
+    v = jax.random.normal(jax.random.PRNGKey(seed), (d, r)) * 10.0
+    q, rr = cholesky_qr2(v)
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(q @ rr), np.asarray(v), rtol=2e-4,
+                               atol=2e-4)
+    # R upper triangular
+    assert np.allclose(np.tril(np.asarray(rr), -1), 0.0, atol=1e-5)

@@ -1,0 +1,194 @@
+"""Fused (single-scan) S-DOT/SA-DOT executor vs the eager oracle.
+
+The fused path must reproduce the eager per-iteration loop to float-op
+identity: same gossip op order, debias weights from the device table instead
+of host matrix_power, error trace computed on device. Tolerances are tight
+(the only fp differences are f32 matvec-chain vs f64 matrix_power debias —
+and debias is a per-node positive scalar, which the QR cancels entirely).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import (DenseConsensus, consensus_schedule,
+                                  debias_table, debias_weights)
+from repro.core.linalg import orthonormal_init
+from repro.core.metrics import CommLedger
+from repro.core.sdot import sadot, sdot
+from repro.core.topology import erdos_renyi, ring, star
+
+
+def _run_pair(engine, *, covs=None, data=None, schedule=None, t_c=50,
+              t_outer=20, q_init, q_true, r):
+    eager = sdot(covs=covs, data=data, engine=engine, r=r, t_outer=t_outer,
+                 schedule=schedule, t_c=t_c, q_init=q_init, q_true=q_true,
+                 fused=False)
+    fused = sdot(covs=covs, data=data, engine=engine, r=r, t_outer=t_outer,
+                 schedule=schedule, t_c=t_c, q_init=q_init, q_true=q_true,
+                 fused=True)
+    return eager, fused
+
+
+@pytest.fixture(scope="module")
+def topologies(psa_problem):
+    n = psa_problem["n_nodes"]
+    return {
+        "er": DenseConsensus(erdos_renyi(n, 0.5, seed=1)),
+        "ring": DenseConsensus(ring(n)),
+    }
+
+
+@pytest.mark.parametrize("topo", ["er", "ring"])
+@pytest.mark.parametrize("sched_kind", ["const", "lin2"])
+def test_fused_matches_eager_covs(psa_problem, topologies, topo, sched_kind):
+    p = psa_problem
+    eng = topologies[topo]
+    q0 = orthonormal_init(jax.random.PRNGKey(3), p["d"], p["r"])
+    sched = (None if sched_kind == "const"
+             else consensus_schedule("lin2", 20, cap=50))
+    eager, fused = _run_pair(eng, covs=p["covs"], schedule=sched, t_c=50,
+                             t_outer=20, q_init=q0, q_true=p["q_true"],
+                             r=p["r"])
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused.q_nodes),
+                               np.asarray(eager.q_nodes), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_array_equal(fused.consensus_trace,
+                                  eager.consensus_trace)
+
+
+@pytest.mark.parametrize("topo", ["er", "ring"])
+def test_fused_matches_eager_raw_data(psa_problem, topologies, topo):
+    """Gram-free data path: batched gram-apply inside the scan == the eager
+    per-node list comprehension."""
+    p = psa_problem
+    eng = topologies[topo]
+    q0 = orthonormal_init(jax.random.PRNGKey(4), p["d"], p["r"])
+    eager, fused = _run_pair(eng, data=p["blocks"], t_c=50, t_outer=15,
+                             q_init=q0, q_true=p["q_true"], r=p["r"])
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_fused_matches_eager_ragged_data(topologies):
+    """Ragged n_i: zero-padded stacking must not change the fused result."""
+    rng = np.random.default_rng(0)
+    d, r, n = 12, 3, 10
+    sizes = rng.integers(50, 200, size=n)
+    blocks = [jnp.asarray(rng.standard_normal((d, s)), jnp.float32)
+              for s in sizes]
+    covs = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    from repro.core.linalg import eigh_topr
+    _, q_true = eigh_topr(covs.sum(0), r)
+    eng = topologies["er"]
+    q0 = orthonormal_init(jax.random.PRNGKey(5), d, r)
+    eager, fused = _run_pair(eng, data=blocks, t_c=30, t_outer=12, q_init=q0,
+                             q_true=q_true, r=r)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_sadot_fused_default_converges(psa_problem, topologies):
+    """sadot (fused default) still meets the paper's convergence bar."""
+    p = psa_problem
+    res = sadot(covs=p["covs"], engine=topologies["er"], r=p["r"], t_outer=60,
+                schedule_kind="lin2", cap=50, q_true=p["q_true"])
+    assert res.error_trace[-1] < 5e-6
+
+
+def test_fused_without_q_true_has_no_trace(psa_problem, topologies):
+    res = sdot(covs=psa_problem["covs"], engine=topologies["er"],
+               r=psa_problem["r"], t_outer=5, t_c=10)
+    assert res.error_trace is None
+    assert res.q_nodes.shape == (psa_problem["n_nodes"], psa_problem["d"],
+                                 psa_problem["r"])
+
+
+# ---------------------------------------------------------------------------
+# components: debias table, run_debiased_scan, vectorized ledger
+# ---------------------------------------------------------------------------
+def test_debias_table_matches_matrix_power(topologies):
+    for eng in topologies.values():
+        t_max = 17
+        table = np.asarray(eng.debias_table(t_max))
+        assert table.shape == (t_max + 1, eng.graph.n_nodes)
+        for t in (0, 1, 5, 17):
+            want = debias_weights(eng.weights, t)
+            np.testing.assert_allclose(table[t], want, rtol=1e-5, atol=1e-6)
+
+
+def test_run_debiased_scan_matches_run_debiased(topologies):
+    eng = topologies["ring"]
+    n = eng.graph.n_nodes
+    z = jnp.asarray(np.random.default_rng(2).standard_normal((n, 6, 3)),
+                    jnp.float32)
+    for t_c in (1, 7, 20):
+        want = eng.run_debiased(z, t_c)
+        got = eng.run_debiased_scan(z, jnp.int32(t_c), t_max=20)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_vectorized_ledger_equals_loop_ledger(topologies):
+    sched = consensus_schedule("lin2", 40, cap=50)
+    payload = 20 * 5
+    for eng in topologies.values():
+        adj = eng.graph.adjacency
+        loop = CommLedger()
+        for t in range(len(sched)):
+            for _ in range(int(sched[t])):
+                loop.log_gossip_round(adj, payload)
+        vec = CommLedger()
+        vec.log_gossip_rounds(sched, adj, payload)
+        assert vec.p2p == loop.p2p
+        assert vec.matrices == loop.matrices
+        assert vec.scalars == loop.scalars
+
+
+def test_fused_ledger_equals_eager_ledger(psa_problem, topologies):
+    p = psa_problem
+    sched = consensus_schedule("lin2", 25, cap=50)
+    eager, fused = _run_pair(topologies["er"], covs=p["covs"], schedule=sched,
+                             t_outer=25,
+                             q_init=orthonormal_init(jax.random.PRNGKey(6),
+                                                     p["d"], p["r"]),
+                             q_true=None, r=p["r"])
+    assert fused.ledger.p2p == eager.ledger.p2p
+    assert fused.ledger.matrices == eager.ledger.matrices
+    assert fused.ledger.scalars == eager.ledger.scalars
+
+
+def test_short_schedule_rejected(psa_problem, topologies):
+    """A schedule shorter than t_outer must fail loudly in both modes."""
+    p = psa_problem
+    for fused in (True, False):
+        with pytest.raises(ValueError, match="schedule"):
+            sdot(covs=p["covs"], engine=topologies["er"], r=p["r"], t_outer=10,
+                 schedule=np.array([5, 5]), fused=fused)
+
+
+def test_run_debiased_scan_rejects_tc_over_tmax(topologies):
+    eng = topologies["ring"]
+    z = jnp.zeros((eng.graph.n_nodes, 4, 2))
+    with pytest.raises(ValueError, match="t_max"):
+        eng.run_debiased_scan(z, 30, t_max=20)
+
+
+def test_fused_is_single_compile_across_schedules(psa_problem, topologies):
+    """Two SA-DOT runs with the same shapes/t_max reuse one compiled program
+    (the schedule is an operand, not a static); changing t_max recompiles."""
+    from repro.core.sdot import _fused_run
+    p = psa_problem
+    eng = topologies["er"]
+    base = _fused_run._cache_size()
+    s1 = consensus_schedule("lin1", 10, cap=30)
+    s1[:] = np.minimum(s1, 30)
+    s2 = consensus_schedule("lin2", 10, cap=30)
+    s1[-1] = 30  # pin equal t_max for both schedules
+    s2[-1] = 30
+    for s in (s1, s2):
+        sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=10, schedule=s,
+             q_true=p["q_true"])
+    assert _fused_run._cache_size() == base + 1
