@@ -52,23 +52,26 @@ def _case(gap: float, r: int, repeated: bool):
                     {"final_err": f"{res.error_trace[-1]:.2e}",
                      "total_iters": int(res.consensus_trace.sum())}))
 
-    _, errs = seq_dist_pm(covs, eng, r, iters_per_vec=t_o // r, t_c=50,
-                          q_true=q_true)
-    rows.append(Row(f"{tag}/SeqDistPM", 0.0,
+    (_, errs), us = timed(seq_dist_pm, covs, eng, r, iters_per_vec=t_o // r,
+                          t_c=50, q_true=q_true)
+    rows.append(Row(f"{tag}/SeqDistPM", us,
                     {"final_err": f"{errs[-1]:.2e}",
                      "total_iters": t_o * 50}))
 
-    _, errs = dsa(covs, eng, r, t_outer=t_o * 5, lr=0.05, q_true=q_true)
-    rows.append(Row(f"{tag}/DSA", 0.0, {"final_err": f"{errs[-1]:.2e}",
+    (_, errs), us = timed(dsa, covs, eng, r, t_outer=t_o * 5, lr=0.05,
+                          q_true=q_true)
+    rows.append(Row(f"{tag}/DSA", us, {"final_err": f"{errs[-1]:.2e}",
+                                       "iters": t_o * 5}))
+
+    (_, errs), us = timed(dpgd, covs, eng, r, t_outer=t_o * 5, lr=0.05,
+                          q_true=q_true)
+    rows.append(Row(f"{tag}/DPGD", us, {"final_err": f"{errs[-1]:.2e}",
                                         "iters": t_o * 5}))
 
-    _, errs = dpgd(covs, eng, r, t_outer=t_o * 5, lr=0.05, q_true=q_true)
-    rows.append(Row(f"{tag}/DPGD", 0.0, {"final_err": f"{errs[-1]:.2e}",
-                                         "iters": t_o * 5}))
-
-    _, errs = deepca(covs, eng, r, t_outer=t_o, t_mix=3, q_true=q_true)
-    rows.append(Row(f"{tag}/DeEPCA", 0.0, {"final_err": f"{errs[-1]:.2e}",
-                                           "total_iters": t_o * 3}))
+    (_, errs), us = timed(deepca, covs, eng, r, t_outer=t_o, t_mix=3,
+                          q_true=q_true)
+    rows.append(Row(f"{tag}/DeEPCA", us, {"final_err": f"{errs[-1]:.2e}",
+                                          "total_iters": t_o * 3}))
     return rows
 
 

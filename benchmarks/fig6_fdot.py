@@ -48,8 +48,8 @@ def run():
                         {"final_err": f"{res.error_trace[-1]:.2e}",
                          "p2p_k": round(res.ledger.per_node_p2p(N) / 1e3, 2)}))
 
-        _, errs = d_pm(blocks, eng, r, iters_per_vec=t_o // r, t_c=50,
-                       q_true=q_true)
-        rows.append(Row(f"{tag}/d-PM", 0.0,
+        (_, errs), us = timed(d_pm, blocks, eng, r, iters_per_vec=t_o // r,
+                              t_c=50, q_true=q_true)
+        rows.append(Row(f"{tag}/d-PM", us,
                         {"final_err": f"{errs[-1]:.2e}"}))
     return rows

@@ -1,0 +1,242 @@
+"""Fused algorithm-zoo + Monte-Carlo sweep-engine benchmark.
+
+Two measurements, both against the eager oracles at the paper's figure
+scales:
+
+* **zoo** — fused (single-scan) vs eager (per-iteration dispatch) walltime
+  for F-DOT at Fig.-6 scale and for every distributed baseline at the
+  Fig.-4/5 configs (DSA, DPGD, DeEPCA, SeqDistPM sample-partitioned; d-PM
+  feature-partitioned). Each case also asserts fused-vs-eager subspace-error
+  traces match to <= 1e-4 and the communication ledgers are identical.
+* **sweep** — the vmapped Monte-Carlo engine (core/sweep.py): one compiled
+  call for seeds x (topology, schedule) cases vs a Python loop over the
+  already-fused per-seed runs.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sweep_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.run sweep_bench
+
+Writes BENCH_fused_zoo.json (acceptance artifact; --smoke writes a sibling
+.smoke.json so CI never clobbers the committed full-scale numbers).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import d_pm, deepca, dpgd, dsa, seq_dist_pm
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.fdot import fdot
+from repro.core.linalg import eigh_topr
+from repro.core.metrics import CommLedger
+from repro.core.sdot import sdot
+from repro.core.sweep import sdot_sweep
+from repro.core.topology import erdos_renyi, ring
+from repro.data.pipeline import gaussian_eigengap_data, partition_features
+
+from .common import Row, sample_problem
+
+N, D, N_PER = 10, 20, 1000        # Fig. 4/5 sample-partitioned scale
+FD_D, FD_N = 10, 500              # Fig. 6 feature-partitioned scale
+
+
+def _block(out):
+    """Block on whichever device arrays a zoo/sweep call returned."""
+    obj = out[0] if isinstance(out, tuple) else out
+    if hasattr(obj, "q_nodes"):
+        arr = obj.q_nodes
+    elif hasattr(obj, "q_blocks"):
+        arr = obj.q_blocks[0]
+    else:
+        arr = obj
+    jax.block_until_ready(arr)
+    return out
+
+
+def _time(fn, repeats=1):
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = _block(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _zoo_case(label, fused_fn, eager_fn, trace_of, ledger_of, repeats):
+    _time(fused_fn)                                   # warmup: compile
+    fused_s, fres = _time(fused_fn, repeats)
+    eager_s, eres = _time(eager_fn)                   # eager: 1 rep (slow)
+    tf, te = np.asarray(trace_of(fres)), np.asarray(trace_of(eres))
+    maxdiff = float(np.abs(tf - te).max())
+    assert maxdiff <= 1e-4, f"{label}: fused/eager traces diverge ({maxdiff})"
+    lf, le = ledger_of(fres), ledger_of(eres)
+    ledger_equal = (lf.p2p == le.p2p and lf.matrices == le.matrices
+                    and lf.scalars == le.scalars)
+    assert ledger_equal, f"{label}: fused/eager ledgers differ"
+    return {
+        "case": label,
+        "fused_ms": round(fused_s * 1e3, 2),
+        "eager_ms": round(eager_s * 1e3, 2),
+        "speedup": round(eager_s / fused_s, 1),
+        "trace_maxdiff": maxdiff,
+        "ledger_equal": ledger_equal,
+        "final_err": float(tf[-1]),
+    }
+
+
+def run_zoo(smoke: bool):
+    scale = 5 if smoke else 1
+    repeats = 1 if smoke else 3
+    covs, q_true = sample_problem(d=D, r=5, n_nodes=N, n_per=N_PER, gap=0.5,
+                                  seed=0)
+    eng = DenseConsensus(erdos_renyi(N, 0.5, seed=1))
+
+    x, _, _ = gaussian_eigengap_data(FD_D, FD_N, 3, 0.5, seed=0)
+    _, q_true_f = eigh_topr(x @ x.T, 3)
+    fblocks = partition_features(x, N)
+
+    def led(fn, *a, **kw):
+        ledger = CommLedger()
+        out = fn(*a, ledger=ledger, **kw)
+        return out + (ledger,)
+
+    t_o = 100 // scale
+    cases = [
+        ("fdot/fig6/r3", lambda f: (fdot(
+            data_blocks=fblocks, engine=eng, r=3, t_outer=t_o, t_c=50,
+            q_true=q_true_f, fused=f),)),
+        ("dsa/fig45", lambda f: led(dsa, covs, eng, 5,
+                                    t_outer=500 // scale, lr=0.05,
+                                    q_true=q_true, fused=f)),
+        ("dpgd/fig45", lambda f: led(dpgd, covs, eng, 5,
+                                     t_outer=500 // scale, lr=0.05,
+                                     q_true=q_true, fused=f)),
+        ("deepca/fig45", lambda f: led(deepca, covs, eng, 5,
+                                       t_outer=100 // scale, t_mix=3,
+                                       q_true=q_true, fused=f)),
+        ("seq_dist_pm/fig45", lambda f: led(seq_dist_pm, covs, eng, 5,
+                                            iters_per_vec=20 // scale + 1,
+                                            t_c=50, q_true=q_true, fused=f)),
+        ("d_pm/fig6", lambda f: led(d_pm, fblocks, eng, 3,
+                                    iters_per_vec=33 // scale + 1, t_c=50,
+                                    q_true=q_true_f, fused=f)),
+    ]
+
+    def trace_of(out):
+        first = out[0]
+        return first.error_trace if hasattr(first, "error_trace") else out[1]
+
+    def ledger_of(out):
+        first = out[0]
+        return first.ledger if hasattr(first, "ledger") else out[-1]
+
+    return [_zoo_case(label, lambda make=make: make(True),
+                      lambda make=make: make(False), trace_of, ledger_of,
+                      repeats)
+            for label, make in cases]
+
+
+def run_sweep(smoke: bool):
+    """Vmapped MC sweep (one device call) vs a loop of per-seed fused runs."""
+    t_outer = 20 if smoke else 100
+    seeds = list(range(4 if smoke else 16))
+    covs, q_true = sample_problem(d=D, r=5, n_nodes=N, n_per=N_PER, gap=0.5,
+                                  seed=0)
+    engines = [DenseConsensus(erdos_renyi(N, 0.5, seed=1)),
+               DenseConsensus(ring(N))]
+    schedules = [consensus_schedule("const", t_outer, t_max=50),
+                 consensus_schedule("lin2", t_outer, cap=50)]
+
+    sweep = lambda: sdot_sweep(covs=covs, engines=engines,
+                               schedules=schedules, r=5, t_outer=t_outer,
+                               seeds=seeds, q_true=q_true)
+    _time(lambda: _wrap_sweep(sweep))                 # warmup: compile
+    one_call_s, res = _time(lambda: _wrap_sweep(sweep))
+
+    def loop():
+        traces = []
+        for eng, sched in zip(engines, schedules):
+            for s in seeds:
+                r = sdot(covs=covs, engine=eng, r=5, t_outer=t_outer,
+                         schedule=sched, seed=s, q_true=q_true)
+                traces.append(r.error_trace)
+        return np.stack(traces)
+    loop_s_t0 = time.perf_counter()
+    loop_traces = loop()
+    loop_s = time.perf_counter() - loop_s_t0
+
+    got = res.error_traces.reshape(-1, t_outer)
+    maxdiff = float(np.abs(got - loop_traces).max())
+    assert maxdiff <= 1e-4, f"sweep vs per-seed traces diverge ({maxdiff})"
+    runs = len(seeds) * len(engines)
+    return [{
+        "case": f"sdot_sweep/{len(engines)}cases_x_{len(seeds)}seeds",
+        "runs": runs,
+        "one_call_ms": round(one_call_s * 1e3, 2),
+        "per_run_loop_ms": round(loop_s * 1e3 / runs, 2),
+        "loop_ms": round(loop_s * 1e3, 2),
+        "speedup_vs_fused_loop": round(loop_s / one_call_s, 1),
+        "trace_maxdiff": maxdiff,
+    }]
+
+
+def _wrap_sweep(sweep):
+    res = sweep()
+    jax.block_until_ready(res.q)
+    return res
+
+
+def run_bench(smoke: bool = False):
+    return {"zoo": run_zoo(smoke), "sweep": run_sweep(smoke)}
+
+
+def run():
+    """benchmarks.run entry point."""
+    results = run_bench(smoke=False)
+    rows = []
+    for rec in results["zoo"]:
+        rows.append(Row(f"fused_zoo/{rec['case']}", rec["fused_ms"] * 1e3,
+                        {"eager_ms": rec["eager_ms"],
+                         "speedup": rec["speedup"],
+                         "final_err": f"{rec['final_err']:.2e}"}))
+    for rec in results["sweep"]:
+        rows.append(Row(f"fused_zoo/{rec['case']}", rec["one_call_ms"] * 1e3,
+                        {"loop_ms": rec["loop_ms"],
+                         "speedup": rec["speedup_vs_fused_loop"]}))
+    return rows
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "fused_zoo",
+        "scale": {"fig45": {"n_nodes": N, "d": D, "n_per": N_PER},
+                  "fig6": {"n_nodes": N, "d": FD_D, "n": FD_N}},
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        **results,
+    }
+    print(json.dumps(out, indent=2))
+    name = "BENCH_fused_zoo.smoke.json" if smoke else "BENCH_fused_zoo.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    if not smoke:
+        bars = {rec["case"]: (10.0 if rec["case"].startswith("fdot") else 5.0)
+                for rec in results["zoo"]}
+        below = [(rec["case"], rec["speedup"]) for rec in results["zoo"]
+                 if rec["speedup"] < bars[rec["case"]]]
+        if below:
+            print(f"# WARNING: speedups below bar: {below}")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,9 @@ Public API:
     bdot         — B-DOT (block-partitioned; beyond-paper, the paper's §VI)
     baselines    — SeqPM, SeqDistPM, DSA, DPGD, DeEPCA, d-PM
     metrics      — subspace error (paper eq. 11), comm ledgers
+    sweep        — vmapped Monte-Carlo sweeps over the fused executors
 """
-from . import baselines, bdot, consensus, fdot, linalg, metrics, oi, sdot, topology  # noqa: F401
+from . import baselines, bdot, consensus, fdot, linalg, metrics, oi, sdot, sweep, topology  # noqa: F401
 from .bdot import bdot as run_bdot  # noqa: F401
 from .consensus import DenseConsensus, SpmdConsensus, consensus_schedule  # noqa: F401
 from .fdot import fdot as run_fdot  # noqa: F401
@@ -18,4 +19,5 @@ from .linalg import cholesky_qr2, orthonormal_init  # noqa: F401
 from .metrics import CommLedger, subspace_error  # noqa: F401
 from .oi import orthogonal_iteration  # noqa: F401
 from .sdot import sadot as run_sadot, sdot as run_sdot  # noqa: F401
+from .sweep import SweepResult, baseline_sweep, fdot_sweep, sdot_sweep  # noqa: F401
 from .topology import Graph, erdos_renyi, local_degree_weights, mixing_time, ring, star  # noqa: F401

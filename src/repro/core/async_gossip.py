@@ -15,6 +15,17 @@ module implements it:
   (a delayed node simply misses rounds; the round time stays nominal but
   more rounds are needed for the same contraction).
 
+Execution modes (``fused`` flag, same architecture as the rest of core/):
+  * fused (default) — the awake masks for all ``t_c`` rounds are pre-sampled
+    with ``jax.random``, and the per-round doubly-stochastic matrices, the
+    gossip recursion, the realized mixing-matrix product (for the exact
+    debias), and the per-round send/awake counts are all built inside one
+    jitted ``lax.scan``. One device dispatch per call instead of one host
+    round-trip per gossip round.
+  * host (``fused=False``) — the original pure-NumPy float64 loop, one
+    ``_round_matrix`` sample + einsum per round. Kept as the correctness
+    oracle (tests/test_fused_zoo.py runs both on identical injected masks).
+
 The headline result (benchmarks/async_straggler.py): with one persistent
 straggler of delay D >> t_round, synchronous S-DOT pays (t_round + D) per
 round while async S-DOT pays t_round per round and only ~1/N of the mixing
@@ -24,8 +35,10 @@ t_round for large networks, at a modest increase in rounds-to-floor.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,6 +46,40 @@ from .metrics import CommLedger
 from .topology import Graph, local_degree_weights
 
 __all__ = ["AsyncConsensus", "straggler_wall_clock"]
+
+
+@functools.partial(jax.jit, static_argnums=())
+def _fused_async_run(w, adj, awake, z_stack):
+    """t_c async gossip rounds + realized-product debias, fully on device.
+
+    w: (N, N) nominal weights; adj: (N, N) 0/1 adjacency; awake: (T, N) bool
+    pre-sampled masks; z_stack: (N, ...). Returns (debiased z, (T,) directed
+    sends per round, (T,) awake-node counts per round). Recompiles per
+    distinct T (the scan length) — constant-budget callers compile once.
+    """
+    n = w.shape[0]
+    off = ~jnp.eye(n, dtype=bool)
+    wz = w.astype(z_stack.dtype)
+
+    def round_(carry, a):
+        z, p = carry
+        both = jnp.outer(a, a)
+        w_off = jnp.where(off & both, wz, 0.0)
+        dropped = jnp.where(off & ~both, wz, 0.0).sum(axis=1)
+        w_round = w_off + jnp.diag(jnp.diag(wz) + dropped)
+        z = jnp.einsum("ij,j...->i...", w_round, z)
+        # only column 0 of the realized product is ever read (the debias
+        # weight), so carry the (N,) vector p = Pi W e_1, not the (N, N)
+        # product — O(N^2) per round instead of O(N^3)
+        p = w_round @ p
+        sends = jnp.sum(jnp.where(off & both, adj, 0.0))
+        return (z, p), (sends, jnp.sum(a.astype(jnp.float32)))
+
+    e1 = jnp.zeros((n,), z_stack.dtype).at[0].set(1.0)
+    (z, p), (sends, counts) = jax.lax.scan(round_, (z_stack, e1), awake)
+    scale = jnp.maximum(p, 1e-6)                   # realized [Pi W e_1]_i
+    bshape = (-1,) + (1,) * (z_stack.ndim - 1)
+    return z / scale.reshape(bshape), sends, counts
 
 
 @dataclasses.dataclass
@@ -50,15 +97,26 @@ class AsyncConsensus:
     graph: Graph
     p_awake: np.ndarray          # (N,) probability each node is awake
     seed: int = 0
+    fused: bool = True           # device-side scan vs host NumPy loop
 
     def __post_init__(self):
         self.weights = local_degree_weights(self.graph)
         self._rng = np.random.default_rng(self.seed)
+        self._key = jax.random.PRNGKey(self.seed)
         if np.isscalar(self.p_awake) or np.ndim(self.p_awake) == 0:
             self.p_awake = np.full(self.graph.n_nodes, float(self.p_awake))
+        self._w = jnp.asarray(self.weights, jnp.float32)
+        self._adj = jnp.asarray(self.graph.adjacency, jnp.float32)
 
-    def _round_matrix(self) -> np.ndarray:
+    def _round_matrix(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Sample one realized round: returns ``(w, awake)`` where ``w`` is
+        the (N, N) doubly-stochastic mixing matrix over the awake subgraph
+        and ``awake`` the (N,) bool availability mask drawn this round."""
         awake = self._rng.random(self.graph.n_nodes) < self.p_awake
+        return self._apply_mask(awake), awake
+
+    def _apply_mask(self, awake: np.ndarray) -> np.ndarray:
+        """Realized mixing matrix for a given awake mask (host reference)."""
         w = self.weights.copy()
         n = self.graph.n_nodes
         mask = np.outer(awake, awake)
@@ -66,23 +124,69 @@ class AsyncConsensus:
         dropped = np.where(off & ~mask, w, 0.0)
         w = np.where(off & mask, w, 0.0)
         np.fill_diagonal(w, self.weights.diagonal() + dropped.sum(axis=1))
-        return w, awake
+        return w
+
+    def sample_awake(self, t_c: int) -> jnp.ndarray:
+        """Pre-sample (t_c, N) awake masks from the engine's jax.random
+        stream (each call advances the stream, mirroring the host rng)."""
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.bernoulli(
+            sub, jnp.asarray(self.p_awake, jnp.float32),
+            (int(t_c), self.graph.n_nodes))
 
     def run_debiased(self, z_stack: jnp.ndarray, t_c: int,
-                     ledger: Optional[CommLedger] = None):
-        """t_c async rounds + exact realized debias: approximates sum_j Z_j."""
+                     ledger: Optional[CommLedger] = None,
+                     awake: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """t_c async rounds + exact realized debias: approximates sum_j Z_j.
+
+        ``awake`` optionally injects the (>= t_c, N) availability masks (used
+        by the device-vs-host equivalence tests); only the first t_c rows are
+        consumed, exactly like the host loop. By default the fused path draws
+        them from jax.random and the host path from the NumPy rng.
+        """
+        if awake is not None and awake.shape[0] < int(t_c):
+            raise ValueError(f"awake has {awake.shape[0]} rounds but "
+                             f"t_c={t_c}")
+        if self.fused:
+            return self._run_fused(z_stack, int(t_c), ledger, awake)
+        return self._run_host(z_stack, int(t_c), ledger, awake)
+
+    def _run_fused(self, z_stack, t_c, ledger, awake):
+        if awake is None:
+            awake = self.sample_awake(t_c)
+        else:
+            awake = awake[:t_c]
+        z = jnp.asarray(z_stack, jnp.float32)
+        out, sends, counts = _fused_async_run(
+            self._w, self._adj, jnp.asarray(awake, bool), z)
+        if ledger is not None:
+            sends = np.asarray(sends, np.float64)
+            payload = float(np.prod(z_stack.shape[1:]))
+            ledger.p2p += float(sends.sum())
+            ledger.matrices += float(sends.sum())
+            ledger.scalars += float(sends.sum()) * payload
+            ledger.log_awake_rounds(np.asarray(counts))
+        return out
+
+    def _run_host(self, z_stack, t_c, ledger, awake):
         n = self.graph.n_nodes
+        off = ~np.eye(n, dtype=bool)
         z = np.asarray(z_stack, np.float64)
         prod = np.eye(n)
-        for _ in range(int(t_c)):
-            w, awake = self._round_matrix()
+        for t in range(t_c):
+            if awake is None:
+                w, a = self._round_matrix()
+            else:
+                a = np.asarray(awake[t], bool)
+                w = self._apply_mask(a)
             z = np.einsum("ij,j...->i...", w, z)
             prod = w @ prod
             if ledger is not None:
-                sends = float((w > 0).sum() - n)   # off-diagonal messages
+                sends = float(((w > 0) & off).sum())   # off-diag messages
                 ledger.p2p += sends
                 ledger.matrices += sends
                 ledger.scalars += sends * np.prod(z_stack.shape[1:])
+                ledger.log_awake_rounds([int(a.sum())])
         scale = np.maximum(prod[:, 0], 1e-6)       # realized [Pi W e_1]_i
         bshape = (-1,) + (1,) * (z_stack.ndim - 1)
         return jnp.asarray(z / scale.reshape(bshape), jnp.float32)

@@ -13,18 +13,29 @@ Distributed, feature-partitioned:
 All return (q_estimate(s), error_trace) with the paper's metric (11) traced
 per *outer* iteration so plots match the paper's x-axis conventions
 (inner x outer for consensus-based methods — callers scale accordingly).
+
+Every distributed baseline runs **fused by default** (same architecture as
+sdot.py/fdot.py): the whole run is one jitted ``lax.scan``, the error trace
+is computed on device, and communication is accounted in closed form
+(CommLedger.log_gossip_rounds). The sequential-deflation methods
+(``seq_dist_pm``, ``d_pm``) scan over the flattened (eigenvector k,
+inner-iteration j) index with masked deflation — a ``fori_loop`` over
+candidate deflation vectors replays the eager Gram-Schmidt order exactly, so
+fused == eager to float tolerance. ``fused=False`` keeps the original eager
+per-iteration loop as the correctness oracle (tests/test_fused_zoo.py).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .consensus import DenseConsensus
+from .consensus import DenseConsensus, debiased_gossip
 from .linalg import cholesky_qr2, orthonormal_init
-from .metrics import CommLedger, subspace_error
+from .metrics import CommLedger, subspace_error, subspace_error_from_cross
 from .sdot import local_cov_apply
 
 __all__ = ["seq_pm", "seq_dist_pm", "dsa", "dpgd", "deepca", "d_pm"]
@@ -32,6 +43,19 @@ __all__ = ["seq_pm", "seq_dist_pm", "dsa", "dpgd", "deepca", "d_pm"]
 
 def _trace(q_true, q):
     return float(subspace_error(q_true, q)) if q_true is not None else np.nan
+
+
+def _supports_fused(engine) -> bool:
+    """Fused baselines need the dense weight matrix (+ debias table for the
+    consensus-sum methods); engines without them (e.g. AsyncConsensus with
+    host-side rounds disabled) fall back to the eager loop."""
+    return hasattr(engine, "_w") and hasattr(engine, "debias_table")
+
+
+def _finish_errs(errs, n_steps: int, trace_err: bool) -> np.ndarray:
+    """Device trace -> host array; NaN-fill when no ground truth was given
+    (matching the eager loop's per-iteration np.nan appends)."""
+    return np.asarray(errs) if trace_err else np.full(n_steps, np.nan)
 
 
 # --------------------------------------------------------------------------
@@ -49,6 +73,9 @@ def seq_pm(m: jnp.ndarray, r: int, iters_per_vec: int, q_true=None, seed: int = 
     cols = [q[:, i] for i in range(r)]
     errs = []
     m_defl = m
+    # deflation projector P = I - sum_j Q_j Q_j^T, accumulated incrementally
+    # (one rank-1 update per converged vector instead of an O(r d^2) rebuild)
+    p = jnp.eye(d)
     for k in range(r):
         v = cols[k]
         for _ in range(iters_per_vec):
@@ -59,10 +86,7 @@ def seq_pm(m: jnp.ndarray, r: int, iters_per_vec: int, q_true=None, seed: int = 
             v = v / jnp.linalg.norm(v)
             errs.append(_trace(q_true, jnp.stack(cols[:k] + [v] + cols[k + 1:], 1)))
         cols[k] = v
-        # deflate with the projector onto the complement of converged columns
-        p = jnp.eye(d)
-        for j in range(k + 1):
-            p = p - jnp.outer(cols[j], cols[j])
+        p = p - jnp.outer(v, v)
         m_defl = p @ m @ p
     return jnp.stack(cols, axis=1), np.asarray(errs)
 
@@ -70,38 +94,108 @@ def seq_pm(m: jnp.ndarray, r: int, iters_per_vec: int, q_true=None, seed: int = 
 # --------------------------------------------------------------------------
 # distributed sequential power method (SeqDistPM)
 # --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("r", "iters_per_vec", "t_c",
+                                             "t_max", "trace_err"))
+def _fused_seq_dist_pm(covs, w, table, cols0, q_true, *, r: int,
+                       iters_per_vec: int, t_c: int, t_max: int,
+                       trace_err: bool):
+    """Whole SeqDistPM run as one scan over the flattened (k, j) index.
+
+    cols0: (r, N, d) per-node column estimates. Deflation against converged
+    vectors is a fori_loop masked to kk < k — same sequential Gram-Schmidt
+    order as the eager loop.
+    """
+
+    def body(cols, m):
+        k = m // iters_per_vec
+        v = jnp.take(cols, k, axis=0)                          # (N, d)
+        z = jnp.einsum("nde,ne->nd", covs, v)
+        z = debiased_gossip(w, table, z, jnp.int32(t_c), t_max)
+
+        def defl(kk, zz):
+            u = cols[kk]
+            zz_d = zz - u * jnp.sum(u * zz, axis=1, keepdims=True)
+            return jnp.where(kk < k, zz_d, zz)
+
+        z = jax.lax.fori_loop(0, r, defl, z)
+        v = z / jnp.linalg.norm(z, axis=1, keepdims=True)
+        cols = cols.at[k].set(v)
+        err = (subspace_error(q_true, cols.mean(axis=1).T) if trace_err
+               else jnp.float32(0.0))
+        return cols, err
+
+    return jax.lax.scan(body, cols0, jnp.arange(r * iters_per_vec))
+
+
 def seq_dist_pm(covs: jnp.ndarray, engine: DenseConsensus, r: int,
                 iters_per_vec: int, t_c: int = 50, q_true=None, seed: int = 0,
-                ledger: Optional[CommLedger] = None):
+                ledger: Optional[CommLedger] = None, fused: bool = True):
     n, d, _ = covs.shape
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
-    cols = [jnp.broadcast_to(q0[:, k][None], (n, d)) for k in range(r)]  # per-node
-    errs = []
-    done: list = []
-    for k in range(r):
-        v = cols[k]  # (n, d)
-        for _ in range(iters_per_vec):
-            z = jnp.einsum("nde,ne->nd", covs, v)
-            z = engine.run_debiased(z, t_c, ledger)
-            # deflate against converged vectors (per node)
-            for u in done:
-                z = z - u * jnp.sum(u * z, axis=1, keepdims=True)
-            v = z / jnp.linalg.norm(z, axis=1, keepdims=True)
-            cur = [c if i != k else v for i, c in enumerate(cols)]
-            qm = jnp.stack([c.mean(0) for c in cur], axis=1)
-            errs.append(_trace(q_true, qm))
-        cols[k] = v
-        done.append(v)
-    q_nodes = jnp.stack(cols, axis=2)  # (n, d, r)
-    return q_nodes, np.asarray(errs)
+    closed_form = _supports_fused(engine)   # sync engines: every round equal
+    fused = fused and closed_form
+    n_steps = r * iters_per_vec
+    if fused:
+        cols0 = jnp.broadcast_to(q0.T[:, None, :], (r, n, d))
+        trace_err = q_true is not None
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        cols, errs = _fused_seq_dist_pm(
+            covs, engine._w, engine.debias_table(t_c), cols0, q_arg,
+            r=r, iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
+            trace_err=trace_err)
+        q_nodes = jnp.transpose(cols, (1, 2, 0))               # (n, d, r)
+        errs = _finish_errs(errs, n_steps, trace_err)
+    else:
+        cols = [jnp.broadcast_to(q0[:, k][None], (n, d)) for k in range(r)]
+        errs = []
+        done: list = []
+        for k in range(r):
+            v = cols[k]  # (n, d)
+            for _ in range(iters_per_vec):
+                z = jnp.einsum("nde,ne->nd", covs, v)
+                # async engines log realized (awake-dependent) sends per call;
+                # sync engines are accounted in closed form below
+                z = engine.run_debiased(z, t_c,
+                                        None if closed_form else ledger)
+                # deflate against converged vectors (per node)
+                for u in done:
+                    z = z - u * jnp.sum(u * z, axis=1, keepdims=True)
+                v = z / jnp.linalg.norm(z, axis=1, keepdims=True)
+                cur = [c if i != k else v for i, c in enumerate(cols)]
+                qm = jnp.stack([c.mean(0) for c in cur], axis=1)
+                errs.append(_trace(q_true, qm))
+            cols[k] = v
+            done.append(v)
+        q_nodes = jnp.stack(cols, axis=2)  # (n, d, r)
+        errs = np.asarray(errs)
+    if ledger is not None and closed_form:
+        ledger.log_gossip_rounds(np.full(n_steps, t_c),
+                                 engine.graph.adjacency, d)
+    return q_nodes, errs
 
 
 # --------------------------------------------------------------------------
 # distributed Sanger's algorithm (DSA)
 # --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("t_outer", "trace_err"))
+def _fused_dsa(covs, w, q0, lr, q_true, *, t_outer: int, trace_err: bool):
+    def body(q, _):
+        mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
+        mq = local_cov_apply(covs, q)
+        qmq = jnp.einsum("ndr,nds->nrs", q, mq)
+        upper = jnp.triu(qmq)
+        sanger = mq - jnp.einsum("ndr,nrs->nds", q, upper)
+        q_new = mixed + lr * sanger
+        err = (subspace_error(q_true, q_new.mean(0)) if trace_err
+               else jnp.float32(0.0))
+        return q_new, err
+
+    return jax.lax.scan(body, q0, None, length=t_outer)
+
+
 def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
         lr: float = 0.1, q_true=None, seed: int = 0,
-        ledger: Optional[CommLedger] = None):
+        ledger: Optional[CommLedger] = None, fused: bool = True):
     """Q_i <- sum_j w_ij Q_j + lr * (M_i Q_i - Q_i UT(Q_i^T M_i Q_i)).
 
     Converges linearly to a *neighborhood* of the truth (paper Fig. 4/5).
@@ -110,48 +204,108 @@ def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     n, d, _ = covs.shape
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     q = jnp.broadcast_to(q0[None], (n, d, r))
-    errs = []
-    for _ in range(t_outer):
-        mixed = engine.run(q, 1)
-        if ledger is not None:
-            ledger.log_gossip_round(engine.graph.adjacency, d * r)
-        mq = local_cov_apply(covs, q)
-        qmq = jnp.einsum("ndr,nds->nrs", q, mq)
-        upper = jnp.triu(qmq)
-        sanger = mq - jnp.einsum("ndr,nrs->nds", q, upper)
-        q = mixed + lr * sanger
-        errs.append(_trace(q_true, q.mean(0)))
-    return q, np.asarray(errs)
+    fused = fused and _supports_fused(engine)
+    if fused:
+        trace_err = q_true is not None
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q, errs = _fused_dsa(covs, engine._w, q, jnp.float32(lr), q_arg,
+                             t_outer=t_outer, trace_err=trace_err)
+        errs = _finish_errs(errs, t_outer, trace_err)
+    else:
+        errs = []
+        for _ in range(t_outer):
+            mixed = engine.run(q, 1)
+            mq = local_cov_apply(covs, q)
+            qmq = jnp.einsum("ndr,nds->nrs", q, mq)
+            upper = jnp.triu(qmq)
+            sanger = mq - jnp.einsum("ndr,nrs->nds", q, upper)
+            q = mixed + lr * sanger
+            errs.append(_trace(q_true, q.mean(0)))
+        errs = np.asarray(errs)
+    if ledger is not None:
+        ledger.log_gossip_rounds(np.ones(t_outer), engine.graph.adjacency,
+                                 d * r)
+    return q, errs
 
 
 # --------------------------------------------------------------------------
 # distributed projected gradient descent (DPGD)
 # --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("t_outer", "trace_err"))
+def _fused_dpgd(covs, w, q0, lr, q_true, *, t_outer: int, trace_err: bool):
+    def body(q, _):
+        mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
+        grad = local_cov_apply(covs, q)
+        v = mixed + lr * grad
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+        err = (subspace_error(q_true, q_new.mean(0)) if trace_err
+               else jnp.float32(0.0))
+        return q_new, err
+
+    return jax.lax.scan(body, q0, None, length=t_outer)
+
+
 def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
          lr: float = 0.1, q_true=None, seed: int = 0,
-         ledger: Optional[CommLedger] = None):
+         ledger: Optional[CommLedger] = None, fused: bool = True):
     """Trace-maximization DGD + QR retraction (converges to a neighborhood)."""
     n, d, _ = covs.shape
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     q = jnp.broadcast_to(q0[None], (n, d, r))
-    errs = []
-    for _ in range(t_outer):
-        mixed = engine.run(q, 1)
-        if ledger is not None:
-            ledger.log_gossip_round(engine.graph.adjacency, d * r)
-        grad = local_cov_apply(covs, q)  # d/dQ Tr(Q^T M_i Q) = 2 M_i Q
-        v = mixed + lr * grad
-        q = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
-        errs.append(_trace(q_true, q.mean(0)))
-    return q, np.asarray(errs)
+    fused = fused and _supports_fused(engine)
+    if fused:
+        trace_err = q_true is not None
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q, errs = _fused_dpgd(covs, engine._w, q, jnp.float32(lr), q_arg,
+                              t_outer=t_outer, trace_err=trace_err)
+        errs = _finish_errs(errs, t_outer, trace_err)
+    else:
+        errs = []
+        for _ in range(t_outer):
+            mixed = engine.run(q, 1)
+            grad = local_cov_apply(covs, q)  # d/dQ Tr(Q^T M_i Q) = 2 M_i Q
+            v = mixed + lr * grad
+            q = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+            errs.append(_trace(q_true, q.mean(0)))
+        errs = np.asarray(errs)
+    if ledger is not None:
+        ledger.log_gossip_rounds(np.ones(t_outer), engine.graph.adjacency,
+                                 d * r)
+    return q, errs
 
 
 # --------------------------------------------------------------------------
 # DeEPCA — gradient tracking + power iteration
 # --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("t_outer", "t_mix", "trace_err"))
+def _fused_deepca(covs, w, q0, s0, q_true, *, t_outer: int, t_mix: int,
+                  trace_err: bool):
+    def body(carry, _):
+        q, s, mq_prev = carry
+        wz = w.astype(s.dtype)
+
+        def mix(z, _):
+            return jnp.einsum("ij,j...->i...", wz, z), None
+
+        s, _ = jax.lax.scan(mix, s, None, length=t_mix)
+        # sign-fixed orthonormalization (DeEPCA's rounding keeps tracking valid)
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(s)
+        sign = jnp.sign(jnp.einsum("ndr,ndr->nr", q_new, q))
+        sign = jnp.where(sign == 0, 1.0, sign)
+        q_new = q_new * sign[:, None, :]
+        mq_new = local_cov_apply(covs, q_new)
+        s = s + mq_new - mq_prev       # gradient tracking correction
+        err = (subspace_error(q_true, q_new.mean(0)) if trace_err
+               else jnp.float32(0.0))
+        return (q_new, s, mq_new), err
+
+    (q, s, _), errs = jax.lax.scan(body, (q0, s0, s0), None, length=t_outer)
+    return q, errs
+
+
 def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
            t_mix: int = 3, q_true=None, seed: int = 0,
-           ledger: Optional[CommLedger] = None):
+           ledger: Optional[CommLedger] = None, fused: bool = True):
     """Gradient-tracking power iteration (Ye & Zhang '21, paper ref [27]).
 
     s_i tracks (1/N) sum_j M_j Q_j exactly in the limit; a constant number of
@@ -161,58 +315,132 @@ def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     n, d, _ = covs.shape
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     q = jnp.broadcast_to(q0[None], (n, d, r))
-    mq_prev = local_cov_apply(covs, q)
-    s = mq_prev
-    errs = []
-    for _ in range(t_outer):
-        s = engine.run(s, t_mix)
-        if ledger is not None:
-            for _ in range(t_mix):
-                ledger.log_gossip_round(engine.graph.adjacency, d * r)
-        # sign-fixed orthonormalization (DeEPCA's rounding keeps tracking valid)
-        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(s)
-        # align signs with previous iterate for smooth tracking
-        sign = jnp.sign(jnp.einsum("ndr,ndr->nr", q_new, q))
-        sign = jnp.where(sign == 0, 1.0, sign)
-        q_new = q_new * sign[:, None, :]
-        mq_new = local_cov_apply(covs, q_new)
-        s = s + mq_new - mq_prev       # gradient tracking correction
-        mq_prev, q = mq_new, q_new
-        errs.append(_trace(q_true, q.mean(0)))
-    return q, np.asarray(errs)
+    fused = fused and _supports_fused(engine)
+    if fused:
+        trace_err = q_true is not None
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        s0 = local_cov_apply(covs, q)
+        q, errs = _fused_deepca(covs, engine._w, q, s0, q_arg,
+                                t_outer=t_outer, t_mix=t_mix,
+                                trace_err=trace_err)
+        errs = _finish_errs(errs, t_outer, trace_err)
+    else:
+        mq_prev = local_cov_apply(covs, q)
+        s = mq_prev
+        errs = []
+        for _ in range(t_outer):
+            s = engine.run(s, t_mix)
+            q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(s)
+            # align signs with previous iterate for smooth tracking
+            sign = jnp.sign(jnp.einsum("ndr,ndr->nr", q_new, q))
+            sign = jnp.where(sign == 0, 1.0, sign)
+            q_new = q_new * sign[:, None, :]
+            mq_new = local_cov_apply(covs, q_new)
+            s = s + mq_new - mq_prev       # gradient tracking correction
+            mq_prev, q = mq_new, q_new
+            errs.append(_trace(q_true, q.mean(0)))
+        errs = np.asarray(errs)
+    if ledger is not None:
+        ledger.log_gossip_rounds(np.full(t_outer, t_mix),
+                                 engine.graph.adjacency, d * r)
+    return q, errs
 
 
 # --------------------------------------------------------------------------
 # d-PM — sequential distributed power method for feature-partitioned data
 # --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("r", "iters_per_vec", "t_c",
+                                             "t_max", "trace_err"))
+def _fused_d_pm(x_pad, w, table, blocks0, qtrue_pad, *, r: int,
+                iters_per_vec: int, t_c: int, t_max: int, trace_err: bool):
+    """Whole d-PM run as one scan over the flattened (k, j) index.
+
+    x_pad: (N, d_max, n) zero-padded feature slabs; blocks0: (r, N, d_max)
+    per-vector padded slab estimates; qtrue_pad: (N, d_max, r_true). All
+    dots/norms run over the padded layout — exact, padding entries are zero.
+    """
+
+    def body(blocks, m):
+        k = m // iters_per_vec
+        vb = jnp.take(blocks, k, axis=0)                       # (N, d_max)
+        partial = jnp.einsum("idn,id->in", x_pad, vb)          # (N, n)
+        ssum = debiased_gossip(w, table, partial, jnp.int32(t_c), t_max)
+        vb = jnp.einsum("idn,in->id", x_pad, ssum)
+
+        def defl(kk, vv):
+            u = blocks[kk]
+            return jnp.where(kk < k, vv - u * jnp.sum(u * vv), vv)
+
+        vb = jax.lax.fori_loop(0, r, defl, vb)
+        vb = vb / jnp.linalg.norm(vb)
+        blocks = blocks.at[k].set(vb)
+        if trace_err:
+            cross = jnp.einsum("ids,jid->sj", qtrue_pad, blocks)
+            err = subspace_error_from_cross(cross)
+        else:
+            err = jnp.float32(0.0)
+        return blocks, err
+
+    return jax.lax.scan(body, blocks0, jnp.arange(r * iters_per_vec))
+
+
 def d_pm(data_blocks: Sequence[jnp.ndarray], engine: DenseConsensus, r: int,
          iters_per_vec: int, t_c: int = 50, q_true=None, seed: int = 0,
-         ledger: Optional[CommLedger] = None):
+         ledger: Optional[CommLedger] = None, fused: bool = True):
     """Scaglione et al. [10]: estimate eigenvectors one at a time, each via
     power iterations on M = X X^T executed feature-wise with consensus."""
+    from .fdot import pad_feature_slabs, split_pad_rows
+
     dims = [int(x.shape[0]) for x in data_blocks]
     d = sum(dims)
+    n_samples = int(data_blocks[0].shape[1])
     offs = np.cumsum([0] + dims)
     n_nodes = len(data_blocks)
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
-    blocks = [[q0[offs[i]:offs[i + 1], k] for i in range(n_nodes)] for k in range(r)]
-    errs = []
-    done_full: list = []
-    for k in range(r):
-        vb = blocks[k]
-        for _ in range(iters_per_vec):
-            partial = jnp.stack([x.T @ v for x, v in zip(data_blocks, vb)])  # (N,n)
-            ssum = engine.run_debiased(partial, t_c, ledger)
-            vb = [x @ ssum[i] for i, x in enumerate(data_blocks)]
-            vfull = jnp.concatenate(vb)
-            for u in done_full:
-                vfull = vfull - u * (u @ vfull)
-            vfull = vfull / jnp.linalg.norm(vfull)
-            vb = [vfull[offs[i]:offs[i + 1]] for i in range(n_nodes)]
-            cur = jnp.stack(
-                [jnp.concatenate(blocks[j]) if j != k else vfull for j in range(r)], 1)
-            errs.append(_trace(q_true, cur))
-        blocks[k] = vb
-        done_full.append(jnp.concatenate(vb))
-    q_full = jnp.stack([jnp.concatenate(b) for b in blocks], axis=1)
-    return q_full, np.asarray(errs)
+    closed_form = _supports_fused(engine)   # sync engines: every round equal
+    fused = fused and closed_form
+    n_steps = r * iters_per_vec
+    if fused:
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = split_pad_rows(q0, dims)
+        blocks0 = jnp.transpose(q0_pad, (2, 0, 1))             # (r, N, d_max)
+        trace_err = q_true is not None
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        blocks, errs = _fused_d_pm(
+            x_pad, engine._w, engine.debias_table(t_c), blocks0, qtrue_pad,
+            r=r, iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
+            trace_err=trace_err)
+        q_full = jnp.concatenate(
+            [blocks[:, i, :di].T for i, di in enumerate(dims)], axis=0)
+        errs = _finish_errs(errs, n_steps, trace_err)
+    else:
+        blocks = [[q0[offs[i]:offs[i + 1], k] for i in range(n_nodes)]
+                  for k in range(r)]
+        errs = []
+        done_full: list = []
+        for k in range(r):
+            vb = blocks[k]
+            for _ in range(iters_per_vec):
+                partial = jnp.stack(
+                    [x.T @ v for x, v in zip(data_blocks, vb)])  # (N,n)
+                ssum = engine.run_debiased(partial, t_c,
+                                           None if closed_form else ledger)
+                vb = [x @ ssum[i] for i, x in enumerate(data_blocks)]
+                vfull = jnp.concatenate(vb)
+                for u in done_full:
+                    vfull = vfull - u * (u @ vfull)
+                vfull = vfull / jnp.linalg.norm(vfull)
+                vb = [vfull[offs[i]:offs[i + 1]] for i in range(n_nodes)]
+                cur = jnp.stack(
+                    [jnp.concatenate(blocks[j]) if j != k else vfull
+                     for j in range(r)], 1)
+                errs.append(_trace(q_true, cur))
+            blocks[k] = vb
+            done_full.append(jnp.concatenate(vb))
+        q_full = jnp.stack([jnp.concatenate(b) for b in blocks], axis=1)
+        errs = np.asarray(errs)
+    if ledger is not None and closed_form:
+        ledger.log_gossip_rounds(np.full(n_steps, t_c),
+                                 engine.graph.adjacency, n_samples)
+    return q_full, errs

@@ -3,7 +3,7 @@
 Node i holds a feature slab X_i in R^{d_i x n}. One outer iteration:
   1. Z_i = X_i^T Q_i                              (local, n x r)
   2. consensus-average + debias -> S ~= sum_j X_j^T Q_j at every node
-  3. V_i = X_i S                                  (local, d_i x r)
+  3. V_i = X_i S_i                                (local, d_i x r)
   4. distributed QR of the stacked V via distributed CholeskyQR2:
        G_i = V_i^T V_i ; G = consensus-sum G_i (r x r traffic only);
        R = chol(G)^T ; Q_i = V_i R^{-1}     (x2 passes)
@@ -11,21 +11,37 @@ Node i holds a feature slab X_i in R^{d_i x n}. One outer iteration:
 Step 4 replaces the push-sum Householder scheme of paper ref [12] with a
 TPU-native equivalent (DESIGN.md sec.2): identical span, MXU-friendly, and the
 per-round network payload shrinks from d_i x r to r x r.
+
+Execution modes (``fused`` flag, same architecture as sdot.py):
+  * fused (default) — the ragged slabs are zero-padded to one (N, d_max, n)
+    stack (exact: padded rows are null in every product) and the ENTIRE
+    t_outer loop — batched slab products (Pallas (node, sample-block)
+    kernels on TPU, fused einsum elsewhere; kernels/slab_ops.py), masked
+    consensus with the device debias table, and the in-scan distributed
+    CholeskyQR2 — runs as one jitted ``lax.scan``. The error trace is
+    computed on device from the padded slabs; communication is accounted in
+    closed form. Zero host syncs per iteration.
+  * eager (``fused=False``) — the original per-iteration Python loop over
+    ragged slab lists. Kept as the correctness oracle
+    (tests/test_fused_zoo.py) and for step-by-step debugging.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .consensus import DenseConsensus
+from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .linalg import orthonormal_init
-from .metrics import CommLedger, subspace_error
+from .metrics import CommLedger, subspace_error, subspace_error_from_cross
+from ..kernels import ops as kops
 
-__all__ = ["FDOTResult", "fdot", "distributed_cholesky_qr"]
+__all__ = ["FDOTResult", "fdot", "distributed_cholesky_qr",
+           "pad_feature_slabs", "unpad_feature_slabs", "split_pad_rows"]
 
 
 @dataclasses.dataclass
@@ -37,6 +53,30 @@ class FDOTResult:
     @property
     def q_full(self) -> jnp.ndarray:
         return jnp.concatenate(self.q_blocks, axis=0)
+
+
+def pad_feature_slabs(blocks: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Zero-pad ragged (d_i, m) node slabs to one (N, d_max, m) stack.
+
+    Exact for every product in Alg. 2: a padded row is null on both sides of
+    X^T Q, contributes a zero row to X S, and adds nothing to V^T V.
+    """
+    d_max = max(int(b.shape[0]) for b in blocks)
+    return jnp.stack([
+        jnp.pad(b, ((0, d_max - b.shape[0]), (0, 0))) for b in blocks])
+
+
+def unpad_feature_slabs(stack: jnp.ndarray, dims: Sequence[int]) -> List[jnp.ndarray]:
+    """Inverse of pad_feature_slabs given the true per-node row counts."""
+    return [stack[i, :di] for i, di in enumerate(dims)]
+
+
+def split_pad_rows(full: jnp.ndarray, dims: Sequence[int]) -> jnp.ndarray:
+    """Split a stacked (d, r) matrix into per-node row slabs and zero-pad to
+    one (N, d_max, r) stack (the layout of the fused F-DOT/d-PM iterates)."""
+    offs = np.cumsum([0] + list(dims))
+    return pad_feature_slabs(
+        [full[offs[i]:offs[i + 1]] for i in range(len(dims))])
 
 
 def distributed_cholesky_qr(
@@ -66,6 +106,50 @@ def distributed_cholesky_qr(
     return blocks
 
 
+def _qr_pass(w, table, v, t_qr, t_max):
+    """One in-scan distributed CholeskyQR pass over padded slabs (N,d_max,r)."""
+    r = v.shape[-1]
+    grams = jnp.einsum("idr,ids->irs", v, v)                      # (N, r, r)
+    gsum = debiased_gossip(w, table, grams, t_qr, t_max)
+    g = (0.5 * (gsum + jnp.swapaxes(gsum, 1, 2))
+         + 1e-10 * jnp.eye(r, dtype=v.dtype))
+    rr = jnp.swapaxes(jnp.linalg.cholesky(g), 1, 2)               # upper R
+    solve = lambda R, b: jax.scipy.linalg.solve_triangular(
+        jnp.swapaxes(R, 0, 1), b.T, lower=True).T
+    return jax.vmap(solve)(rr, v)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
+def _fused_fdot_run(x_pad, w, table, sched, q0_pad, qtrue_pad, *,
+                    t_max: int, t_c_qr: int, passes: int, trace_err: bool):
+    """One compiled program for a whole F-DOT run.
+
+    x_pad: (N, d_max, n) zero-padded slabs; sched: (T_o,) int32 consensus
+    budgets for the partial-product phase; t_c_qr: static constant budget of
+    each QR consensus pass (its gossip scan is exactly t_c_qr rounds — no
+    masking needed); table: (t_max+1, N) debias rows [W^t e_1] with
+    t_max >= max(sched.max(), t_c_qr); q0_pad / qtrue_pad: (N, d_max, r)
+    zero-row-padded slab stacks. Returns (q_pad, (T_o,) error trace — zeros
+    when trace_err is False).
+    """
+
+    def outer(q_pad, t_c):
+        z0 = kops.batched_slab_tq(x_pad, q_pad)                  # (N, n, r)
+        s = debiased_gossip(w, table, z0, t_c, t_max)
+        v = kops.batched_slab_apply(x_pad, s).astype(jnp.float32)
+        for _ in range(passes):
+            v = _qr_pass(w, table, v, jnp.int32(t_c_qr), t_c_qr)
+        if trace_err:
+            cross = jnp.einsum("idr,ids->rs", qtrue_pad, v)      # Q^T Qhat
+            err = subspace_error_from_cross(cross)
+        else:
+            err = jnp.float32(0.0)
+        return v, err
+
+    return jax.lax.scan(outer, q0_pad, sched)
+
+
 def fdot(
     *,
     data_blocks: Sequence[jnp.ndarray],   # node i: X_i (d_i x n)
@@ -74,11 +158,20 @@ def fdot(
     t_outer: int,
     t_c: int = 50,
     t_c_qr: Optional[int] = None,
+    schedule: Optional[np.ndarray] = None,
     q_init: Optional[jnp.ndarray] = None,
     q_true: Optional[jnp.ndarray] = None,
     seed: int = 0,
+    fused: bool = True,
 ) -> FDOTResult:
-    """Run F-DOT over a simulated network (Alg. 2)."""
+    """Run F-DOT over a simulated network (Alg. 2).
+
+    ``schedule`` overrides ``t_c`` with per-outer-iteration consensus budgets
+    for the partial-product phase (the QR phase keeps the constant
+    ``t_c_qr``). ``fused=True`` (default) executes the whole run as a single
+    compiled scan over zero-padded slabs; ``fused=False`` is the eager
+    per-iteration oracle.
+    """
     n_nodes = engine.graph.n_nodes
     if len(data_blocks) != n_nodes:
         raise ValueError("need one feature slab per node")
@@ -86,6 +179,14 @@ def fdot(
     d = sum(dims)
     n_samples = data_blocks[0].shape[1]
     t_c_qr = t_c if t_c_qr is None else t_c_qr
+    passes = 2
+
+    if schedule is None:
+        schedule = consensus_schedule("const", t_outer, t_max=t_c)
+    elif len(schedule) < t_outer:
+        raise ValueError(f"schedule has {len(schedule)} entries but "
+                         f"t_outer={t_outer}")
+    schedule = np.asarray(schedule[:t_outer])
 
     if q_init is None:
         q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
@@ -94,22 +195,47 @@ def fdot(
     q_blocks = [q_init[offs[i]:offs[i + 1]] for i in range(n_nodes)]
 
     ledger = CommLedger()
-    errs = [] if q_true is not None else None
 
-    for _ in range(t_outer):
-        # step 1-2: consensus over the (n x r) partial products
-        z0 = jnp.stack([x.T @ q for x, q in zip(data_blocks, q_blocks)])  # (N,n,r)
-        s = engine.run_debiased(z0, t_c, ledger)                          # (N,n,r)
-        # step 3: local expansion
-        v_blocks = [x @ s[i] for i, x in enumerate(data_blocks)]
-        # step 4: distributed orthonormalization
-        q_blocks = distributed_cholesky_qr(v_blocks, engine, t_c_qr, ledger)
-        if errs is not None:
-            q_full = jnp.concatenate(q_blocks, axis=0)
-            errs.append(float(subspace_error(q_true, q_full)))
+    # engines without the scan interface (e.g. AsyncConsensus) run eagerly
+    if fused and not hasattr(engine, "debias_table"):
+        fused = False
+
+    if fused:
+        t_max = int(max(schedule.max(), t_c_qr)) if t_outer else 0
+        table = engine.debias_table(t_max)
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = pad_feature_slabs(q_blocks)
+        trace_err = q_true is not None
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        q_pad, errs = _fused_fdot_run(
+            x_pad, engine._w, table, jnp.asarray(schedule, jnp.int32),
+            q0_pad, qtrue_pad, t_max=t_max, t_c_qr=int(t_c_qr),
+            passes=passes, trace_err=trace_err)
+        q_blocks = unpad_feature_slabs(q_pad, dims)
+        adj = engine.graph.adjacency
+        ledger.log_gossip_rounds(schedule, adj, n_samples * r)
+        ledger.log_gossip_rounds(np.full(t_outer, passes * t_c_qr), adj,
+                                 r * r)
+        error_trace = np.asarray(errs) if trace_err else None
+    else:
+        errs = [] if q_true is not None else None
+        for t in range(t_outer):
+            # step 1-2: consensus over the (n x r) partial products
+            z0 = jnp.stack([x.T @ q for x, q in zip(data_blocks, q_blocks)])
+            s = engine.run_debiased(z0, int(schedule[t]), ledger)   # (N,n,r)
+            # step 3: local expansion
+            v_blocks = [x @ s[i] for i, x in enumerate(data_blocks)]
+            # step 4: distributed orthonormalization
+            q_blocks = distributed_cholesky_qr(v_blocks, engine, t_c_qr,
+                                               ledger, passes=passes)
+            if errs is not None:
+                q_full = jnp.concatenate(q_blocks, axis=0)
+                errs.append(float(subspace_error(q_true, q_full)))
+        error_trace = np.asarray(errs) if errs is not None else None
 
     return FDOTResult(
         q_blocks=q_blocks,
-        error_trace=np.asarray(errs) if errs is not None else None,
+        error_trace=error_trace,
         ledger=ledger,
     )

@@ -14,6 +14,7 @@ import numpy as np
 
 __all__ = [
     "subspace_error",
+    "subspace_error_from_cross",
     "mean_subspace_error",
     "projector_distance",
     "principal_angles",
@@ -27,8 +28,18 @@ def subspace_error(q_true, q_hat) -> jnp.ndarray:
 
     Invariant to right-rotation of either argument. 0 iff span(Q)==span(Qhat).
     """
-    s = jnp.linalg.svd(q_true.T @ q_hat, compute_uv=False)
-    r = q_true.shape[1]
+    return subspace_error_from_cross(q_true.T @ q_hat)
+
+
+def subspace_error_from_cross(cross) -> jnp.ndarray:
+    """Eq. (11) from a precomputed cross product ``Q_true^T Q_hat``.
+
+    The fused F-DOT/d-PM executors assemble the cross product directly from
+    zero-padded per-node slabs (the padded rows contribute nothing), so the
+    metric never needs the concatenated global estimate.
+    """
+    s = jnp.linalg.svd(cross, compute_uv=False)
+    r = cross.shape[0]
     return jnp.mean(1.0 - jnp.clip(s[:r], 0.0, 1.0) ** 2)
 
 
@@ -72,11 +83,22 @@ class CommLedger:
     p2p        : point-to-point messages (paper's 'P2P' column), total over nodes
     matrices   : number of d-x-r matrix sends (the paper's 'unit' cost)
     scalars    : payload element count actually moved (for byte-level rooflines)
+    awake_counts: per-round awake-node counts logged by async engines
+                  (empty for synchronous runs — every node is awake)
     """
 
     p2p: float = 0.0
     matrices: float = 0.0
     scalars: float = 0.0
+    awake_counts: list = dataclasses.field(default_factory=list)
+
+    def log_awake_rounds(self, counts) -> None:
+        """Record realized per-round awake-node counts (async gossip)."""
+        self.awake_counts.extend(int(c) for c in np.asarray(counts).ravel())
+
+    def mean_awake(self) -> float:
+        """Mean awake nodes per round over the logged async rounds."""
+        return float(np.mean(self.awake_counts)) if self.awake_counts else float("nan")
 
     def log_gossip_round(self, adjacency: np.ndarray, payload_elems: int) -> None:
         sends = float(adjacency.sum())  # directed messages this round
@@ -107,4 +129,5 @@ class CommLedger:
             self.p2p + other.p2p,
             self.matrices + other.matrices,
             self.scalars + other.scalars,
+            self.awake_counts + other.awake_counts,
         )

@@ -164,8 +164,9 @@ def sdot(
     ledger = CommLedger()
     payload = d * r
 
-    # engines without the scan interface (e.g. AsyncConsensus, whose round
-    # matrices are resampled on the host per call) run eagerly
+    # engines without the whole-run scan interface (e.g. AsyncConsensus,
+    # whose realized round matrices are sampled per run_debiased call) run
+    # the eager loop — each consensus call is still one device dispatch
     if fused and not hasattr(engine, "debias_table"):
         fused = False
 

@@ -1,0 +1,330 @@
+"""Vmapped Monte-Carlo sweep engine over the fused algorithm zoo.
+
+The paper's Figs. 4-6 are Monte-Carlo averages over random initializations
+(and the tables sweep topologies and consensus schedules). With the fused
+whole-run executors (sdot.py, fdot.py, baselines.py) a full sweep collapses
+into a single compiled program and ONE device call:
+
+* the **seed axis** is a ``jax.vmap`` over per-seed orthonormal inits;
+* the **case axis** (topology x schedule) is a second ``vmap`` over the
+  stacked weight matrices, debias tables, and schedule arrays — all dense
+  (N, N) / (t_max+1, N) / (T_o,) arrays, so heterogeneous graphs stack as
+  long as they share the node count.
+
+Compare: the eager zoo runs seeds x cases x t_outer Python iterations with a
+host sync each — the sweep engine runs one dispatch total, and the whole
+(C, S, T_o) error-trace tensor comes back in a single transfer
+(benchmarks/sweep_bench.py measures the win; tests/test_fused_zoo.py pins
+sweep == per-seed fused runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .baselines import (_fused_d_pm, _fused_deepca, _fused_dpgd, _fused_dsa,
+                        _fused_seq_dist_pm)
+from .consensus import DenseConsensus, consensus_schedule
+from .fdot import pad_feature_slabs, split_pad_rows
+from .linalg import orthonormal_init
+from .metrics import CommLedger
+from .sdot import _fused_run, _stack_data, local_cov_apply
+
+__all__ = ["SweepResult", "sdot_sweep", "fdot_sweep", "baseline_sweep"]
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked outputs of a Monte-Carlo sweep.
+
+    ``q`` and ``error_traces`` carry a leading case axis C (only when the
+    sweep ran multiple topology/schedule cases) and a seed axis S.
+    """
+
+    q: jnp.ndarray                 # (C?, S, ...) final estimates
+    error_traces: Optional[np.ndarray]   # (C?, S, T) per-seed error traces
+    ledger: CommLedger             # aggregate communication over all runs
+    seeds: np.ndarray
+
+    def _traces(self) -> np.ndarray:
+        if self.error_traces is None:
+            raise ValueError("sweep ran without q_true — no error traces "
+                             "were recorded")
+        return self.error_traces
+
+    @property
+    def mean_trace(self) -> np.ndarray:
+        """Monte-Carlo mean over the seed axis."""
+        return self._traces().mean(axis=-2)
+
+    @property
+    def std_trace(self) -> np.ndarray:
+        return self._traces().std(axis=-2)
+
+
+def _seed_inits(seeds: Sequence[int], d: int, r: int) -> jnp.ndarray:
+    """(S, d, r) orthonormal inits, one per Monte-Carlo seed (vmapped QR)."""
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+    return jax.vmap(lambda k: orthonormal_init(k, d, r))(keys)
+
+
+def _broadcast_cases(engines, schedules, t_outer, t_c):
+    """Zip-broadcast engines x schedules into C aligned cases."""
+    if isinstance(engines, DenseConsensus):
+        engines = [engines]
+    engines = list(engines)
+    if schedules is None:
+        schedules = [consensus_schedule("const", t_outer, t_max=t_c)]
+    elif isinstance(schedules, np.ndarray) and schedules.ndim == 1:
+        schedules = [schedules]
+    schedules = [np.asarray(s) for s in schedules]
+    for s in schedules:
+        if len(s) < t_outer:
+            raise ValueError(f"schedule has {len(s)} entries but "
+                             f"t_outer={t_outer}")
+    c = max(len(engines), len(schedules))
+    if len(engines) == 1:
+        engines = engines * c
+    if len(schedules) == 1:
+        schedules = schedules * c
+    if len(engines) != len(schedules):
+        raise ValueError("engines and schedules must zip-broadcast: got "
+                         f"{len(engines)} vs {len(schedules)}")
+    n_nodes = engines[0].graph.n_nodes
+    if any(e.graph.n_nodes != n_nodes for e in engines):
+        raise ValueError("all sweep engines must share the node count")
+    return engines, [s[:t_outer] for s in schedules]
+
+
+def _case_stacks(engines, schedules, t_max):
+    ws = jnp.stack([e._w for e in engines])
+    tables = jnp.stack([e.debias_table(t_max) for e in engines])
+    scheds = jnp.asarray(np.stack(schedules), jnp.int32)
+    return ws, tables, scheds
+
+
+def _squeeze_case(arr, single_case: bool):
+    return arr[0] if single_case else arr
+
+
+def sdot_sweep(
+    *,
+    covs: Optional[jnp.ndarray] = None,
+    data: Optional[Sequence[jnp.ndarray]] = None,
+    engines: Union[DenseConsensus, Sequence[DenseConsensus]],
+    r: int,
+    t_outer: int,
+    schedules=None,
+    t_c: int = 50,
+    seeds: Sequence[int] = (0,),
+    q_true: Optional[jnp.ndarray] = None,
+) -> SweepResult:
+    """Monte-Carlo S-DOT/SA-DOT sweep: seeds x (topology, schedule) cases in
+    one compile + one device call.
+
+    ``engines`` / ``schedules`` zip-broadcast into the case axis (pass one
+    engine and k schedules, k engines and one schedule, or aligned lists).
+    Each seed gets its own orthonormal init (the paper's Monte-Carlo axis).
+    """
+    if (covs is None) == (data is None):
+        raise ValueError("provide exactly one of covs / data")
+    engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c)
+    single_case = len(engines) == 1
+    n = engines[0].graph.n_nodes
+    d = covs.shape[1] if covs is not None else data[0].shape[0]
+    t_max = int(max(int(s.max()) for s in schedules)) if t_outer else 0
+    ws, tables, scheds = _case_stacks(engines, schedules, t_max)
+
+    if covs is not None:
+        operand, mode = covs, "cov"
+    else:
+        operand, mode = _stack_data(data), "data"
+    trace_err = q_true is not None
+    q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+
+    q0 = _seed_inits(seeds, d, r)                               # (S, d, r)
+    q0_nodes = jnp.broadcast_to(q0[:, None], (len(seeds), n, d, r))
+
+    run = lambda w, table, sched, q0n: _fused_run(
+        operand, w, table, sched, q0n, q_arg,
+        mode=mode, t_max=t_max, trace_err=trace_err)
+    over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
+    over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
+    q_nodes, errs = over_cases(ws, tables, scheds, q0_nodes)
+
+    ledger = CommLedger()
+    for eng, sched in zip(engines, schedules):
+        for _ in seeds:
+            ledger.log_gossip_rounds(sched, eng.graph.adjacency, d * r)
+    return SweepResult(
+        q=_squeeze_case(q_nodes, single_case),
+        error_traces=(np.asarray(_squeeze_case(errs, single_case))
+                      if trace_err else None),
+        ledger=ledger,
+        seeds=np.asarray(list(seeds)),
+    )
+
+
+def fdot_sweep(
+    *,
+    data_blocks: Sequence[jnp.ndarray],
+    engines: Union[DenseConsensus, Sequence[DenseConsensus]],
+    r: int,
+    t_outer: int,
+    schedules=None,
+    t_c: int = 50,
+    t_c_qr: Optional[int] = None,
+    seeds: Sequence[int] = (0,),
+    q_true: Optional[jnp.ndarray] = None,
+) -> SweepResult:
+    """Monte-Carlo F-DOT sweep over padded feature slabs (Fig. 6 axis)."""
+    from .fdot import _fused_fdot_run
+
+    engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c)
+    single_case = len(engines) == 1
+    n_nodes = engines[0].graph.n_nodes
+    if len(data_blocks) != n_nodes:
+        raise ValueError("need one feature slab per node")
+    dims = [int(x.shape[0]) for x in data_blocks]
+    d = sum(dims)
+    n_samples = int(data_blocks[0].shape[1])
+    t_c_qr = int(t_c if t_c_qr is None else t_c_qr)
+    passes = 2
+    t_max = int(max(max(int(s.max()) for s in schedules), t_c_qr))
+    ws, tables, scheds = _case_stacks(engines, schedules, t_max)
+
+    x_pad = pad_feature_slabs(data_blocks)
+    q0_pad = jnp.stack([split_pad_rows(q, dims)
+                        for q in _seed_inits(seeds, d, r)])
+    trace_err = q_true is not None
+    qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                 else jnp.zeros_like(q0_pad[0]))
+
+    run = lambda w, table, sched, q0p: _fused_fdot_run(
+        x_pad, w, table, sched, q0p, qtrue_pad,
+        t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
+    over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
+    over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
+    q_pad, errs = over_cases(ws, tables, scheds, q0_pad)
+
+    ledger = CommLedger()
+    for eng, sched in zip(engines, schedules):
+        for _ in seeds:
+            ledger.log_gossip_rounds(sched, eng.graph.adjacency,
+                                     n_samples * r)
+            ledger.log_gossip_rounds(
+                np.full(t_outer, passes * t_c_qr), eng.graph.adjacency, r * r)
+    return SweepResult(
+        q=_squeeze_case(q_pad, single_case),
+        error_traces=(np.asarray(_squeeze_case(errs, single_case))
+                      if trace_err else None),
+        ledger=ledger,
+        seeds=np.asarray(list(seeds)),
+    )
+
+
+def baseline_sweep(
+    name: str,
+    *,
+    covs: Optional[jnp.ndarray] = None,
+    data_blocks: Optional[Sequence[jnp.ndarray]] = None,
+    engine: DenseConsensus,
+    r: int,
+    seeds: Sequence[int] = (0,),
+    q_true: Optional[jnp.ndarray] = None,
+    t_outer: Optional[int] = None,
+    iters_per_vec: Optional[int] = None,
+    lr: float = 0.1,
+    t_mix: int = 3,
+    t_c: int = 50,
+) -> SweepResult:
+    """Monte-Carlo sweep of one fused baseline over seeds (one device call).
+
+    ``name``: dsa | dpgd | deepca (sample-partitioned, need ``covs`` +
+    ``t_outer``), seq_dist_pm (``covs`` + ``iters_per_vec``), or d_pm
+    (feature-partitioned, ``data_blocks`` + ``iters_per_vec``).
+    """
+    trace_err = q_true is not None
+    ledger = CommLedger()
+    adj = engine.graph.adjacency
+    s_count = len(list(seeds))
+
+    if name in ("dsa", "dpgd", "deepca"):
+        if covs is None or t_outer is None:
+            raise ValueError(f"{name} sweep needs covs and t_outer")
+        n, d, _ = covs.shape
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q0 = _seed_inits(seeds, d, r)
+        q0_nodes = jnp.broadcast_to(q0[:, None], (s_count, n, d, r))
+        if name == "dsa":
+            run = lambda q0n: _fused_dsa(covs, engine._w, q0n,
+                                         jnp.float32(lr), q_arg,
+                                         t_outer=t_outer, trace_err=trace_err)
+            rounds = np.ones(t_outer)
+        elif name == "dpgd":
+            run = lambda q0n: _fused_dpgd(covs, engine._w, q0n,
+                                          jnp.float32(lr), q_arg,
+                                          t_outer=t_outer, trace_err=trace_err)
+            rounds = np.ones(t_outer)
+        else:
+            run = lambda q0n: _fused_deepca(
+                covs, engine._w, q0n, local_cov_apply(covs, q0n), q_arg,
+                t_outer=t_outer, t_mix=t_mix, trace_err=trace_err)
+            rounds = np.full(t_outer, t_mix)
+        q, errs = jax.vmap(run)(q0_nodes)
+        for _ in range(s_count):
+            ledger.log_gossip_rounds(rounds, adj, d * r)
+    elif name == "seq_dist_pm":
+        if covs is None or iters_per_vec is None:
+            raise ValueError("seq_dist_pm sweep needs covs and iters_per_vec")
+        n, d, _ = covs.shape
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q0 = _seed_inits(seeds, d, r)
+        cols0 = jnp.broadcast_to(
+            jnp.swapaxes(q0, 1, 2)[:, :, None, :], (s_count, r, n, d))
+        table = engine.debias_table(t_c)
+        run = lambda c0: _fused_seq_dist_pm(
+            covs, engine._w, table, c0, q_arg, r=r,
+            iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
+            trace_err=trace_err)
+        cols, errs = jax.vmap(run)(cols0)
+        q = jnp.transpose(cols, (0, 2, 3, 1))
+        for _ in range(s_count):
+            ledger.log_gossip_rounds(np.full(r * iters_per_vec, t_c), adj, d)
+    elif name == "d_pm":
+        if data_blocks is None or iters_per_vec is None:
+            raise ValueError("d_pm sweep needs data_blocks and iters_per_vec")
+        dims = [int(x.shape[0]) for x in data_blocks]
+        d = sum(dims)
+        n_samples = int(data_blocks[0].shape[1])
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = jnp.stack([split_pad_rows(q, dims)
+                            for q in _seed_inits(seeds, d, r)])
+        blocks0 = jnp.transpose(q0_pad, (0, 3, 1, 2))           # (S, r, N, d_max)
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad[0]))
+        table = engine.debias_table(t_c)
+        run = lambda b0: _fused_d_pm(
+            x_pad, engine._w, table, b0, qtrue_pad, r=r,
+            iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
+            trace_err=trace_err)
+        blocks, errs = jax.vmap(run)(blocks0)
+        q = jnp.concatenate(
+            [jnp.swapaxes(blocks[:, :, i, :di], 1, 2)
+             for i, di in enumerate(dims)], axis=1)             # (S, d, r)
+        for _ in range(s_count):
+            ledger.log_gossip_rounds(np.full(r * iters_per_vec, t_c), adj,
+                                     n_samples)
+    else:
+        raise ValueError(f"unknown baseline: {name}")
+
+    return SweepResult(
+        q=q,
+        error_traces=np.asarray(errs) if trace_err else None,
+        ledger=ledger,
+        seeds=np.asarray(list(seeds)),
+    )

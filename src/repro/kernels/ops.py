@@ -19,9 +19,10 @@ from . import ref
 from .flash_attention import flash_attention_pallas
 from .gram_qr import gram_qr_pallas
 from .gram_update import batched_gram_apply_pallas, gram_apply_pallas
+from .slab_ops import batched_slab_apply_pallas, batched_slab_tq_pallas
 
-__all__ = ["gram_apply", "batched_gram_apply", "gram_qr", "flash_attention",
-           "on_tpu"]
+__all__ = ["gram_apply", "batched_gram_apply", "batched_slab_tq",
+           "batched_slab_apply", "gram_qr", "flash_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -87,6 +88,60 @@ def batched_gram_apply(x_stack: jnp.ndarray, q_stack: jnp.ndarray,
     acc = v.dtype
     v = v / n_true.astype(acc)[:, None, None]
     return v.astype(q_stack.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "use_pallas", "interpret"))
+def batched_slab_tq(x_stack: jnp.ndarray, q_stack: jnp.ndarray, *,
+                    block_n: int = 512, use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Z[i] = X_i^T Q_i — batched F-DOT step 1 for all nodes at once.
+
+    x_stack: (N, d_max, n) zero-padded feature slabs, q_stack: (N, d_max, r)
+    zero-row-padded iterates (padding exact in the product). This is the
+    dispatch point for the fused F-DOT executor's partial-product step.
+
+    ``use_pallas=None`` auto-selects: the Pallas (node, sample-block) kernel
+    on TPU, the fused-einsum oracle elsewhere (same rationale as
+    batched_gram_apply — interpret-mode Pallas unrolls the grid at trace
+    time, bloating the fused scan's XLA program on CPU for no win).
+    """
+    n_nodes, d, n = x_stack.shape
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    vmem_bytes = (d * block_n + d * q_stack.shape[-1]
+                  + block_n * q_stack.shape[-1]) * 4
+    if not use_pallas or vmem_bytes > 8 * 2**20:
+        return ref.batched_slab_tq_ref(x_stack, q_stack)
+    interp = (not on_tpu()) if interpret is None else interpret
+    xp = _pad_to(x_stack, 2, block_n)
+    z = batched_slab_tq_pallas(xp, q_stack, block_n=block_n, interpret=interp)
+    return z[:, :n].astype(q_stack.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "use_pallas", "interpret"))
+def batched_slab_apply(x_stack: jnp.ndarray, s_stack: jnp.ndarray, *,
+                       block_n: int = 512, use_pallas: bool | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """V[i] = X_i S_i — batched F-DOT step 3 for all nodes at once.
+
+    x_stack: (N, d_max, n) zero-padded feature slabs, s_stack: (N, n, r)
+    debiased consensus sums. The sample axis of both operands is padded
+    together, so padded columns of X multiply zero rows of S — exact.
+    """
+    n_nodes, d, n = x_stack.shape
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    r = s_stack.shape[-1]
+    vmem_bytes = (d * block_n + block_n * r + d * r) * 4
+    if not use_pallas or vmem_bytes > 8 * 2**20:
+        return ref.batched_slab_apply_ref(x_stack, s_stack)
+    interp = (not on_tpu()) if interpret is None else interpret
+    xp = _pad_to(x_stack, 2, block_n)
+    sp = _pad_to(s_stack, 1, block_n)
+    v = batched_slab_apply_pallas(xp, sp, block_n=block_n, interpret=interp)
+    return v.astype(s_stack.dtype)
 
 
 @functools.partial(

@@ -4,7 +4,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["gram_apply_ref", "batched_gram_apply_ref", "flash_attention_ref",
-           "gram_qr_ref"]
+           "gram_qr_ref", "batched_slab_tq_ref", "batched_slab_apply_ref"]
 
 
 def gram_apply_ref(x: jnp.ndarray, q: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
@@ -35,6 +35,29 @@ def batched_gram_apply_ref(x_stack: jnp.ndarray, q_stack: jnp.ndarray,
     v = jnp.einsum("idn,inr->idr", x32, s)
     v = v / n_true.astype(acc)[:, None, None]
     return v.astype(q_stack.dtype)
+
+
+def batched_slab_tq_ref(x_stack: jnp.ndarray, q_stack: jnp.ndarray) -> jnp.ndarray:
+    """Z[i] = X_i^T Q_i over stacked feature slabs (F-DOT Alg. 2, step 1).
+
+    x_stack: (N, d_max, n) zero-padded slabs, q_stack: (N, d_max, r) iterates
+    padded with zero rows to match. Padding is exact: the padded rows are
+    null in both operands, so they contribute nothing to the (n, r) product.
+    """
+    acc = jnp.promote_types(x_stack.dtype, jnp.float32)
+    return jnp.einsum("idn,idr->inr", x_stack.astype(acc),
+                      q_stack.astype(acc)).astype(q_stack.dtype)
+
+
+def batched_slab_apply_ref(x_stack: jnp.ndarray, s_stack: jnp.ndarray) -> jnp.ndarray:
+    """V[i] = X_i S_i over stacked feature slabs (F-DOT Alg. 2, step 3).
+
+    x_stack: (N, d_max, n) zero-padded slabs, s_stack: (N, n, r) debiased
+    consensus sums. Padded rows of X produce zero rows of V — exact.
+    """
+    acc = jnp.promote_types(x_stack.dtype, jnp.float32)
+    return jnp.einsum("idn,inr->idr", x_stack.astype(acc),
+                      s_stack.astype(acc)).astype(s_stack.dtype)
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,0 +1,120 @@
+"""Pallas TPU kernels: batched feature-slab products for fused F-DOT.
+
+F-DOT (Alg. 2) keeps node i's feature slab X_i (d_i x n) local and moves only
+(n x r) partial products and (r x r) Grams over the network. Its two compute
+hot spots per outer iteration are
+
+    step 1:  Z_i = X_i^T Q_i        (d_max, n)^T (d_max, r) -> (n, r)
+    step 3:  V_i = X_i S_i          (d_max, n)   (n, r)     -> (d_max, r)
+
+batched over all N nodes (slabs zero-padded to a common d_max — exact, the
+padded rows are null in both operands). Each is one kernel launch with a
+(node, sample-block) grid so the fused whole-run scan stays a single
+dispatch chain on TPU:
+
+* ``batched_slab_tq_pallas``    — no accumulation: sample block j of node i
+  writes its own (bn, r) output tile.
+* ``batched_slab_apply_pallas`` — accumulates X_b S_b over sample blocks into
+  the (d_max, r) output tile (TPU grids are sequential, so revisiting the
+  output block is safe; init at j == 0 — same pattern as gram_update.py).
+
+Call through ops.batched_slab_tq / ops.batched_slab_apply, which pad n to a
+block multiple and fall back to the fused-einsum oracle off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["batched_slab_tq_pallas", "batched_slab_apply_pallas"]
+
+
+def _slab_tq_kernel(x_ref, q_ref, z_ref):
+    """One (i, j) grid step: Z_{i,b} = X_{i,b}^T Q_i for sample block b."""
+    x = x_ref[0]            # (d, bn) — node i's sample block
+    q = q_ref[0]            # (d, r)  — node i's slab iterate
+    z = jax.lax.dot_general(
+        x, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b^T Q: (bn, r)
+    z_ref[0, ...] = z.astype(z_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def batched_slab_tq_pallas(x_stack: jnp.ndarray, q_stack: jnp.ndarray, *,
+                           block_n: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Z[i] = X_i^T Q_i for all nodes in one launch.
+
+    x_stack: (N, d, n) with n % block_n == 0 (ops.py pads); q_stack: (N, d, r).
+    Output (N, n, r) f32; each (i, j) grid step owns its output tile, so no
+    accumulation is needed.
+    """
+    n_nodes, d, n = x_stack.shape
+    n2, d2, r = q_stack.shape
+    assert n_nodes == n2 and d == d2, "x_stack and q_stack must align"
+    assert n % block_n == 0, "ops.py pads n to a block multiple"
+    n_blocks = n // block_n
+
+    return pl.pallas_call(
+        _slab_tq_kernel,
+        grid=(n_nodes, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, d, block_n), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, d, r), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, r), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, n, r), jnp.float32),
+        interpret=interpret,
+    )(x_stack, q_stack)
+
+
+def _slab_apply_kernel(x_ref, s_ref, v_ref):
+    """One (i, j) grid step: accumulate X_{i,b} S_{i,b} into V_i.
+
+    j (sample block) is the fast grid dimension — node i's output tile is
+    revisited consecutively; init at j == 0.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    x = x_ref[0]            # (d, bn)
+    s = s_ref[0]            # (bn, r)
+    v = jax.lax.dot_general(
+        x, s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b S_b: (d, r)
+    v_ref[0, ...] += v.astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def batched_slab_apply_pallas(x_stack: jnp.ndarray, s_stack: jnp.ndarray, *,
+                              block_n: int = 512,
+                              interpret: bool = False) -> jnp.ndarray:
+    """V[i] = X_i S_i for all nodes in one launch.
+
+    x_stack: (N, d, n) with n % block_n == 0; s_stack: (N, n, r) (ops.py
+    zero-pads the sample axis of both — exact, padded sample columns multiply
+    padded S rows that are zero). Output (N, d, r) f32.
+    """
+    n_nodes, d, n = x_stack.shape
+    n2, n3, r = s_stack.shape
+    assert n_nodes == n2 and n == n3, "x_stack and s_stack must align"
+    assert n % block_n == 0, "ops.py pads n to a block multiple"
+    n_blocks = n // block_n
+
+    return pl.pallas_call(
+        _slab_apply_kernel,
+        grid=(n_nodes, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, d, block_n), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, block_n, r), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d, r), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, d, r), jnp.float32),
+        interpret=interpret,
+    )(x_stack, s_stack)

@@ -1,0 +1,326 @@
+"""Fused whole-run executors for F-DOT, every distributed baseline, the
+device-side AsyncConsensus, and the vmapped Monte-Carlo sweep engine — all
+against their eager/host oracles (const + lin2 schedules, ring + ER
+topologies, ledger equality)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_gossip import AsyncConsensus
+from repro.core.baselines import d_pm, deepca, dpgd, dsa, seq_dist_pm
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.fdot import fdot, pad_feature_slabs, unpad_feature_slabs
+from repro.core.linalg import eigh_topr
+from repro.core.metrics import CommLedger
+from repro.core.sdot import sdot
+from repro.core.sweep import baseline_sweep, fdot_sweep, sdot_sweep
+from repro.core.topology import erdos_renyi, ring
+from repro.data.pipeline import gaussian_eigengap_data, partition_features
+
+
+@pytest.fixture(scope="module")
+def fzoo():
+    d, r, n_nodes = 20, 5, 10
+    x, _, _ = gaussian_eigengap_data(d, 3000, r, 0.7, seed=0)
+    _, q_true = eigh_topr(x @ x.T, r)
+    fblocks = partition_features(x, n_nodes)
+    return dict(d=d, r=r, n_nodes=n_nodes, x=x, fblocks=fblocks,
+                q_true=q_true)
+
+
+@pytest.fixture(scope="module")
+def topologies(fzoo):
+    n = fzoo["n_nodes"]
+    return {
+        "er": DenseConsensus(erdos_renyi(n, 0.5, seed=1)),
+        "ring": DenseConsensus(ring(n)),
+    }
+
+
+def _assert_ledgers_equal(a: CommLedger, b: CommLedger):
+    assert a.p2p == b.p2p
+    assert a.matrices == b.matrices
+    assert a.scalars == b.scalars
+
+
+# ---------------------------------------------------------------------------
+# fused F-DOT vs the eager oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topo", ["er", "ring"])
+@pytest.mark.parametrize("sched_kind", ["const", "lin2"])
+def test_fdot_fused_matches_eager(fzoo, topologies, topo, sched_kind):
+    eng = topologies[topo]
+    sched = (None if sched_kind == "const"
+             else consensus_schedule("lin2", 15, cap=50))
+    kw = dict(data_blocks=fzoo["fblocks"], engine=eng, r=fzoo["r"],
+              t_outer=15, t_c=50, schedule=sched, q_true=fzoo["q_true"])
+    eager = fdot(fused=False, **kw)
+    fused = fdot(fused=True, **kw)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused.q_full),
+                               np.asarray(eager.q_full), rtol=1e-4,
+                               atol=1e-5)
+    _assert_ledgers_equal(fused.ledger, eager.ledger)
+
+
+def test_fdot_fused_ragged_slabs(fzoo):
+    """Uneven feature split: zero-row padding must not change the result."""
+    blocks = partition_features(fzoo["x"], 7)
+    eng = DenseConsensus(erdos_renyi(7, 0.6, seed=2))
+    kw = dict(data_blocks=blocks, engine=eng, r=fzoo["r"], t_outer=12,
+              t_c=40, q_true=fzoo["q_true"])
+    eager = fdot(fused=False, **kw)
+    fused = fdot(fused=True, **kw)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+    for fb, eb in zip(fused.q_blocks, eager.q_blocks):
+        assert fb.shape == eb.shape
+        np.testing.assert_allclose(np.asarray(fb), np.asarray(eb), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_fdot_short_schedule_rejected(fzoo, topologies):
+    for fused in (True, False):
+        with pytest.raises(ValueError, match="schedule"):
+            fdot(data_blocks=fzoo["fblocks"], engine=topologies["er"],
+                 r=fzoo["r"], t_outer=10, schedule=np.array([5, 5]),
+                 fused=fused)
+
+
+def test_pad_unpad_feature_slabs_roundtrip(fzoo):
+    dims = [b.shape[0] for b in fzoo["fblocks"]]
+    stack = pad_feature_slabs(fzoo["fblocks"])
+    back = unpad_feature_slabs(stack, dims)
+    for a, b in zip(back, fzoo["fblocks"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fused baselines vs the eager oracles (ledger equality included)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("topo", ["er", "ring"])
+@pytest.mark.parametrize("name", ["dsa", "dpgd", "deepca", "seq_dist_pm"])
+def test_baseline_fused_matches_eager(psa_problem, topologies, topo, name):
+    p = psa_problem
+    eng = topologies[topo]
+    calls = {
+        "dsa": lambda f, led: dsa(p["covs"], eng, p["r"], t_outer=40, lr=0.05,
+                                  q_true=p["q_true"], ledger=led, fused=f),
+        "dpgd": lambda f, led: dpgd(p["covs"], eng, p["r"], t_outer=40,
+                                    lr=0.05, q_true=p["q_true"], ledger=led,
+                                    fused=f),
+        "deepca": lambda f, led: deepca(p["covs"], eng, p["r"], t_outer=30,
+                                        t_mix=3, q_true=p["q_true"],
+                                        ledger=led, fused=f),
+        "seq_dist_pm": lambda f, led: seq_dist_pm(
+            p["covs"], eng, p["r"], iters_per_vec=8, t_c=50,
+            q_true=p["q_true"], ledger=led, fused=f),
+    }
+    led_e, led_f = CommLedger(), CommLedger()
+    q_e, e_e = calls[name](False, led_e)
+    q_f, e_f = calls[name](True, led_f)
+    np.testing.assert_allclose(e_f, e_e, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(q_f), np.asarray(q_e), rtol=1e-4,
+                               atol=1e-5)
+    _assert_ledgers_equal(led_f, led_e)
+
+
+@pytest.mark.parametrize("topo", ["er", "ring"])
+def test_d_pm_fused_matches_eager(fzoo, topologies, topo):
+    eng = topologies[topo]
+    led_e, led_f = CommLedger(), CommLedger()
+    q_e, e_e = d_pm(fzoo["fblocks"], eng, 3, iters_per_vec=10, t_c=50,
+                    q_true=fzoo["q_true"][:, :3], ledger=led_e, fused=False)
+    q_f, e_f = d_pm(fzoo["fblocks"], eng, 3, iters_per_vec=10, t_c=50,
+                    q_true=fzoo["q_true"][:, :3], ledger=led_f, fused=True)
+    np.testing.assert_allclose(e_f, e_e, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(q_f), np.asarray(q_e), rtol=1e-4,
+                               atol=1e-5)
+    _assert_ledgers_equal(led_f, led_e)
+
+
+def test_seq_dist_pm_async_engine_logs_realized_sends(psa_problem):
+    """With an async engine the eager fallback must log the realized
+    (awake-dependent) sends per round, not the synchronous closed form."""
+    p = psa_problem
+    eng = AsyncConsensus(erdos_renyi(p["n_nodes"], 0.5, seed=1), p_awake=0.5,
+                         seed=0)
+    led = CommLedger()
+    seq_dist_pm(p["covs"], eng, 2, iters_per_vec=2, t_c=10, ledger=led)
+    rounds = 2 * 2 * 10
+    assert len(led.awake_counts) == rounds
+    sync_sends = float(eng.graph.adjacency.sum()) * rounds
+    assert 0 < led.p2p < sync_sends      # ~p_awake^2 of the sync count
+
+
+def test_baseline_fused_no_q_true_nan_trace(psa_problem, topologies):
+    """Without ground truth both modes return the NaN trace convention."""
+    _, errs = dsa(psa_problem["covs"], topologies["er"], psa_problem["r"],
+                  t_outer=5, fused=True)
+    assert errs.shape == (5,)
+    assert np.all(np.isnan(errs))
+
+
+# ---------------------------------------------------------------------------
+# device-side AsyncConsensus vs the host NumPy oracle
+# ---------------------------------------------------------------------------
+def test_async_device_matches_host_on_shared_masks():
+    g = erdos_renyi(10, 0.5, seed=1)
+    rng = np.random.default_rng(3)
+    z0 = jnp.asarray(rng.standard_normal((10, 6, 2)), jnp.float32)
+    dev = AsyncConsensus(g, p_awake=0.6, seed=0)
+    host = AsyncConsensus(g, p_awake=0.6, seed=0, fused=False)
+    masks = np.asarray(dev.sample_awake(40))
+    led_d, led_h = CommLedger(), CommLedger()
+    out_d = dev.run_debiased(z0, 40, ledger=led_d, awake=jnp.asarray(masks))
+    out_h = host.run_debiased(z0, 40, ledger=led_h, awake=masks)
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_h),
+                               rtol=1e-4, atol=1e-4)
+    _assert_ledgers_equal(led_d, led_h)
+    assert led_d.awake_counts == led_h.awake_counts
+    assert len(led_d.awake_counts) == 40
+    assert 0.0 <= led_d.mean_awake() <= 10.0
+
+
+def test_async_fused_converges_to_sum():
+    eng = AsyncConsensus(erdos_renyi(10, 0.5, seed=1), p_awake=0.7, seed=0)
+    rng = np.random.default_rng(0)
+    z0 = jnp.asarray(rng.standard_normal((10, 6, 2)), jnp.float32)
+    out = eng.run_debiased(z0, 300)
+    assert float(jnp.abs(out - z0.sum(0)[None]).max()) < 1e-3
+
+
+def test_async_injected_masks_respect_t_c():
+    """Only the first t_c injected mask rows are consumed (like the host
+    loop); too few rows fail loudly in both modes."""
+    g = erdos_renyi(10, 0.5, seed=1)
+    z0 = jnp.asarray(np.random.default_rng(1).standard_normal((10, 4, 2)),
+                     jnp.float32)
+    dev = AsyncConsensus(g, p_awake=0.6, seed=0)
+    host = AsyncConsensus(g, p_awake=0.6, seed=0, fused=False)
+    masks = np.asarray(dev.sample_awake(40))
+    out_long = dev.run_debiased(z0, 10, awake=jnp.asarray(masks))
+    out_exact = dev.run_debiased(z0, 10, awake=jnp.asarray(masks[:10]))
+    np.testing.assert_array_equal(np.asarray(out_long), np.asarray(out_exact))
+    out_h = host.run_debiased(z0, 10, awake=masks)
+    np.testing.assert_allclose(np.asarray(out_long), np.asarray(out_h),
+                               rtol=1e-4, atol=1e-4)
+    for eng in (dev, host):
+        with pytest.raises(ValueError, match="awake"):
+            eng.run_debiased(z0, 50, awake=jnp.asarray(masks))
+
+
+def test_async_sample_awake_stream_advances():
+    eng = AsyncConsensus(erdos_renyi(10, 0.5, seed=1), p_awake=0.5, seed=0)
+    m1, m2 = np.asarray(eng.sample_awake(20)), np.asarray(eng.sample_awake(20))
+    assert m1.shape == (20, 10)
+    assert not np.array_equal(m1, m2)
+
+
+# ---------------------------------------------------------------------------
+# vmapped Monte-Carlo sweep engine == per-seed fused runs
+# ---------------------------------------------------------------------------
+def test_sdot_sweep_matches_per_seed_runs(psa_problem, topologies):
+    p = psa_problem
+    engines = [topologies["er"], topologies["ring"]]
+    schedules = [consensus_schedule("const", 10, t_max=30),
+                 consensus_schedule("lin2", 10, cap=30)]
+    seeds = [0, 1, 2]
+    sw = sdot_sweep(covs=p["covs"], engines=engines, schedules=schedules,
+                    r=p["r"], t_outer=10, seeds=seeds, q_true=p["q_true"])
+    assert sw.error_traces.shape == (2, 3, 10)
+    led = CommLedger()
+    for ci, (eng, sched) in enumerate(zip(engines, schedules)):
+        for si, s in enumerate(seeds):
+            res = sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=10,
+                       schedule=sched, seed=s, q_true=p["q_true"])
+            led = led.merged(res.ledger)
+            np.testing.assert_allclose(sw.error_traces[ci, si],
+                                       res.error_trace, rtol=1e-5,
+                                       atol=1e-7)
+    _assert_ledgers_equal(sw.ledger, led)
+    assert sw.mean_trace.shape == (2, 10)
+    assert sw.std_trace.shape == (2, 10)
+
+
+def test_fdot_sweep_matches_per_seed_runs(fzoo, topologies):
+    seeds = [0, 1]
+    sw = fdot_sweep(data_blocks=fzoo["fblocks"], engines=topologies["er"],
+                    r=fzoo["r"], t_outer=8, t_c=30, seeds=seeds,
+                    q_true=fzoo["q_true"])
+    assert sw.error_traces.shape == (2, 8)
+    led = CommLedger()
+    for si, s in enumerate(seeds):
+        res = fdot(data_blocks=fzoo["fblocks"], engine=topologies["er"],
+                   r=fzoo["r"], t_outer=8, t_c=30, seed=s,
+                   q_true=fzoo["q_true"])
+        led = led.merged(res.ledger)
+        np.testing.assert_allclose(sw.error_traces[si], res.error_trace,
+                                   rtol=1e-5, atol=1e-7)
+    _assert_ledgers_equal(sw.ledger, led)
+
+
+@pytest.mark.parametrize("name", ["dsa", "dpgd", "deepca", "seq_dist_pm"])
+def test_baseline_sweep_matches_per_seed_runs(psa_problem, topologies, name):
+    p = psa_problem
+    eng = topologies["er"]
+    seeds = [0, 1]
+    sweep_kw = {
+        "dsa": dict(t_outer=15, lr=0.05),
+        "dpgd": dict(t_outer=15, lr=0.05),
+        "deepca": dict(t_outer=15),
+        "seq_dist_pm": dict(iters_per_vec=4, t_c=30),
+    }[name]
+    sw = baseline_sweep(name, covs=p["covs"], engine=eng, r=p["r"],
+                        seeds=seeds, q_true=p["q_true"], **sweep_kw)
+    fn = {"dsa": dsa, "dpgd": dpgd, "deepca": deepca,
+          "seq_dist_pm": seq_dist_pm}[name]
+    for si, s in enumerate(seeds):
+        q_single, errs = fn(p["covs"], eng, p["r"], q_true=p["q_true"],
+                            seed=s, **sweep_kw)
+        np.testing.assert_allclose(sw.error_traces[si], errs, rtol=1e-5,
+                                   atol=1e-7)
+        np.testing.assert_allclose(np.asarray(sw.q[si]),
+                                   np.asarray(q_single), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_d_pm_sweep_matches_per_seed_runs(fzoo, topologies):
+    eng = topologies["er"]
+    seeds = [0, 1]
+    q_true = fzoo["q_true"][:, :3]
+    sw = baseline_sweep("d_pm", data_blocks=fzoo["fblocks"], engine=eng, r=3,
+                        seeds=seeds, q_true=q_true, iters_per_vec=5, t_c=30)
+    for si, s in enumerate(seeds):
+        q_single, errs = d_pm(fzoo["fblocks"], eng, 3, iters_per_vec=5,
+                              t_c=30, q_true=q_true, seed=s)
+        np.testing.assert_allclose(sw.error_traces[si], errs, rtol=1e-5,
+                                   atol=1e-7)
+        np.testing.assert_allclose(np.asarray(sw.q[si]),
+                                   np.asarray(q_single), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_sweep_without_q_true_has_no_traces(psa_problem, topologies):
+    sw = sdot_sweep(covs=psa_problem["covs"], engines=topologies["er"],
+                    r=psa_problem["r"], t_outer=5, t_c=10, seeds=[0, 1])
+    assert sw.error_traces is None
+    with pytest.raises(ValueError, match="q_true"):
+        sw.mean_trace
+
+
+def test_sweep_rejects_mismatched_cases(psa_problem, topologies):
+    with pytest.raises(ValueError, match="zip-broadcast"):
+        sdot_sweep(covs=psa_problem["covs"],
+                   engines=[topologies["er"], topologies["ring"]],
+                   schedules=[consensus_schedule("const", 5, t_max=10)] * 3,
+                   r=psa_problem["r"], t_outer=5, seeds=[0])
+
+
+def test_sweep_rejects_mixed_node_counts(psa_problem, topologies):
+    with pytest.raises(ValueError, match="node count"):
+        sdot_sweep(covs=psa_problem["covs"],
+                   engines=[topologies["er"], DenseConsensus(ring(7))],
+                   r=psa_problem["r"], t_outer=5, seeds=[0])

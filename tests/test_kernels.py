@@ -158,3 +158,46 @@ def test_gram_qr_symmetric_psd():
     g = np.asarray(ops.gram_qr(v, use_pallas=True))
     np.testing.assert_allclose(g, g.T, rtol=1e-6)
     assert np.linalg.eigvalsh(g).min() > -1e-3
+
+
+# ---------------------------------------------------------------------------
+# slab ops: Z[i] = X_i^T Q_i and V[i] = X_i S_i (fused F-DOT hot matmuls)
+# ---------------------------------------------------------------------------
+def test_batched_slab_tq_matches_ref():
+    """(node, sample-block) kernel vs fused-einsum oracle, unaligned n."""
+    key = jax.random.PRNGKey(21)
+    kx, kq = jax.random.split(key)
+    x = jax.random.normal(kx, (4, 8, 700))
+    q = jax.random.normal(kq, (4, 8, 5))
+    out = ops.batched_slab_tq(x, q, block_n=256, use_pallas=True,
+                              interpret=True)
+    want = ref.batched_slab_tq_ref(x, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_batched_slab_apply_matches_ref():
+    key = jax.random.PRNGKey(22)
+    kx, ks = jax.random.split(key)
+    x = jax.random.normal(kx, (4, 8, 700))
+    s = jax.random.normal(ks, (4, 700, 5))
+    out = ops.batched_slab_apply(x, s, block_n=256, use_pallas=True,
+                                 interpret=True)
+    want = ref.batched_slab_apply_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_slab_ops_zero_row_padding_exact():
+    """Padded feature rows (ragged slabs stacked to d_max) stay null."""
+    key = jax.random.PRNGKey(23)
+    kx, kq = jax.random.split(key)
+    x = jax.random.normal(kx, (2, 6, 512))
+    q = jax.random.normal(kq, (2, 6, 3))
+    x = x.at[1, 4:].set(0.0)        # node 1 has only 4 real features
+    q = q.at[1, 4:].set(0.0)
+    z = ops.batched_slab_tq(x, q, block_n=256, use_pallas=True,
+                            interpret=True)
+    want = ref.batched_slab_tq_ref(x[1:, :4], q[1:, :4])
+    np.testing.assert_allclose(np.asarray(z[1]), np.asarray(want[0]),
+                               rtol=1e-4, atol=1e-4)

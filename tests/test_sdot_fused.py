@@ -183,12 +183,14 @@ def test_fused_is_single_compile_across_schedules(psa_problem, topologies):
     p = psa_problem
     eng = topologies["er"]
     base = _fused_run._cache_size()
-    s1 = consensus_schedule("lin1", 10, cap=30)
+    # t_outer=11 keeps this signature unique across the suite (the sweep
+    # tests compile t_outer=10/t_max=30 first), so the count is exact
+    s1 = consensus_schedule("lin1", 11, cap=30)
     s1[:] = np.minimum(s1, 30)
-    s2 = consensus_schedule("lin2", 10, cap=30)
+    s2 = consensus_schedule("lin2", 11, cap=30)
     s1[-1] = 30  # pin equal t_max for both schedules
     s2[-1] = 30
     for s in (s1, s2):
-        sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=10, schedule=s,
+        sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=11, schedule=s,
              q_true=p["q_true"])
     assert _fused_run._cache_size() == base + 1
