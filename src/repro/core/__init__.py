@@ -18,6 +18,6 @@ from .fdot import fdot as run_fdot  # noqa: F401
 from .linalg import cholesky_qr2, orthonormal_init  # noqa: F401
 from .metrics import CommLedger, subspace_error  # noqa: F401
 from .oi import orthogonal_iteration  # noqa: F401
-from .sdot import sadot as run_sadot, sdot as run_sdot  # noqa: F401
+from .sdot import sadot as run_sadot, sdot as run_sdot, sdot_spmd  # noqa: F401
 from .sweep import SweepResult, baseline_sweep, fdot_sweep, sdot_sweep  # noqa: F401
 from .topology import Graph, erdos_renyi, local_degree_weights, mixing_time, ring, star  # noqa: F401

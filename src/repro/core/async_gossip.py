@@ -45,41 +45,62 @@ import numpy as np
 from .metrics import CommLedger
 from .topology import Graph, local_degree_weights
 
-__all__ = ["AsyncConsensus", "straggler_wall_clock"]
+__all__ = ["AsyncConsensus", "masked_async_rounds", "straggler_wall_clock"]
 
 
-@functools.partial(jax.jit, static_argnums=())
-def _fused_async_run(w, adj, awake, z_stack):
-    """t_c async gossip rounds + realized-product debias, fully on device.
+def masked_async_rounds(w, adj, awake, t_c, z_stack):
+    """Traceable async gossip: ``t_c`` realized rounds + realized debias.
 
     w: (N, N) nominal weights; adj: (N, N) 0/1 adjacency; awake: (T, N) bool
-    pre-sampled masks; z_stack: (N, ...). Returns (debiased z, (T,) directed
-    sends per round, (T,) awake-node counts per round). Recompiles per
-    distinct T (the scan length) — constant-budget callers compile once.
+    pre-sampled masks; t_c: number of live rounds (may be a *traced* budget
+    read from a schedule array — rounds i >= t_c are masked out of the z / p
+    recursion and contribute zero sends/counts, so the whole-run fused
+    executors in sdot.py / fdot.py can call this inside their outer scan);
+    z_stack: (N, ...). Returns (debiased z, (T,) directed sends per round,
+    (T,) awake-node counts per round) — masked rounds report 0.0 for both.
     """
     n = w.shape[0]
     off = ~jnp.eye(n, dtype=bool)
     wz = w.astype(z_stack.dtype)
 
-    def round_(carry, a):
+    def round_(carry, inp):
         z, p = carry
+        a, i = inp
+        live = i < t_c
         both = jnp.outer(a, a)
         w_off = jnp.where(off & both, wz, 0.0)
         dropped = jnp.where(off & ~both, wz, 0.0).sum(axis=1)
         w_round = w_off + jnp.diag(jnp.diag(wz) + dropped)
-        z = jnp.einsum("ij,j...->i...", w_round, z)
+        z_next = jnp.einsum("ij,j...->i...", w_round, z)
         # only column 0 of the realized product is ever read (the debias
         # weight), so carry the (N,) vector p = Pi W e_1, not the (N, N)
         # product — O(N^2) per round instead of O(N^3)
-        p = w_round @ p
+        p_next = w_round @ p
         sends = jnp.sum(jnp.where(off & both, adj, 0.0))
-        return (z, p), (sends, jnp.sum(a.astype(jnp.float32)))
+        count = jnp.sum(a.astype(jnp.float32))
+        z = jnp.where(live, z_next, z)
+        p = jnp.where(live, p_next, p)
+        return (z, p), (jnp.where(live, sends, 0.0),
+                        jnp.where(live, count, 0.0))
 
     e1 = jnp.zeros((n,), z_stack.dtype).at[0].set(1.0)
-    (z, p), (sends, counts) = jax.lax.scan(round_, (z_stack, e1), awake)
+    (z, p), (sends, counts) = jax.lax.scan(
+        round_, (z_stack, e1), (awake, jnp.arange(awake.shape[0])))
     scale = jnp.maximum(p, 1e-6)                   # realized [Pi W e_1]_i
     bshape = (-1,) + (1,) * (z_stack.ndim - 1)
     return z / scale.reshape(bshape), sends, counts
+
+
+@functools.partial(jax.jit, static_argnums=())
+def _fused_async_run(w, adj, awake, z_stack):
+    """All awake rounds of ``awake`` + realized-product debias, on device.
+
+    Thin jitted wrapper over masked_async_rounds with every round live
+    (t_c == T). Recompiles per distinct T (the scan length) —
+    constant-budget callers compile once.
+    """
+    return masked_async_rounds(w, adj, awake, jnp.int32(awake.shape[0]),
+                               z_stack)
 
 
 @dataclasses.dataclass
@@ -126,13 +147,23 @@ class AsyncConsensus:
         np.fill_diagonal(w, self.weights.diagonal() + dropped.sum(axis=1))
         return w
 
-    def sample_awake(self, t_c: int) -> jnp.ndarray:
+    def sample_awake(self, t_c: int, t_max: Optional[int] = None) -> jnp.ndarray:
         """Pre-sample (t_c, N) awake masks from the engine's jax.random
-        stream (each call advances the stream, mirroring the host rng)."""
+        stream (each call advances the stream, mirroring the host rng).
+
+        ``t_max`` pads the underlying draw to (t_max, N) and returns the
+        first t_c rows. This matters for bit-level replay of the whole-run
+        fused executors: they draw one (t_max, N) mask block per outer
+        iteration inside the scan (static shape), so an eager oracle that
+        wants the SAME realized rounds must draw with the same padded shape
+        (a (t_c, N) threefry draw is NOT a prefix of the (t_max, N) one).
+        """
         self._key, sub = jax.random.split(self._key)
-        return jax.random.bernoulli(
+        rows = int(t_c if t_max is None else t_max)
+        masks = jax.random.bernoulli(
             sub, jnp.asarray(self.p_awake, jnp.float32),
-            (int(t_c), self.graph.n_nodes))
+            (rows, self.graph.n_nodes))
+        return masks[:int(t_c)]
 
     def run_debiased(self, z_stack: jnp.ndarray, t_c: int,
                      ledger: Optional[CommLedger] = None,

@@ -22,22 +22,56 @@ the scheme inherits S-DOT's Theorem-1-style behaviour on each stage: with
 enough consensus rounds per stage the iterate matches centralized OI.
 Communication per outer iteration per node is O((n_j + d_i + r) r) — never
 a full d x r or d x n object, which is the point of block partitioning.
+
+Execution modes (``fused`` flag, same architecture as sdot.py/fdot.py):
+
+  * fused (default) — the whole t_outer loop is ONE jitted ``lax.scan``.
+    Padded-stack layout: the ragged grid blocks are zero-padded into one
+    ``(I, J, d_max, n_max)`` stack and the row iterates into ``(I, d_max,
+    r)``. The masking invariants that make the padding exact:
+
+      - padded FEATURE rows (d_i..d_max) are zero in both X_ij and Q_i, so
+        they are null in the stage-1 product X_ij^T Q_i, produce zero rows
+        of V in stage 2, and add nothing to the stage-3 Grams;
+      - padded SAMPLE columns (n_j..n_max) of X_ij meet zero rows of Z/S:
+        column j's partials Z_ij = X_ij^T Q_i have zero rows past n_j at
+        every node of the column, gossip is a convex row mix so the rows
+        STAY zero through any number of rounds (and through the debias
+        row-scaling), hence stage 2's X_ij S_j never reads garbage.
+
+    Stage-1 column gossip and stage-2 row gossip are batched masked scans —
+    ``debiased_gossip`` vmapped over the J column engines (stacked
+    (J, I, I) weights + (J, t_max+1, I) device debias tables) and the I row
+    engines — so per-sub-network topologies stay heterogeneous inside one
+    compiled program; the per-iteration budget is read from the schedule
+    array. Stage 3 is the in-scan distributed CholeskyQR over the column-0
+    engine. The grid block products dispatch once per stage through
+    ``kernels/ops.grid_block_tq`` / ``grid_block_apply`` (Pallas
+    (row, column, sample-block) kernels on TPU, fused einsum elsewhere).
+    The error trace is computed on device from the padded stacks and
+    communication is accounted in closed form.
+
+  * eager (``fused=False``) — the original per-iteration Python loop over
+    the ragged block lists. Kept as the correctness oracle
+    (tests/test_bdot_fused.py) and for step-by-step debugging.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .consensus import DenseConsensus
-from .fdot import distributed_cholesky_qr
+from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
+from .fdot import _qr_pass, distributed_cholesky_qr, split_pad_rows
 from .linalg import orthonormal_init
-from .metrics import CommLedger, subspace_error
+from .metrics import CommLedger, subspace_error, subspace_error_from_cross
+from ..kernels import ops as kops
 
-__all__ = ["BDOTResult", "bdot"]
+__all__ = ["BDOTResult", "bdot", "pad_grid_blocks"]
 
 
 @dataclasses.dataclass
@@ -51,6 +85,59 @@ class BDOTResult:
         return jnp.concatenate(self.q_rows, axis=0)
 
 
+def pad_grid_blocks(blocks: Sequence[Sequence[jnp.ndarray]]) -> jnp.ndarray:
+    """Zero-pad an I x J grid of ragged (d_i, n_j) blocks to one
+    (I, J, d_max, n_max) stack (see the module docstring for why the
+    padding is exact through all three B-DOT stages)."""
+    d_max = max(int(row[0].shape[0]) for row in blocks)
+    n_max = max(int(b.shape[1]) for b in blocks[0])
+    return jnp.stack([
+        jnp.stack([
+            jnp.pad(b, ((0, d_max - b.shape[0]), (0, n_max - b.shape[1])))
+            for b in row])
+        for row in blocks])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
+def _fused_bdot_run(x_grid, w_col, tab_col, w_row, tab_row, sched, q0_pad,
+                    qtrue_pad, *, t_max: int, t_c_qr: int, passes: int,
+                    trace_err: bool):
+    """One compiled program for a whole B-DOT run.
+
+    x_grid: (I, J, d_max, n_max) zero-padded blocks; w_col/tab_col:
+    (J, I, I) column weights + (J, t_max+1, I) debias tables; w_row/tab_row:
+    (I, J, J) + (I, t_max+1, J) for the row stage; sched: (T_o,) int32
+    budgets for stages 1-2; t_c_qr: static constant budget per QR pass
+    (gossiped over the column-0 engine, exactly as the eager oracle does);
+    q0_pad / qtrue_pad: (I, d_max, r) zero-row-padded slab stacks. Returns
+    (q_pad, (T_o,) error trace — zeros when trace_err is False).
+    """
+    gossip_cols = jax.vmap(debiased_gossip, in_axes=(0, 0, 0, None, None))
+    gossip_rows = jax.vmap(debiased_gossip, in_axes=(0, 0, 0, None, None))
+
+    def outer(q_pad, t_c):
+        # stage 1: column-wise consensus over the (n_max, r) partials
+        z = kops.grid_block_tq(x_grid, q_pad)          # (I, J, n_max, r)
+        z = jnp.swapaxes(z, 0, 1)                      # (J, I, n_max, r)
+        s = gossip_cols(w_col, tab_col, z, t_c, t_max).mean(axis=1)
+        # stage 2: row-wise consensus over the (d_max, r) expansions
+        v = kops.grid_block_apply(x_grid, s)           # (I, J, d_max, r)
+        v = gossip_rows(w_row, tab_row, v, t_c, t_max).mean(axis=1)
+        # stage 3: distributed CholeskyQR across the I feature slabs
+        v = v.astype(jnp.float32)
+        for _ in range(passes):
+            v = _qr_pass(w_col[0], tab_col[0], v, jnp.int32(t_c_qr), t_c_qr)
+        if trace_err:
+            cross = jnp.einsum("idr,ids->rs", qtrue_pad, v)      # Q^T Qhat
+            err = subspace_error_from_cross(cross)
+        else:
+            err = jnp.float32(0.0)
+        return v, err
+
+    return jax.lax.scan(outer, q0_pad, sched)
+
+
 def bdot(
     *,
     blocks: Sequence[Sequence[jnp.ndarray]],   # blocks[i][j]: (d_i, n_j)
@@ -59,9 +146,12 @@ def bdot(
     r: int,
     t_outer: int,
     t_c: int = 50,
+    t_c_qr: Optional[int] = None,
+    schedule: Optional[np.ndarray] = None,
     q_init: Optional[jnp.ndarray] = None,
     q_true: Optional[jnp.ndarray] = None,
     seed: int = 0,
+    fused: bool = True,
 ) -> BDOTResult:
     """Run B-DOT over a simulated I x J node grid.
 
@@ -70,12 +160,28 @@ def bdot(
     nodes of row i (d_i x r partials). The final QR gossips r x r Grams over
     a column engine (one representative per feature slab; any connected
     overlay works).
+
+    ``schedule`` overrides ``t_c`` with per-outer-iteration consensus
+    budgets for stages 1-2 (the QR stage keeps the constant ``t_c_qr``,
+    default ``t_c``). ``fused=True`` (default) executes the whole run as a
+    single compiled scan over the zero-padded block stack; ``fused=False``
+    is the eager per-iteration oracle.
     """
     n_rows = len(blocks)
     n_cols = len(blocks[0])
     assert len(col_engines) == n_cols and len(row_engines) == n_rows
     dims = [int(blocks[i][0].shape[0]) for i in range(n_rows)]
+    n_samps = [int(blocks[0][j].shape[1]) for j in range(n_cols)]
     d = sum(dims)
+    t_c_qr = int(t_c if t_c_qr is None else t_c_qr)
+    passes = 2
+
+    if schedule is None:
+        schedule = consensus_schedule("const", t_outer, t_max=t_c)
+    elif len(schedule) < t_outer:
+        raise ValueError(f"schedule has {len(schedule)} entries but "
+                         f"t_outer={t_outer}")
+    schedule = np.asarray(schedule[:t_outer])
 
     if q_init is None:
         q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
@@ -84,34 +190,66 @@ def bdot(
     q_rows = [q_init[offs[i]:offs[i + 1]] for i in range(n_rows)]
 
     ledger = CommLedger()
-    errs = [] if q_true is not None else None
+    trace_err = q_true is not None
 
-    for _ in range(t_outer):
-        # --- stage 1: per column j, consensus-sum the (n_j x r) partials
-        s_cols = []
-        for j in range(n_cols):
-            z0 = jnp.stack([blocks[i][j].T @ q_rows[i]
-                            for i in range(n_rows)])          # (I, n_j, r)
-            s = col_engines[j].run_debiased(z0, t_c, ledger)
-            s_cols.append(s.mean(0))   # all column members now agree (≈)
+    if fused and not all(hasattr(e, "debias_table")
+                         for e in list(col_engines) + list(row_engines)):
+        fused = False
 
-        # --- stage 2: per row i, consensus-sum the (d_i x r) expansions
-        new_rows = []
-        for i in range(n_rows):
-            z0 = jnp.stack([blocks[i][j] @ s_cols[j]
-                            for j in range(n_cols)])          # (J, d_i, r)
-            w = row_engines[i].run_debiased(z0, t_c, ledger)
-            new_rows.append(w.mean(0))
+    if fused:
+        t_max = int(max(schedule.max(), t_c_qr)) if t_outer else t_c_qr
+        x_grid = pad_grid_blocks(blocks)
+        q0_pad = split_pad_rows(q_init, dims)                # (I, d_max, r)
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        w_col = jnp.stack([e._w for e in col_engines])       # (J, I, I)
+        tab_col = jnp.stack([e.debias_table(t_max) for e in col_engines])
+        w_row = jnp.stack([e._w for e in row_engines])       # (I, J, J)
+        tab_row = jnp.stack([e.debias_table(t_max) for e in row_engines])
+        q_pad, errs = _fused_bdot_run(
+            x_grid, w_col, tab_col, w_row, tab_row,
+            jnp.asarray(schedule, jnp.int32), q0_pad, qtrue_pad,
+            t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
+        q_rows = [q_pad[i, :di] for i, di in enumerate(dims)]
+        for j, eng in enumerate(col_engines):
+            ledger.log_gossip_rounds(schedule, eng.graph.adjacency,
+                                     n_samps[j] * r)
+        for i, eng in enumerate(row_engines):
+            ledger.log_gossip_rounds(schedule, eng.graph.adjacency,
+                                     dims[i] * r)
+        ledger.log_gossip_rounds(np.full(t_outer, passes * t_c_qr),
+                                 col_engines[0].graph.adjacency, r * r)
+        error_trace = np.asarray(errs) if trace_err else None
+    else:
+        errs = [] if trace_err else None
+        for t in range(t_outer):
+            t_c_t = int(schedule[t])
+            # --- stage 1: per column j, consensus-sum the (n_j x r) partials
+            s_cols = []
+            for j in range(n_cols):
+                z0 = jnp.stack([blocks[i][j].T @ q_rows[i]
+                                for i in range(n_rows)])      # (I, n_j, r)
+                s = col_engines[j].run_debiased(z0, t_c_t, ledger)
+                s_cols.append(s.mean(0))   # all column members now agree (≈)
 
-        # --- stage 3: distributed CholeskyQR across feature slabs (I nodes)
-        q_rows = distributed_cholesky_qr(new_rows, col_engines[0], t_c,
-                                         ledger)
-        if errs is not None:
-            errs.append(float(subspace_error(
-                q_true, jnp.concatenate(q_rows, axis=0))))
+            # --- stage 2: per row i, consensus-sum the (d_i x r) expansions
+            new_rows = []
+            for i in range(n_rows):
+                z0 = jnp.stack([blocks[i][j] @ s_cols[j]
+                                for j in range(n_cols)])      # (J, d_i, r)
+                w = row_engines[i].run_debiased(z0, t_c_t, ledger)
+                new_rows.append(w.mean(0))
+
+            # --- stage 3: distributed CholeskyQR across feature slabs
+            q_rows = distributed_cholesky_qr(new_rows, col_engines[0],
+                                             t_c_qr, ledger, passes=passes)
+            if errs is not None:
+                errs.append(float(subspace_error(
+                    q_true, jnp.concatenate(q_rows, axis=0))))
+        error_trace = np.asarray(errs) if errs is not None else None
 
     return BDOTResult(
         q_rows=q_rows,
-        error_trace=np.asarray(errs) if errs is not None else None,
+        error_trace=error_trace,
         ledger=ledger,
     )

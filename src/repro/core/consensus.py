@@ -178,8 +178,11 @@ class DenseConsensus:
         scale = debias_weights(self.weights, int(t_c))  # (N,)
         if ledger is not None:
             payload = int(np.prod(z_stack.shape[1:]))
-            for _ in range(int(t_c)):
-                ledger.log_gossip_round(self.graph.adjacency, payload)
+            # closed form (identical increments per round), not an O(t_c)
+            # host loop — eager B-DOT at t_c=50 was burning host time on
+            # pure accounting
+            ledger.log_gossip_rounds([int(t_c)], self.graph.adjacency,
+                                     payload)
         bshape = (-1,) + (1,) * (z_stack.ndim - 1)
         return out / jnp.asarray(scale, out.dtype).reshape(bshape)
 
@@ -235,6 +238,8 @@ class SpmdConsensus:
         if self.weights.shape != (self.n, self.n):
             raise ValueError("weight matrix does not match mesh axis size")
         self._is_ring = self._detect_ring()
+        self._w = jnp.asarray(self.weights)
+        self._debias_tables = {}  # t_max -> (t_max+1, N) device table
 
     def _detect_ring(self) -> bool:
         return np.array_equal(self.graph.adjacency, ring(self.n).adjacency)
@@ -275,6 +280,65 @@ class SpmdConsensus:
 
         out, _ = jax.lax.scan(round_, z, None, length=t_c)
         return out
+
+    def gossip_rounds_masked(self, z: jnp.ndarray, t_c: jnp.ndarray,
+                             t_max: int) -> jnp.ndarray:
+        """``t_c`` gossip rounds inside shard_map where ``t_c`` is *traced*.
+
+        The SPMD twin of ``masked_gossip``: the scan always runs the static
+        ``t_max`` rounds and masks rounds past t_c, so a per-outer-iteration
+        consensus budget read from a schedule array stays inside ONE compiled
+        whole-run program per mesh — this is the inner scan of the fused
+        S-DOT SPMD executor (sdot.sdot_spmd). Round i < t_c applies exactly
+        the same update as gossip_rounds, in the same order.
+        """
+        axis = self.axis
+        if self._is_ring and self.n > 2:
+            w_self, w_prev, w_next = self._ring_coeffs()
+            fwd = [(i, (i + 1) % self.n) for i in range(self.n)]
+            bwd = [(i, (i - 1) % self.n) for i in range(self.n)]
+
+            def round_(zz, i):
+                zp = jax.lax.ppermute(zz, axis, fwd)   # receives from i-1
+                zn = jax.lax.ppermute(zz, axis, bwd)   # receives from i+1
+                mixed = w_self * zz + w_prev * zp + w_next * zn
+                return jnp.where(i < t_c, mixed, zz), None
+
+            out, _ = jax.lax.scan(round_, z, jnp.arange(t_max))
+            return out
+        wj = jnp.asarray(self.weights, z.dtype)
+        idx = jax.lax.axis_index(axis)
+
+        def round_(zz, i):
+            allz = jax.lax.all_gather(zz, axis)            # (N, ...)
+            row = jax.lax.dynamic_slice_in_dim(wj, idx, 1, 0)[0]  # (N,)
+            mixed = jnp.tensordot(row, allz, axes=(0, 0))
+            return jnp.where(i < t_c, mixed, zz), None
+
+        out, _ = jax.lax.scan(round_, z, jnp.arange(t_max))
+        return out
+
+    def debias_table(self, t_max: int) -> jnp.ndarray:
+        """Cached (t_max + 1, N) device table of [W^t e_1] rows.
+
+        Same contract as DenseConsensus.debias_table; rows are indexed by the
+        traced per-iteration budget inside the fused SPMD scan instead of a
+        host matrix_power per outer iteration.
+        """
+        t_max = int(t_max)
+        if t_max not in self._debias_tables:
+            self._debias_tables[t_max] = debias_table(self._w, t_max)
+        return self._debias_tables[t_max]
+
+    def debias_by_table(self, z: jnp.ndarray, table: jnp.ndarray,
+                        t_c: jnp.ndarray) -> jnp.ndarray:
+        """Traceable twin of ``debias`` (inside shard_map): divide the local
+        block by table[t_c][mesh position]. ``table`` must be passed in as a
+        replicated shard_map operand so the row gather stays device-side."""
+        idx = jax.lax.axis_index(self.axis)
+        scale = jnp.take(table, t_c, axis=0)               # (N,)
+        s = jax.lax.dynamic_slice_in_dim(scale, idx, 1, 0)[0]
+        return z / s.astype(z.dtype)
 
     def debias(self, z: jnp.ndarray, t_c: int) -> jnp.ndarray:
         """Divide the local block by [W^{t_c} e_1]_i (inside shard_map)."""

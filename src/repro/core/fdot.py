@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .async_gossip import masked_async_rounds
 from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .linalg import orthonormal_init
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
@@ -85,17 +86,27 @@ def distributed_cholesky_qr(
     t_c: int,
     ledger: Optional[CommLedger] = None,
     passes: int = 2,
+    awake_pad: Optional[int] = None,
 ) -> List[jnp.ndarray]:
     """Distributed QR of row-partitioned V = [V_1; ...; V_N] via CholeskyQR.
 
     Only r x r Gram matrices cross the network. With passes=2 this is
     CholeskyQR2 and the result is orthonormal to ~machine precision.
+
+    ``awake_pad``: with an async engine, draw each pass's awake masks padded
+    to (awake_pad, N) — the layout the fused whole-run executors use — so a
+    seeded eager run replays the fused scan's realized rounds exactly.
     """
     r = v_blocks[0].shape[1]
     blocks = [v.astype(jnp.float32) for v in v_blocks]
+    inject = awake_pad is not None and hasattr(engine, "sample_awake")
     for _ in range(passes):
         grams = jnp.stack([b.T @ b for b in blocks])              # (N, r, r)
-        gsum = engine.run_debiased(grams, t_c, ledger)            # approx sum
+        if inject:
+            awake = engine.sample_awake(t_c, t_max=awake_pad)
+            gsum = engine.run_debiased(grams, t_c, ledger, awake=awake)
+        else:
+            gsum = engine.run_debiased(grams, t_c, ledger)        # approx sum
         new_blocks = []
         for i, b in enumerate(blocks):
             g = 0.5 * (gsum[i] + gsum[i].T) + 1e-10 * jnp.eye(r, dtype=b.dtype)
@@ -106,17 +117,25 @@ def distributed_cholesky_qr(
     return blocks
 
 
-def _qr_pass(w, table, v, t_qr, t_max):
-    """One in-scan distributed CholeskyQR pass over padded slabs (N,d_max,r)."""
+def _solve_from_gram_sum(gsum, v):
+    """Finish one in-scan CholeskyQR pass from consensus-summed Grams:
+    symmetrize + jitter, Cholesky, and the per-node triangular solve over
+    the padded (N, d_max, r) slabs. Shared by the sync (_qr_pass) and async
+    (_fused_async_fdot_run) executors so the numerics cannot diverge."""
     r = v.shape[-1]
-    grams = jnp.einsum("idr,ids->irs", v, v)                      # (N, r, r)
-    gsum = debiased_gossip(w, table, grams, t_qr, t_max)
     g = (0.5 * (gsum + jnp.swapaxes(gsum, 1, 2))
          + 1e-10 * jnp.eye(r, dtype=v.dtype))
     rr = jnp.swapaxes(jnp.linalg.cholesky(g), 1, 2)               # upper R
     solve = lambda R, b: jax.scipy.linalg.solve_triangular(
         jnp.swapaxes(R, 0, 1), b.T, lower=True).T
     return jax.vmap(solve)(rr, v)
+
+
+def _qr_pass(w, table, v, t_qr, t_max):
+    """One in-scan distributed CholeskyQR pass over padded slabs (N,d_max,r)."""
+    grams = jnp.einsum("idr,ids->irs", v, v)                      # (N, r, r)
+    gsum = debiased_gossip(w, table, grams, t_qr, t_max)
+    return _solve_from_gram_sum(gsum, v)
 
 
 @functools.partial(jax.jit,
@@ -148,6 +167,52 @@ def _fused_fdot_run(x_pad, w, table, sched, q0_pad, qtrue_pad, *,
         return v, err
 
     return jax.lax.scan(outer, q0_pad, sched)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
+def _fused_async_fdot_run(x_pad, w, adj, p_awake, key0, sched, q0_pad,
+                          qtrue_pad, *, t_max: int, t_c_qr: int, passes: int,
+                          trace_err: bool):
+    """One compiled program for a whole *async* F-DOT run.
+
+    Same layout as _fused_fdot_run but every consensus (the partial-product
+    phase and each QR pass) is realized-matrix async gossip with its own
+    (t_max, N) awake-mask block drawn from the carried RNG key — three key
+    splits per outer iteration, in the order the eager oracle consumes them
+    (partial, QR pass 1, QR pass 2). Returns (q_pad, key_final, (T_o,) errs,
+    (T_o, 1+passes, t_max) sends, (T_o, 1+passes, t_max) awake counts).
+    """
+    n = w.shape[0]
+
+    def gossip(key, z, t_c):
+        key, sub = jax.random.split(key)
+        awake = jax.random.bernoulli(sub, p_awake, (t_max, n))
+        out, sends, counts = masked_async_rounds(w, adj, awake, t_c, z)
+        return key, out, sends, counts
+
+    def outer(carry, t_c):
+        q_pad, key = carry
+        z0 = kops.batched_slab_tq(x_pad, q_pad)                  # (N, n, r)
+        key, s, sd, cnt = gossip(key, z0, t_c)
+        v = kops.batched_slab_apply(x_pad, s).astype(jnp.float32)
+        sends, counts = [sd], [cnt]
+        for _ in range(passes):
+            grams = jnp.einsum("idr,ids->irs", v, v)             # (N, r, r)
+            key, gsum, sd, cnt = gossip(key, grams, jnp.int32(t_c_qr))
+            sends.append(sd)
+            counts.append(cnt)
+            v = _solve_from_gram_sum(gsum, v)
+        if trace_err:
+            cross = jnp.einsum("idr,ids->rs", qtrue_pad, v)      # Q^T Qhat
+            err = subspace_error_from_cross(cross)
+        else:
+            err = jnp.float32(0.0)
+        return (v, key), (err, jnp.stack(sends), jnp.stack(counts))
+
+    (q_pad, key), (errs, sends, counts) = jax.lax.scan(
+        outer, (q0_pad, key0), sched)
+    return q_pad, key, errs, sends, counts
 
 
 def fdot(
@@ -196,16 +261,44 @@ def fdot(
 
     ledger = CommLedger()
 
-    # engines without the scan interface (e.g. AsyncConsensus) run eagerly
-    if fused and not hasattr(engine, "debias_table"):
+    # async engines get their own whole-run scan; any other engine without
+    # the scan interface runs eagerly
+    is_async = hasattr(engine, "sample_awake")
+    if fused and not (is_async or hasattr(engine, "debias_table")):
         fused = False
 
-    if fused:
-        t_max = int(max(schedule.max(), t_c_qr)) if t_outer else 0
+    t_max = int(max(schedule.max(), t_c_qr)) if t_outer else 0
+    trace_err = q_true is not None
+
+    if fused and is_async:
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = pad_feature_slabs(q_blocks)
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        q_pad, key_final, errs, sends, counts = _fused_async_fdot_run(
+            x_pad, engine._w, engine._adj,
+            jnp.asarray(engine.p_awake, jnp.float32), engine._key,
+            jnp.asarray(schedule, jnp.int32), q0_pad, qtrue_pad,
+            t_max=t_max, t_c_qr=int(t_c_qr), passes=passes,
+            trace_err=trace_err)
+        engine._key = key_final
+        q_blocks = unpad_feature_slabs(q_pad, dims)
+        sends_np = np.asarray(sends, np.float64)   # (T_o, 1+passes, t_max)
+        total = float(sends_np.sum())
+        ledger.p2p += total
+        ledger.matrices += total
+        ledger.scalars += (float(sends_np[:, 0].sum()) * n_samples * r
+                           + float(sends_np[:, 1:].sum()) * r * r)
+        counts_np = np.asarray(counts)
+        for t in range(t_outer):
+            ledger.log_awake_rounds(counts_np[t, 0, :int(schedule[t])])
+            for p in range(passes):
+                ledger.log_awake_rounds(counts_np[t, 1 + p, :int(t_c_qr)])
+        error_trace = np.asarray(errs) if trace_err else None
+    elif fused:
         table = engine.debias_table(t_max)
         x_pad = pad_feature_slabs(data_blocks)
         q0_pad = pad_feature_slabs(q_blocks)
-        trace_err = q_true is not None
         qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
                      else jnp.zeros_like(q0_pad))
         q_pad, errs = _fused_fdot_run(
@@ -223,12 +316,18 @@ def fdot(
         for t in range(t_outer):
             # step 1-2: consensus over the (n x r) partial products
             z0 = jnp.stack([x.T @ q for x, q in zip(data_blocks, q_blocks)])
-            s = engine.run_debiased(z0, int(schedule[t]), ledger)   # (N,n,r)
+            if is_async:
+                awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
+                s = engine.run_debiased(z0, int(schedule[t]), ledger,
+                                        awake=awake)
+            else:
+                s = engine.run_debiased(z0, int(schedule[t]), ledger)
             # step 3: local expansion
             v_blocks = [x @ s[i] for i, x in enumerate(data_blocks)]
             # step 4: distributed orthonormalization
-            q_blocks = distributed_cholesky_qr(v_blocks, engine, t_c_qr,
-                                               ledger, passes=passes)
+            q_blocks = distributed_cholesky_qr(
+                v_blocks, engine, t_c_qr, ledger, passes=passes,
+                awake_pad=t_max if is_async else None)
             if errs is not None:
                 q_full = jnp.concatenate(q_blocks, axis=0)
                 errs.append(float(subspace_error(q_true, q_full)))

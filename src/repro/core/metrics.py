@@ -43,14 +43,23 @@ def subspace_error_from_cross(cross) -> jnp.ndarray:
     return jnp.mean(1.0 - jnp.clip(s[:r], 0.0, 1.0) ** 2)
 
 
-def mean_subspace_error(q_true, q_nodes) -> jnp.ndarray:
+def mean_subspace_error(q_true, q_nodes, node_mask=None) -> jnp.ndarray:
     """Mean of eq. (11) over stacked per-node estimates q_nodes: (N, d, r).
 
     Traceable (SVD of N tiny r x r matrices) — the fused S-DOT executor
     evaluates this *inside* its outer scan so the whole error trace comes
     back as one device array instead of T_o per-iteration host syncs.
+
+    ``node_mask`` (N,) restricts the mean to mask > 0 nodes — the ragged-N
+    sweep engine pads small networks with isolated identity nodes whose
+    estimates must not pollute the trace. With a mask of ones the weighted
+    mean reduces to exactly the unmasked expression (same op order).
     """
-    return jax.vmap(lambda q: subspace_error(q_true, q))(q_nodes).mean()
+    errs = jax.vmap(lambda q: subspace_error(q_true, q))(q_nodes)
+    if node_mask is None:
+        return errs.mean()
+    m = node_mask.astype(errs.dtype)
+    return jnp.sum(errs * m) / jnp.sum(m)
 
 
 def projector_distance(q_true, q_hat) -> jnp.ndarray:

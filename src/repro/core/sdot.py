@@ -19,26 +19,41 @@ Execution modes (``fused`` flag):
     rows, and the error trace is computed on device and returned as one
     (T_o,) array. Zero host syncs per iteration, one compile per
     (shapes, t_max) signature, communication accounted in closed form.
+    With an ``AsyncConsensus`` engine the whole straggler run is ALSO one
+    scan: the RNG key rides in the scan carry, each outer iteration draws
+    its (t_max, N) awake-mask block and runs masked realized-matrix gossip
+    (exact realized debias), and the per-round send/awake counts come back
+    as stacked scan outputs — one dispatch for a whole Table-V run.
   * eager (``fused=False``) — the original Python loop, one dispatch chain
     per outer iteration. Kept as the bit-level correctness oracle
-    (tests/test_sdot_fused.py) and for step-by-step debugging.
+    (tests/test_sdot_fused.py) and for step-by-step debugging. With an
+    async engine the eager loop draws the same padded (t_max, N) mask
+    blocks, so seeded eager runs replay the fused executor round for round.
+
+``sdot_spmd`` is the node == TPU-pod twin of the fused executor: the same
+whole-run scan runs *inside* shard_map over a mesh axis (masked
+ppermute/all_gather gossip + the device debias table), so a multi-pod run is
+one compiled SPMD program instead of one collective dispatch per iteration.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from .async_gossip import masked_async_rounds
+from .compat import shard_map
 from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .linalg import cholesky_qr2, orthonormal_init
 from .metrics import CommLedger, mean_subspace_error, subspace_error
 from ..kernels import ops as kops
 
-__all__ = ["SDOTResult", "sdot", "sadot", "local_cov_apply"]
+__all__ = ["SDOTResult", "sdot", "sadot", "sdot_spmd", "local_cov_apply"]
 
 
 @dataclasses.dataclass
@@ -72,48 +87,75 @@ def _stack_data(xs: Sequence[jnp.ndarray]):
     return stack, jnp.asarray(n_true)
 
 
-def _make_data_apply(xs: Sequence[jnp.ndarray]) -> Callable:
-    """Gram-free Step 5: Z_i = X_i (X_i^T Q_i), never forming M_i (d x d).
+def _apply_operand(operand, mode: str, q_nodes):
+    """Step 5 of Alg. 1 for either operand layout (cov stack or raw data).
 
-    All nodes are served by ONE batched gram-apply dispatch (Pallas
-    (node, column-block) kernel on TPU, fused einsum elsewhere) instead of a
-    per-node Python loop — mandatory for the fused executor, and fewer
-    dispatches for the eager one too.
+    The data mode is gram-free — Z_i = X_i (X_i^T Q_i), never forming the
+    (d x d) M_i — and serves all nodes with ONE batched gram-apply dispatch
+    (Pallas (node, column-block) kernel on TPU, fused einsum elsewhere)
+    instead of a per-node Python loop; both the fused scan body and the
+    eager loop call through here.
     """
-    stack, n_true = _stack_data(xs)
-
-    def apply(q_nodes):
-        return kops.batched_gram_apply(stack, q_nodes, n_true)
-
-    return apply
+    if mode == "cov":
+        return local_cov_apply(operand, q_nodes)
+    x_stack, n_true = operand
+    return kops.batched_gram_apply(x_stack, q_nodes, n_true)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
-def _fused_run(operand, w, table, sched, q0_nodes, q_true, *, mode: str,
-               t_max: int, trace_err: bool):
+def _fused_run(operand, w, table, sched, q0_nodes, q_true, node_mask, *,
+               mode: str, t_max: int, trace_err: bool):
     """One compiled program for a whole S-DOT/SA-DOT run.
 
     operand: covs (N,d,d) for mode='cov'; (x_stack, n_true) for mode='data'.
     sched: (T_o,) int32 consensus budgets; t_max: static max budget (inner
-    masked-scan length); table: (t_max+1, N) debias rows [W^t e_1].
+    masked-scan length); table: (t_max+1, N) debias rows [W^t e_1];
+    node_mask: (N,) 1.0 for real nodes — the ragged-N sweep engine pads
+    small networks to N_max with isolated identity nodes (block-diagonal W)
+    and masks them out of the error trace; plain runs pass all ones.
     Returns (q_nodes, (T_o,) error trace — zeros when trace_err is False).
     """
 
-    def apply_fn(q_nodes):
-        if mode == "cov":
-            return local_cov_apply(operand, q_nodes)
-        x_stack, n_true = operand
-        return kops.batched_gram_apply(x_stack, q_nodes, n_true)
-
     def outer(q_nodes, t_c):
-        z0 = apply_fn(q_nodes)                                   # (N, d, r)
+        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
         v = debiased_gossip(w, table, z0, t_c, t_max)
         q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)      # per-node QR
-        err = (mean_subspace_error(q_true, q_new) if trace_err
+        err = (mean_subspace_error(q_true, q_new, node_mask) if trace_err
                else jnp.float32(0.0))
         return q_new, err
 
     return jax.lax.scan(outer, q0_nodes, sched)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
+def _fused_async_sdot(operand, w, adj, p_awake, key0, sched, q0_nodes,
+                      q_true, *, mode: str, t_max: int, trace_err: bool):
+    """One compiled program for a whole *async* S-DOT/SA-DOT run.
+
+    The straggler path's last host loop, closed: the RNG key is carried
+    through the outer scan; each iteration splits it, draws a (t_max, N)
+    awake-mask block, and runs t_c realized-matrix gossip rounds with the
+    realized-product debias (masked_async_rounds). Returns
+    (q_nodes, key_final, (T_o,) errs, (T_o, t_max) sends, (T_o, t_max)
+    awake counts) — masked rounds contribute zero sends/counts, so the
+    ledger is recovered exactly from the stacked outputs.
+    """
+    n = w.shape[0]
+
+    def outer(carry, t_c):
+        q_nodes, key = carry
+        key, sub = jax.random.split(key)
+        awake = jax.random.bernoulli(sub, p_awake, (t_max, n))
+        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
+        v, sends, counts = masked_async_rounds(w, adj, awake, t_c, z0)
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+        err = (mean_subspace_error(q_true, q_new) if trace_err
+               else jnp.float32(0.0))
+        return (q_new, key), (err, sends, counts)
+
+    (q_nodes, key), (errs, sends, counts) = jax.lax.scan(
+        outer, (q0_nodes, key0), sched)
+    return q_nodes, key, errs, sends, counts
 
 
 def sdot(
@@ -164,35 +206,57 @@ def sdot(
     ledger = CommLedger()
     payload = d * r
 
-    # engines without the whole-run scan interface (e.g. AsyncConsensus,
-    # whose realized round matrices are sampled per run_debiased call) run
-    # the eager loop — each consensus call is still one device dispatch
-    if fused and not hasattr(engine, "debias_table"):
+    # async engines get their own whole-run scan (the RNG key rides in the
+    # carry); any other engine without the scan interface runs eagerly
+    is_async = hasattr(engine, "sample_awake")
+    if fused and not (is_async or hasattr(engine, "debias_table")):
         fused = False
 
-    if fused:
-        t_max = int(np.asarray(schedule[:t_outer]).max()) if t_outer else 0
+    sched_np = np.asarray(schedule[:t_outer])
+    t_max = int(sched_np.max()) if t_outer else 0
+    trace_err = q_true is not None
+    q_arg = q_true if trace_err else jnp.zeros((d, r), q_nodes.dtype)
+    if covs is not None:
+        operand, mode = covs, "cov"
+    else:
+        operand, mode = _stack_data(data), "data"
+    sched_dev = jnp.asarray(sched_np, jnp.int32)
+
+    if fused and is_async:
+        q_nodes, key_final, errs, sends, counts = _fused_async_sdot(
+            operand, engine._w, engine._adj,
+            jnp.asarray(engine.p_awake, jnp.float32), engine._key,
+            sched_dev, q_nodes, q_arg, mode=mode, t_max=t_max,
+            trace_err=trace_err)
+        engine._key = key_final   # same stream position as t_outer eager draws
+        total = float(np.asarray(sends, np.float64).sum())
+        ledger.p2p += total
+        ledger.matrices += total
+        ledger.scalars += total * payload
+        counts_np = np.asarray(counts)
+        for t in range(t_outer):
+            ledger.log_awake_rounds(counts_np[t, :int(sched_np[t])])
+        error_trace = np.asarray(errs) if trace_err else None
+    elif fused:
         table = engine.debias_table(t_max)
-        sched_dev = jnp.asarray(np.asarray(schedule[:t_outer]), jnp.int32)
-        if covs is not None:
-            operand, mode = covs, "cov"
-        else:
-            operand, mode = _stack_data(data), "data"
-        trace_err = q_true is not None
-        q_arg = q_true if trace_err else jnp.zeros((d, r), q_nodes.dtype)
         q_nodes, errs = _fused_run(
             operand, engine._w, table, sched_dev, q_nodes, q_arg,
-            mode=mode, t_max=t_max, trace_err=trace_err)
-        ledger.log_gossip_rounds(schedule[:t_outer], engine.graph.adjacency,
-                                 payload)
+            jnp.ones((n,), jnp.float32), mode=mode, t_max=t_max,
+            trace_err=trace_err)
+        ledger.log_gossip_rounds(sched_np, engine.graph.adjacency, payload)
         error_trace = np.asarray(errs) if trace_err else None
     else:
-        apply_fn = ((lambda q: local_cov_apply(covs, q)) if covs is not None
-                    else _make_data_apply(data))
         errs = [] if q_true is not None else None
         for t in range(t_outer):
-            z0 = apply_fn(q_nodes)                                # (N, d, r)
-            v = engine.run_debiased(z0, int(schedule[t]), ledger)
+            z0 = _apply_operand(operand, mode, q_nodes)           # (N, d, r)
+            if is_async:
+                # draw with the fused executor's padded shape so a seeded
+                # eager run replays the fused scan round for round
+                awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
+                v = engine.run_debiased(z0, int(schedule[t]), ledger,
+                                        awake=awake)
+            else:
+                v = engine.run_debiased(z0, int(schedule[t]), ledger)
             q_nodes = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
             if errs is not None:
                 e = jax.vmap(lambda qq: subspace_error(q_true, qq))(q_nodes)
@@ -212,3 +276,76 @@ def sadot(*, schedule_kind: str = "lin2", cap: Optional[int] = None,
     """SA-DOT convenience wrapper: increasing consensus schedule."""
     sched = consensus_schedule(schedule_kind, t_outer, cap=cap)
     return sdot(t_outer=t_outer, schedule=sched, **kw)
+
+
+def sdot_spmd(
+    *,
+    covs: jnp.ndarray,
+    engine,                                   # consensus.SpmdConsensus
+    r: int,
+    t_outer: int,
+    schedule: Optional[np.ndarray] = None,
+    t_c: int = 50,
+    q_init: Optional[jnp.ndarray] = None,
+    q_true: Optional[jnp.ndarray] = None,
+    seed: int = 0,
+) -> SDOTResult:
+    """Whole-run S-DOT/SA-DOT as ONE compiled SPMD program over a mesh axis.
+
+    The node == pod execution mode: node i's covariance block lives on mesh
+    position i along ``engine.axis`` and the entire t_outer loop — local
+    apply, masked collective gossip (``SpmdConsensus.gossip_rounds_masked``:
+    weighted ppermute rounds on a ring, all_gather + local mix otherwise),
+    the device debias-table row gather, per-node CholeskyQR2, and the
+    pmean'd error trace — runs inside a single jitted shard_map. One compile
+    and one dispatch per run instead of one collective chain per outer
+    iteration; numerically identical to the fused ``DenseConsensus`` run
+    for the same W (tests/test_spmd.py pins it).
+    """
+    n = engine.n
+    if covs.shape[0] != n:
+        raise ValueError("covs leading dim must equal the mesh axis size")
+    d = covs.shape[1]
+    if schedule is None:
+        schedule = consensus_schedule("const", t_outer, t_max=t_c)
+    elif len(schedule) < t_outer:
+        raise ValueError(f"schedule has {len(schedule)} entries but "
+                         f"t_outer={t_outer}")
+    sched_np = np.asarray(schedule[:t_outer])
+    t_max = int(sched_np.max()) if t_outer else 0
+    if q_init is None:
+        q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
+    q_nodes = jnp.broadcast_to(q_init[None], (n, d, r))
+    trace_err = q_true is not None
+    q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+    table = engine.debias_table(t_max)
+    sched_dev = jnp.asarray(sched_np, jnp.int32)
+
+    def local_fn(cov, q0, sched, tab, qt):
+        # cov/q0: (1, d, d) / (1, d, r) local blocks; sched/tab/qt replicated
+        def outer(q, tc):
+            z = cov[0] @ q
+            z = engine.gossip_rounds_masked(z, tc, t_max)
+            z = engine.debias_by_table(z, tab, tc)
+            q_new = cholesky_qr2(z)[0]
+            err = (jax.lax.pmean(subspace_error(qt, q_new), engine.axis)
+                   if trace_err else jnp.float32(0.0))
+            return q_new, err
+
+        qf, errs = jax.lax.scan(outer, q0[0], sched)
+        return qf[None], errs
+
+    spec, rep = P(engine.axis), P()
+    fn = shard_map(local_fn, mesh=engine.mesh,
+                   in_specs=(spec, spec, rep, rep, rep),
+                   out_specs=(spec, rep))
+    q_nodes, errs = jax.jit(fn)(covs, q_nodes, sched_dev, table, q_arg)
+
+    ledger = CommLedger()
+    ledger.log_gossip_rounds(sched_np, engine.graph.adjacency, d * r)
+    return SDOTResult(
+        q_nodes=q_nodes,
+        error_trace=np.asarray(errs) if trace_err else None,
+        consensus_trace=sched_np,
+        ledger=ledger,
+    )

@@ -9,7 +9,16 @@ into a single compiled program and ONE device call:
 * the **case axis** (topology x schedule) is a second ``vmap`` over the
   stacked weight matrices, debias tables, and schedule arrays — all dense
   (N, N) / (t_max+1, N) / (T_o,) arrays, so heterogeneous graphs stack as
-  long as they share the node count.
+  long as they share the node count;
+* **ragged node counts** (the Table-II connectivity axis: ER N=10 next to
+  ring N=20) stack too, in ``sdot_sweep``'s covs mode: pass one cov stack
+  per case and every case is padded to N_max with *isolated identity
+  nodes* — W becomes block-diag(W, I) (the padding rows are identity, so
+  padded nodes never mix with real ones), the padded covs are identity
+  (keeping the padded iterates finite), the debias table is built from the
+  padded W, and a node mask keeps the padded estimates out of the error
+  trace. Padded-vs-unpadded traces are bit-comparable because a real
+  node's gossip row has exact zeros against every padded node.
 
 Compare: the eager zoo runs seeds x cases x t_outer Python iterations with a
 host sync each — the sweep engine runs one dispatch total, and the whole
@@ -28,7 +37,7 @@ import numpy as np
 
 from .baselines import (_fused_d_pm, _fused_deepca, _fused_dpgd, _fused_dsa,
                         _fused_seq_dist_pm)
-from .consensus import DenseConsensus, consensus_schedule
+from .consensus import DenseConsensus, consensus_schedule, debias_table
 from .fdot import pad_feature_slabs, split_pad_rows
 from .linalg import orthonormal_init
 from .metrics import CommLedger
@@ -43,12 +52,17 @@ class SweepResult:
 
     ``q`` and ``error_traces`` carry a leading case axis C (only when the
     sweep ran multiple topology/schedule cases) and a seed axis S.
+
+    ``node_counts`` is set by ragged-N sweeps: ``q[c]`` then has node axis
+    N_max and only the first ``node_counts[c]`` entries are real (the rest
+    are the isolated identity-padding nodes).
     """
 
     q: jnp.ndarray                 # (C?, S, ...) final estimates
     error_traces: Optional[np.ndarray]   # (C?, S, T) per-seed error traces
     ledger: CommLedger             # aggregate communication over all runs
     seeds: np.ndarray
+    node_counts: Optional[np.ndarray] = None
 
     def _traces(self) -> np.ndarray:
         if self.error_traces is None:
@@ -72,7 +86,7 @@ def _seed_inits(seeds: Sequence[int], d: int, r: int) -> jnp.ndarray:
     return jax.vmap(lambda k: orthonormal_init(k, d, r))(keys)
 
 
-def _broadcast_cases(engines, schedules, t_outer, t_c):
+def _broadcast_cases(engines, schedules, t_outer, t_c, allow_ragged=False):
     """Zip-broadcast engines x schedules into C aligned cases."""
     if isinstance(engines, DenseConsensus):
         engines = [engines]
@@ -95,9 +109,30 @@ def _broadcast_cases(engines, schedules, t_outer, t_c):
         raise ValueError("engines and schedules must zip-broadcast: got "
                          f"{len(engines)} vs {len(schedules)}")
     n_nodes = engines[0].graph.n_nodes
-    if any(e.graph.n_nodes != n_nodes for e in engines):
+    if not allow_ragged and any(e.graph.n_nodes != n_nodes for e in engines):
         raise ValueError("all sweep engines must share the node count")
     return engines, [s[:t_outer] for s in schedules]
+
+
+def _pad_weights_identity(w: np.ndarray, n_max: int) -> np.ndarray:
+    """block-diag(W, I): identity-padding rows keep padded nodes isolated
+    (a real node's row has exact zeros against every padded column, so the
+    padded subgraph never perturbs the real gossip)."""
+    out = np.eye(n_max)
+    out[:w.shape[0], :w.shape[0]] = w
+    return out
+
+
+def _pad_covs_identity(covs: jnp.ndarray, n_max: int) -> jnp.ndarray:
+    """Pad a (N, d, d) cov stack to (N_max, d, d) with identity covariances
+    (NOT zeros: a zero cov would drive the padded iterate to the Cholesky of
+    a singular Gram and the resulting NaNs would poison the padded lanes)."""
+    pad = n_max - covs.shape[0]
+    if pad == 0:
+        return covs
+    d = covs.shape[1]
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=covs.dtype), (pad, d, d))
+    return jnp.concatenate([covs, eye], axis=0)
 
 
 def _case_stacks(engines, schedules, t_max):
@@ -113,7 +148,7 @@ def _squeeze_case(arr, single_case: bool):
 
 def sdot_sweep(
     *,
-    covs: Optional[jnp.ndarray] = None,
+    covs=None,
     data: Optional[Sequence[jnp.ndarray]] = None,
     engines: Union[DenseConsensus, Sequence[DenseConsensus]],
     r: int,
@@ -129,32 +164,84 @@ def sdot_sweep(
     ``engines`` / ``schedules`` zip-broadcast into the case axis (pass one
     engine and k schedules, k engines and one schedule, or aligned lists).
     Each seed gets its own orthonormal init (the paper's Monte-Carlo axis).
+
+    ``covs`` is either one (N, d, d) stack shared by every case, or a
+    list/tuple with one (N_c, d, d) stack per case — the per-case form may
+    mix node counts (the Table-II connectivity axis): every case is padded
+    to N_max with isolated identity nodes (see the module docstring) and
+    the result carries ``node_counts`` so callers can slice the padding
+    off ``q``. Error traces are masked to the real nodes and match the
+    unpadded per-case runs exactly.
     """
     if (covs is None) == (data is None):
         raise ValueError("provide exactly one of covs / data")
-    engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c)
+    per_case_covs = covs is not None and isinstance(covs, (list, tuple))
+    engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c,
+                                          allow_ragged=per_case_covs)
     single_case = len(engines) == 1
-    n = engines[0].graph.n_nodes
-    d = covs.shape[1] if covs is not None else data[0].shape[0]
+    n_list = [e.graph.n_nodes for e in engines]
     t_max = int(max(int(s.max()) for s in schedules)) if t_outer else 0
-    ws, tables, scheds = _case_stacks(engines, schedules, t_max)
-
-    if covs is not None:
-        operand, mode = covs, "cov"
-    else:
-        operand, mode = _stack_data(data), "data"
     trace_err = q_true is not None
-    q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
 
-    q0 = _seed_inits(seeds, d, r)                               # (S, d, r)
-    q0_nodes = jnp.broadcast_to(q0[:, None], (len(seeds), n, d, r))
+    if per_case_covs:
+        case_covs = [jnp.asarray(c) for c in covs]
+        if len(case_covs) == 1:
+            case_covs = case_covs * len(engines)
+        if len(case_covs) != len(engines):
+            raise ValueError("per-case covs must zip-broadcast with the "
+                             f"cases: got {len(case_covs)} cov stacks for "
+                             f"{len(engines)} cases")
+        for c, e in zip(case_covs, engines):
+            if c.shape[0] != e.graph.n_nodes:
+                raise ValueError("per-case covs must match each engine's "
+                                 f"node count: got {c.shape[0]} covs for an "
+                                 f"{e.graph.n_nodes}-node graph")
+        d = int(case_covs[0].shape[1])
+        n_max = max(n_list)
+        ws = jnp.stack([jnp.asarray(_pad_weights_identity(e.weights, n_max))
+                        for e in engines])
+        tables = jnp.stack([debias_table(w, t_max) for w in ws])
+        covs_pad = jnp.stack([_pad_covs_identity(c, n_max)
+                              for c in case_covs])              # (C,N_max,d,d)
+        masks = jnp.asarray(
+            np.arange(n_max)[None, :] < np.asarray(n_list)[:, None],
+            jnp.float32)                                        # (C, N_max)
+        scheds = jnp.asarray(np.stack(schedules), jnp.int32)
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q0 = _seed_inits(seeds, d, r)                           # (S, d, r)
+        q0_nodes = jnp.broadcast_to(q0[:, None],
+                                    (len(seeds), n_max, d, r))
 
-    run = lambda w, table, sched, q0n: _fused_run(
-        operand, w, table, sched, q0n, q_arg,
-        mode=mode, t_max=t_max, trace_err=trace_err)
-    over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
-    over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
-    q_nodes, errs = over_cases(ws, tables, scheds, q0_nodes)
+        run = lambda w, table, sched, covp, mask, q0n: _fused_run(
+            covp, w, table, sched, q0n, q_arg, mask,
+            mode="cov", t_max=t_max, trace_err=trace_err)
+        over_seeds = jax.vmap(run, in_axes=(None, None, None, None, None, 0))
+        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, None))
+        q_nodes, errs = over_cases(ws, tables, scheds, covs_pad, masks,
+                                   q0_nodes)
+        node_counts = np.asarray(n_list)
+    else:
+        n = n_list[0]
+        d = covs.shape[1] if covs is not None else data[0].shape[0]
+        ws, tables, scheds = _case_stacks(engines, schedules, t_max)
+
+        if covs is not None:
+            operand, mode = covs, "cov"
+        else:
+            operand, mode = _stack_data(data), "data"
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+
+        q0 = _seed_inits(seeds, d, r)                           # (S, d, r)
+        q0_nodes = jnp.broadcast_to(q0[:, None], (len(seeds), n, d, r))
+        ones = jnp.ones((n,), jnp.float32)
+
+        run = lambda w, table, sched, q0n: _fused_run(
+            operand, w, table, sched, q0n, q_arg, ones,
+            mode=mode, t_max=t_max, trace_err=trace_err)
+        over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
+        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
+        q_nodes, errs = over_cases(ws, tables, scheds, q0_nodes)
+        node_counts = None
 
     ledger = CommLedger()
     for eng, sched in zip(engines, schedules):
@@ -166,6 +253,7 @@ def sdot_sweep(
                       if trace_err else None),
         ledger=ledger,
         seeds=np.asarray(list(seeds)),
+        node_counts=node_counts,
     )
 
 

@@ -19,10 +19,12 @@ from . import ref
 from .flash_attention import flash_attention_pallas
 from .gram_qr import gram_qr_pallas
 from .gram_update import batched_gram_apply_pallas, gram_apply_pallas
-from .slab_ops import batched_slab_apply_pallas, batched_slab_tq_pallas
+from .slab_ops import (batched_slab_apply_pallas, batched_slab_tq_pallas,
+                       grid_block_apply_pallas, grid_block_tq_pallas)
 
 __all__ = ["gram_apply", "batched_gram_apply", "batched_slab_tq",
-           "batched_slab_apply", "gram_qr", "flash_attention", "on_tpu"]
+           "batched_slab_apply", "grid_block_tq", "grid_block_apply",
+           "gram_qr", "flash_attention", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -141,6 +143,60 @@ def batched_slab_apply(x_stack: jnp.ndarray, s_stack: jnp.ndarray, *,
     xp = _pad_to(x_stack, 2, block_n)
     sp = _pad_to(s_stack, 1, block_n)
     v = batched_slab_apply_pallas(xp, sp, block_n=block_n, interpret=interp)
+    return v.astype(s_stack.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "use_pallas", "interpret"))
+def grid_block_tq(x_grid: jnp.ndarray, q_stack: jnp.ndarray, *,
+                  block_n: int = 512, use_pallas: bool | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Z[i, j] = X_ij^T Q_i — batched B-DOT stage 1 for the whole grid.
+
+    x_grid: (I, J, d_max, n_max) zero-padded blocks, q_stack: (I, d_max, r)
+    zero-row-padded row iterates (padding exact in the product). This is the
+    dispatch point for the fused B-DOT executor's column-partial step.
+
+    ``use_pallas=None`` auto-selects: the Pallas (row, column, sample-block)
+    kernel on TPU, the fused-einsum oracle elsewhere (interpret-mode Pallas
+    unrolls the grid at trace time, bloating the fused scan's XLA program on
+    CPU for no win — same rationale as batched_slab_tq).
+    """
+    i_rows, j_cols, d, n = x_grid.shape
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    r = q_stack.shape[-1]
+    vmem_bytes = (d * block_n + d * r + block_n * r) * 4
+    if not use_pallas or vmem_bytes > 8 * 2**20:
+        return ref.grid_block_tq_ref(x_grid, q_stack)
+    interp = (not on_tpu()) if interpret is None else interpret
+    xp = _pad_to(x_grid, 3, block_n)
+    z = grid_block_tq_pallas(xp, q_stack, block_n=block_n, interpret=interp)
+    return z[:, :, :n].astype(q_stack.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "use_pallas", "interpret"))
+def grid_block_apply(x_grid: jnp.ndarray, s_stack: jnp.ndarray, *,
+                     block_n: int = 512, use_pallas: bool | None = None,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """V[i, j] = X_ij S_j — batched B-DOT stage 2 for the whole grid.
+
+    x_grid: (I, J, d_max, n_max) zero-padded blocks, s_stack: (J, n_max, r)
+    per-column debiased consensus sums. The sample axis of both operands is
+    padded together, so padded columns of X multiply zero rows of S — exact.
+    """
+    i_rows, j_cols, d, n = x_grid.shape
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    r = s_stack.shape[-1]
+    vmem_bytes = (d * block_n + block_n * r + d * r) * 4
+    if not use_pallas or vmem_bytes > 8 * 2**20:
+        return ref.grid_block_apply_ref(x_grid, s_stack)
+    interp = (not on_tpu()) if interpret is None else interpret
+    xp = _pad_to(x_grid, 3, block_n)
+    sp = _pad_to(s_stack, 1, block_n)
+    v = grid_block_apply_pallas(xp, sp, block_n=block_n, interpret=interp)
     return v.astype(s_stack.dtype)
 
 

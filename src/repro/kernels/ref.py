@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["gram_apply_ref", "batched_gram_apply_ref", "flash_attention_ref",
-           "gram_qr_ref", "batched_slab_tq_ref", "batched_slab_apply_ref"]
+           "gram_qr_ref", "batched_slab_tq_ref", "batched_slab_apply_ref",
+           "grid_block_tq_ref", "grid_block_apply_ref"]
 
 
 def gram_apply_ref(x: jnp.ndarray, q: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
@@ -57,6 +58,30 @@ def batched_slab_apply_ref(x_stack: jnp.ndarray, s_stack: jnp.ndarray) -> jnp.nd
     """
     acc = jnp.promote_types(x_stack.dtype, jnp.float32)
     return jnp.einsum("idn,inr->idr", x_stack.astype(acc),
+                      s_stack.astype(acc)).astype(s_stack.dtype)
+
+
+def grid_block_tq_ref(x_grid: jnp.ndarray, q_stack: jnp.ndarray) -> jnp.ndarray:
+    """Z[i, j] = X_ij^T Q_i over an I x J grid of blocks (B-DOT stage 1).
+
+    x_grid: (I, J, d_max, n_max) zero-padded blocks, q_stack: (I, d_max, r)
+    zero-row-padded row iterates. Padded feature rows are null in both
+    operands and padded sample columns of X produce zero rows of Z — exact.
+    """
+    acc = jnp.promote_types(x_grid.dtype, jnp.float32)
+    return jnp.einsum("ijdn,idr->ijnr", x_grid.astype(acc),
+                      q_stack.astype(acc)).astype(q_stack.dtype)
+
+
+def grid_block_apply_ref(x_grid: jnp.ndarray, s_stack: jnp.ndarray) -> jnp.ndarray:
+    """V[i, j] = X_ij S_j over an I x J grid of blocks (B-DOT stage 2).
+
+    x_grid: (I, J, d_max, n_max) zero-padded blocks, s_stack: (J, n_max, r)
+    per-column consensus sums. Padded sample columns of X multiply the padded
+    (zero) rows of S and padded feature rows of X give zero rows of V — exact.
+    """
+    acc = jnp.promote_types(x_grid.dtype, jnp.float32)
+    return jnp.einsum("ijdn,jnr->ijdr", x_grid.astype(acc),
                       s_stack.astype(acc)).astype(s_stack.dtype)
 
 

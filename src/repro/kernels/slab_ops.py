@@ -18,8 +18,21 @@ dispatch chain on TPU:
   the (d_max, r) output tile (TPU grids are sequential, so revisiting the
   output block is safe; init at j == 0 — same pattern as gram_update.py).
 
-Call through ops.batched_slab_tq / ops.batched_slab_apply, which pad n to a
-block multiple and fall back to the fused-einsum oracle off-TPU.
+B-DOT (core/bdot.py) generalizes both to an I x J *grid* of blocks
+X_ij (d_i x n_j): stage 1 needs Z_ij = X_ij^T Q_i and stage 2 needs
+V_ij = X_ij S_j, batched over the whole grid (blocks zero-padded to a common
+(d_max, n_max) — exact for the same null-operand reason). The grid kernels
+below launch once with a (row, column, sample-block) grid:
+
+* ``grid_block_tq_pallas``    — each (i, j, b) step owns its (bn, r) output
+  tile of Z[i, j]; no accumulation.
+* ``grid_block_apply_pallas`` — accumulates X_b S_b over sample blocks into
+  the (d_max, r) tile of V[i, j] (b is the fast grid dimension; init at
+  b == 0).
+
+Call through ops.batched_slab_tq / ops.batched_slab_apply (and
+ops.grid_block_tq / ops.grid_block_apply), which pad n to a block multiple
+and fall back to the fused-einsum oracle off-TPU.
 """
 from __future__ import annotations
 
@@ -29,7 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["batched_slab_tq_pallas", "batched_slab_apply_pallas"]
+__all__ = ["batched_slab_tq_pallas", "batched_slab_apply_pallas",
+           "grid_block_tq_pallas", "grid_block_apply_pallas"]
 
 
 def _slab_tq_kernel(x_ref, q_ref, z_ref):
@@ -118,3 +132,92 @@ def batched_slab_apply_pallas(x_stack: jnp.ndarray, s_stack: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((n_nodes, d, r), jnp.float32),
         interpret=interpret,
     )(x_stack, s_stack)
+
+
+def _grid_tq_kernel(x_ref, q_ref, z_ref):
+    """One (i, j, b) grid step: Z_{ij,b} = X_{ij,b}^T Q_i for sample block b."""
+    x = x_ref[0, 0]         # (d, bn) — block (i, j)'s sample block
+    q = q_ref[0]            # (d, r)  — row i's slab iterate
+    z = jax.lax.dot_general(
+        x, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b^T Q: (bn, r)
+    z_ref[0, 0, ...] = z.astype(z_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def grid_block_tq_pallas(x_grid: jnp.ndarray, q_stack: jnp.ndarray, *,
+                         block_n: int = 512,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Z[i, j] = X_ij^T Q_i for every grid block in one launch (B-DOT stage 1).
+
+    x_grid: (I, J, d, n) with n % block_n == 0 (ops.py pads); q_stack:
+    (I, d, r). Output (I, J, n, r) f32; each (i, j, b) grid step owns its
+    output tile, so no accumulation is needed.
+    """
+    i_rows, j_cols, d, n = x_grid.shape
+    i2, d2, r = q_stack.shape
+    assert i_rows == i2 and d == d2, "x_grid and q_stack must align"
+    assert n % block_n == 0, "ops.py pads n to a block multiple"
+    n_blocks = n // block_n
+
+    return pl.pallas_call(
+        _grid_tq_kernel,
+        grid=(i_rows, j_cols, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, d, block_n), lambda i, j, b: (i, j, 0, b)),
+            pl.BlockSpec((1, d, r), lambda i, j, b: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_n, r),
+                               lambda i, j, b: (i, j, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((i_rows, j_cols, n, r), jnp.float32),
+        interpret=interpret,
+    )(x_grid, q_stack)
+
+
+def _grid_apply_kernel(x_ref, s_ref, v_ref):
+    """One (i, j, b) grid step: accumulate X_{ij,b} S_{j,b} into V_ij.
+
+    b (sample block) is the fast grid dimension — block (i, j)'s output tile
+    is revisited consecutively; init at b == 0.
+    """
+    b = pl.program_id(2)
+
+    @pl.when(b == 0)
+    def _init():
+        v_ref[...] = jnp.zeros_like(v_ref)
+
+    x = x_ref[0, 0]         # (d, bn)
+    s = s_ref[0]            # (bn, r)
+    v = jax.lax.dot_general(
+        x, s, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # X_b S_b: (d, r)
+    v_ref[0, 0, ...] += v.astype(v_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def grid_block_apply_pallas(x_grid: jnp.ndarray, s_stack: jnp.ndarray, *,
+                            block_n: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """V[i, j] = X_ij S_j for every grid block in one launch (B-DOT stage 2).
+
+    x_grid: (I, J, d, n) with n % block_n == 0; s_stack: (J, n, r) (ops.py
+    zero-pads the sample axis of both — exact, padded sample columns multiply
+    padded S rows that are zero). Output (I, J, d, r) f32.
+    """
+    i_rows, j_cols, d, n = x_grid.shape
+    j2, n2, r = s_stack.shape
+    assert j_cols == j2 and n == n2, "x_grid and s_stack must align"
+    assert n % block_n == 0, "ops.py pads n to a block multiple"
+    n_blocks = n // block_n
+
+    return pl.pallas_call(
+        _grid_apply_kernel,
+        grid=(i_rows, j_cols, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, d, block_n), lambda i, j, b: (i, j, 0, b)),
+            pl.BlockSpec((1, block_n, r), lambda i, j, b: (j, b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d, r), lambda i, j, b: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((i_rows, j_cols, d, r), jnp.float32),
+        interpret=interpret,
+    )(x_grid, s_stack)

@@ -1,0 +1,244 @@
+"""Fused whole-run B-DOT vs the eager oracle, the in-scan async straggler
+executors vs seeded eager replays, and the ragged-N sweep engine."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.async_gossip import AsyncConsensus
+from repro.core.bdot import bdot, pad_grid_blocks
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.fdot import fdot
+from repro.core.linalg import eigh_topr
+from repro.core.metrics import CommLedger
+from repro.core.sdot import sdot
+from repro.core.sweep import sdot_sweep
+from repro.core.topology import erdos_renyi, ring
+from repro.data.pipeline import (gaussian_eigengap_data, partition_features,
+                                 partition_samples)
+
+
+def _split_cols(x, sizes):
+    offs = np.cumsum([0] + list(sizes))
+    return [x[:, offs[k]:offs[k + 1]] for k in range(len(sizes))]
+
+
+def _grid_problem(d=24, r=4, I=3, J=2, n=3000, ragged=False, seed=0):
+    x, _, _ = gaussian_eigengap_data(d, n, r, 0.6, seed=seed)
+    _, q_true = eigh_topr(x @ x.T, r)
+    fslabs = partition_features(x, I)           # ragged d_i when I !| d
+    if ragged:
+        sizes = [n // J + 100 * (1 if k == 0 else -1) for k in range(J)]
+        sizes[-1] = n - sum(sizes[:-1])
+        blocks = [_split_cols(sl, sizes) for sl in fslabs]
+    else:
+        blocks = [partition_samples(sl, J) for sl in fslabs]
+    return x, blocks, q_true
+
+
+def _grid_engines(I, J, seed=0):
+    cols = [DenseConsensus(erdos_renyi(I, 0.7, seed=seed + j)) if I > 2
+            else DenseConsensus(ring(I)) for j in range(J)]
+    rows = [DenseConsensus(erdos_renyi(J, 0.7, seed=seed + 10 + i)) if J > 2
+            else DenseConsensus(ring(J)) for i in range(I)]
+    return cols, rows
+
+
+def _assert_ledgers_equal(a: CommLedger, b: CommLedger):
+    assert a.p2p == b.p2p
+    assert a.matrices == b.matrices
+    assert a.scalars == b.scalars
+
+
+# ---------------------------------------------------------------------------
+# fused B-DOT vs the eager oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("grid", [(2, 2), (3, 2)])
+@pytest.mark.parametrize("sched_kind", ["const", "lin2"])
+def test_bdot_fused_matches_eager(grid, sched_kind):
+    I, J = grid
+    _, blocks, q_true = _grid_problem(I=I, J=J)
+    cols, rows = _grid_engines(I, J)
+    sched = (None if sched_kind == "const"
+             else consensus_schedule("lin2", 12, cap=40))
+    kw = dict(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+              t_outer=12, t_c=40, schedule=sched, q_true=q_true)
+    eager = bdot(fused=False, **kw)
+    fused = bdot(fused=True, **kw)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused.q_full),
+                               np.asarray(eager.q_full), rtol=1e-4,
+                               atol=1e-5)
+    _assert_ledgers_equal(fused.ledger, eager.ledger)
+
+
+def test_bdot_fused_ragged_grid():
+    """Uneven d_i AND n_j: the (I, J, d_max, n_max) zero-padding must not
+    change the result (d=25 over I=3 slabs, n split 1600/1400)."""
+    _, blocks, q_true = _grid_problem(d=25, I=3, J=2, ragged=True)
+    assert len({b.shape[0] for row in blocks for b in row}) > 1
+    assert len({b.shape[1] for row in blocks for b in row}) > 1
+    cols, rows = _grid_engines(3, 2, seed=5)
+    kw = dict(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+              t_outer=10, t_c=40, q_true=q_true)
+    eager = bdot(fused=False, **kw)
+    fused = bdot(fused=True, **kw)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-5)
+    for fb, eb in zip(fused.q_rows, eager.q_rows):
+        assert fb.shape == eb.shape
+        np.testing.assert_allclose(np.asarray(fb), np.asarray(eb),
+                                   rtol=1e-4, atol=1e-5)
+    _assert_ledgers_equal(fused.ledger, eager.ledger)
+
+
+def test_bdot_fused_converges():
+    _, blocks, q_true = _grid_problem()
+    cols, rows = _grid_engines(3, 2)
+    res = bdot(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+               t_outer=50, t_c=60, q_true=q_true)
+    assert res.error_trace[-1] < 1e-5
+    q = res.q_full
+    np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(4), atol=1e-4)
+
+
+def test_bdot_short_schedule_rejected():
+    _, blocks, _ = _grid_problem()
+    cols, rows = _grid_engines(3, 2)
+    for fused in (True, False):
+        with pytest.raises(ValueError, match="schedule"):
+            bdot(blocks=blocks, col_engines=cols, row_engines=rows, r=4,
+                 t_outer=10, schedule=np.array([5, 5]), fused=fused)
+
+
+def test_pad_grid_blocks_layout():
+    _, blocks, _ = _grid_problem(d=25, ragged=True)
+    stack = pad_grid_blocks(blocks)
+    I, J = len(blocks), len(blocks[0])
+    d_max = max(row[0].shape[0] for row in blocks)
+    n_max = max(b.shape[1] for b in blocks[0])
+    assert stack.shape == (I, J, d_max, n_max)
+    for i in range(I):
+        for j in range(J):
+            di, nj = blocks[i][j].shape
+            np.testing.assert_array_equal(np.asarray(stack[i, j, :di, :nj]),
+                                          np.asarray(blocks[i][j]))
+            assert float(jnp.abs(stack[i, j, di:]).max() if di < d_max
+                         else 0.0) == 0.0
+            assert float(jnp.abs(stack[i, j, :, nj:]).max() if nj < n_max
+                         else 0.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# in-scan async straggler runs vs seeded eager replays
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def straggler_problem():
+    d, r, n_nodes, n_per = 20, 5, 10, 400
+    x, _, _ = gaussian_eigengap_data(d, n_nodes * n_per, r, 0.7, seed=0)
+    blocks = partition_samples(x, n_nodes)
+    covs = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    _, q_true = eigh_topr(covs.sum(0), r)
+    g = erdos_renyi(n_nodes, 0.5, seed=1)
+    return dict(covs=covs, q_true=q_true, g=g, r=r)
+
+
+@pytest.mark.parametrize("sched_kind", ["const", "lin2"])
+def test_async_sdot_in_scan_matches_eager(straggler_problem, sched_kind):
+    """Seeded whole-run in-scan async S-DOT == the eager per-iteration loop
+    replaying the same padded mask blocks (Table-V straggler path)."""
+    p = straggler_problem
+    sched = (None if sched_kind == "const"
+             else consensus_schedule("lin2", 15, cap=25))
+    kw = dict(covs=p["covs"], r=p["r"], t_outer=15, t_c=25, schedule=sched,
+              q_true=p["q_true"])
+    a = AsyncConsensus(p["g"], p_awake=0.6, seed=3)
+    b = AsyncConsensus(p["g"], p_awake=0.6, seed=3)
+    fused = sdot(engine=a, fused=True, **kw)
+    eager = sdot(engine=b, fused=False, **kw)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fused.q_nodes),
+                               np.asarray(eager.q_nodes), rtol=1e-4,
+                               atol=1e-5)
+    _assert_ledgers_equal(fused.ledger, eager.ledger)
+    assert fused.ledger.awake_counts == eager.ledger.awake_counts
+    # realized (awake-dependent) traffic, not the synchronous closed form
+    rounds = sum(int(t) for t in fused.consensus_trace)
+    assert len(fused.ledger.awake_counts) == rounds
+    assert 0 < fused.ledger.p2p < float(p["g"].adjacency.sum()) * rounds
+    # the fused run advanced the engine key exactly like t_outer eager draws
+    assert bool(jnp.all(a._key == b._key))
+
+
+def test_async_fdot_in_scan_matches_eager(straggler_problem):
+    p = straggler_problem
+    x, _, _ = gaussian_eigengap_data(20, 3000, p["r"], 0.7, seed=0)
+    _, q_true = eigh_topr(x @ x.T, p["r"])
+    fblocks = partition_features(x, 10)
+    a = AsyncConsensus(p["g"], p_awake=0.7, seed=2)
+    b = AsyncConsensus(p["g"], p_awake=0.7, seed=2)
+    kw = dict(data_blocks=fblocks, r=p["r"], t_outer=8, t_c=30,
+              q_true=q_true)
+    fused = fdot(engine=a, fused=True, **kw)
+    eager = fdot(engine=b, fused=False, **kw)
+    np.testing.assert_allclose(fused.error_trace, eager.error_trace,
+                               rtol=1e-4, atol=1e-6)
+    _assert_ledgers_equal(fused.ledger, eager.ledger)
+    assert fused.ledger.awake_counts == eager.ledger.awake_counts
+
+
+def test_async_sdot_in_scan_reaches_floor(straggler_problem):
+    p = straggler_problem
+    eng = AsyncConsensus(p["g"], p_awake=0.7, seed=0)
+    res = sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=60, t_c=50,
+               q_true=p["q_true"])
+    assert res.error_trace[-1] < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# ragged-N sweep (Table-II connectivity axis in one vmapped call)
+# ---------------------------------------------------------------------------
+def _cov_problem(n_nodes, d=20, r=5, n_per=300):
+    x, _, _ = gaussian_eigengap_data(d, n_nodes * n_per, r, 0.7, seed=0)
+    blocks = partition_samples(x, n_nodes)
+    covs = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    _, q_true = eigh_topr(covs.sum(0), r)
+    return covs, q_true
+
+
+def test_ragged_sweep_matches_unpadded_runs():
+    """ER N=10 and ring N=20 stacked in ONE vmapped call: identity padding
+    must reproduce the per-case unpadded traces and estimates."""
+    covs10, q_true = _cov_problem(10)
+    covs20, _ = _cov_problem(20)
+    cases = [(DenseConsensus(erdos_renyi(10, 0.5, seed=1)), covs10, 10),
+             (DenseConsensus(ring(20)), covs20, 20)]
+    seeds = [0, 1]
+    sw = sdot_sweep(covs=[covs10, covs20],
+                    engines=[c[0] for c in cases], r=5, t_outer=10, t_c=30,
+                    seeds=seeds, q_true=q_true)
+    assert sw.error_traces.shape == (2, 2, 10)
+    np.testing.assert_array_equal(sw.node_counts, [10, 20])
+    led = CommLedger()
+    for ci, (eng, cv, nn) in enumerate(cases):
+        for si, s in enumerate(seeds):
+            res = sdot(covs=cv, engine=eng, r=5, t_outer=10, t_c=30,
+                       seed=s, q_true=q_true)
+            led = led.merged(res.ledger)
+            np.testing.assert_allclose(sw.error_traces[ci, si],
+                                       res.error_trace, rtol=1e-5,
+                                       atol=1e-7)
+            np.testing.assert_allclose(np.asarray(sw.q[ci, si, :nn]),
+                                       np.asarray(res.q_nodes), rtol=1e-5,
+                                       atol=1e-6)
+    _assert_ledgers_equal(sw.ledger, led)
+
+
+def test_ragged_sweep_rejects_mismatched_covs():
+    covs10, q_true = _cov_problem(10)
+    with pytest.raises(ValueError, match="node count"):
+        sdot_sweep(covs=[covs10, covs10],
+                   engines=[DenseConsensus(erdos_renyi(10, 0.5, seed=1)),
+                            DenseConsensus(ring(20))],
+                   r=5, t_outer=5, seeds=[0])

@@ -201,3 +201,57 @@ def test_slab_ops_zero_row_padding_exact():
     want = ref.batched_slab_tq_ref(x[1:, :4], q[1:, :4])
     np.testing.assert_allclose(np.asarray(z[1]), np.asarray(want[0]),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# grid ops: Z[i,j] = X_ij^T Q_i and V[i,j] = X_ij S_j (fused B-DOT matmuls)
+# ---------------------------------------------------------------------------
+def test_grid_block_tq_matches_ref():
+    """(row, column, sample-block) kernel vs fused-einsum oracle, unaligned n."""
+    key = jax.random.PRNGKey(31)
+    kx, kq = jax.random.split(key)
+    x = jax.random.normal(kx, (3, 2, 8, 700))
+    q = jax.random.normal(kq, (3, 8, 5))
+    out = ops.grid_block_tq(x, q, block_n=256, use_pallas=True,
+                            interpret=True)
+    want = ref.grid_block_tq_ref(x, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_grid_block_apply_matches_ref():
+    key = jax.random.PRNGKey(32)
+    kx, ks = jax.random.split(key)
+    x = jax.random.normal(kx, (3, 2, 8, 700))
+    s = jax.random.normal(ks, (2, 700, 5))
+    out = ops.grid_block_apply(x, s, block_n=256, use_pallas=True,
+                               interpret=True)
+    want = ref.grid_block_apply_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_grid_ops_zero_padding_exact():
+    """Padded feature rows AND sample columns of the (I, J) stack stay null
+    (the fused B-DOT masking invariants)."""
+    key = jax.random.PRNGKey(33)
+    kx, kq, ks = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (2, 2, 6, 512))
+    q = jax.random.normal(kq, (2, 6, 3))
+    s = jax.random.normal(ks, (2, 512, 3))
+    # block row 1 has 4 real features; grid column 1 has 400 real samples
+    x = x.at[1, :, 4:].set(0.0)
+    q = q.at[1, 4:].set(0.0)
+    x = x.at[:, 1, :, 400:].set(0.0)
+    s = s.at[1, 400:].set(0.0)
+    z = ops.grid_block_tq(x, q, block_n=256, use_pallas=True, interpret=True)
+    want = ref.grid_block_tq_ref(x[1:, 1:, :4, :400], q[1:, :4])
+    np.testing.assert_allclose(np.asarray(z[1, 1, :400]),
+                               np.asarray(want[0, 0]), rtol=1e-4, atol=1e-4)
+    assert float(jnp.abs(z[1, 1, 400:]).max()) == 0.0
+    v = ops.grid_block_apply(x, s, block_n=256, use_pallas=True,
+                             interpret=True)
+    want_v = ref.grid_block_apply_ref(x[1:, 1:, :4, :400], s[1:, :400])
+    np.testing.assert_allclose(np.asarray(v[1, 1, :4]),
+                               np.asarray(want_v[0, 0]), rtol=1e-4, atol=1e-3)
+    assert float(jnp.abs(v[1, 1, 4:]).max()) == 0.0

@@ -64,6 +64,44 @@ def test_spmd_consensus_matches_dense_general_graph():
     """)
 
 
+def test_spmd_fused_sdot_matches_dense_fused():
+    """Whole-run SPMD S-DOT (one shard_map program: masked collective gossip
+    + device debias table inside the outer scan) == the fused DenseConsensus
+    executor, on a ring and a general graph, with a varying SA-DOT budget."""
+    run_spmd("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.core.topology import erdos_renyi, ring
+        from repro.core.consensus import (DenseConsensus, SpmdConsensus,
+                                          consensus_schedule)
+        from repro.core.sdot import sdot, sdot_spmd
+        from repro.core.linalg import eigh_topr
+        from repro.data.pipeline import (gaussian_eigengap_data,
+                                         partition_samples)
+        n, d, r = 8, 16, 3
+        x, _, _ = gaussian_eigengap_data(d, n * 400, r, 0.7, seed=0)
+        covs = jnp.stack([b @ b.T / b.shape[1]
+                          for b in partition_samples(x, n)])
+        _, q_true = eigh_topr(covs.sum(0), r)
+        mesh = Mesh(np.array(jax.devices()), ("nodes",))
+        sched = consensus_schedule("lin2", 12, cap=30)
+        for g in (ring(n), erdos_renyi(n, 0.5, seed=3)):
+            want = sdot(covs=covs, engine=DenseConsensus(g), r=r, t_outer=12,
+                        schedule=sched, q_true=q_true)
+            got = sdot_spmd(covs=covs, engine=SpmdConsensus(mesh, "nodes",
+                                                            graph=g),
+                            r=r, t_outer=12, schedule=sched, q_true=q_true)
+            np.testing.assert_allclose(got.error_trace, want.error_trace,
+                                       rtol=1e-4, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(got.q_nodes),
+                                       np.asarray(want.q_nodes), rtol=1e-4,
+                                       atol=1e-5)
+            assert got.ledger.p2p == want.ledger.p2p
+            assert got.ledger.scalars == want.ledger.scalars
+        print("spmd fused OK")
+    """)
+
+
 def test_two_level_reduce_exactness():
     """psum intra + enough gossip rounds inter == the true global sum."""
     run_spmd("""
