@@ -14,6 +14,7 @@ MODULES = [
     "sdot_fused",
     "bdot_fused",
     "sweep_bench",
+    "streaming_bench",
     "table1_eigengap_p2p",
     "table2_connectivity",
     "table3_ring",

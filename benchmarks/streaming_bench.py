@@ -1,0 +1,223 @@
+"""Streaming subsystem benchmark: chunked-scan overhead + launcher scaling.
+
+Two acceptance measurements for the streaming PSA subsystem:
+
+1. **Chunked vs monolithic** — the chunked-resumable executor
+   (streaming/resume.py) replays the monolithic whole-run scan bit for bit;
+   this benchmark prices the operational win (restartability) in walltime:
+   chunk-boundary dispatches only (no checkpointing), and with atomic
+   async checkpoints at every chunk boundary.  Bar: chunking alone must
+   cost < 10% over the monolithic scan.
+
+2. **Launcher vs single process** — the multi-host sweep launcher
+   (streaming/launcher.py) shards the seed grid over subprocess workers;
+   its merged result must equal the single-process ``sdot_sweep`` output
+   exactly (asserted here on every run), and the walltimes show where
+   process sharding starts paying (worker interpreter + compile startup is
+   the constant cost the fleet amortizes).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.streaming_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.run streaming_bench
+
+Writes BENCH_streaming.json (or .smoke.json) next to the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.sdot import sdot
+from repro.core.sweep import sdot_sweep
+from repro.core.topology import erdos_renyi
+from repro.streaming.launcher import build_engine, build_schedule, launch_sweep
+from repro.streaming.resume import sdot_chunked
+
+from .common import Row, sample_problem
+
+N, R = 20, 5
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.q_nodes if hasattr(out, "q_nodes") else out)
+    return time.perf_counter() - t0, out
+
+
+def bench_chunked(d, t_outer, chunk_size, repeats):
+    covs, q_true = sample_problem(d=d, r=R, n_nodes=N, n_per=200, gap=0.7,
+                                  seed=0)
+    eng = DenseConsensus(erdos_renyi(N, 0.25, seed=1))
+    sched = consensus_schedule("const", t_outer, t_max=50)
+    mono = lambda: sdot(covs=covs, engine=eng, r=R, t_outer=t_outer,
+                        schedule=sched, q_true=q_true)
+    chunked = lambda mgr: sdot_chunked(covs=covs, engine=eng, r=R,
+                                       t_outer=t_outer, schedule=sched,
+                                       q_true=q_true, chunk_size=chunk_size,
+                                       manager=mgr)
+    _timed(mono)                                     # warmup compile
+    _timed(lambda: chunked(None))
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_ckpt_")
+
+    def with_ckpt():
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+        return chunked(CheckpointManager(ckpt_dir, keep_last=2))
+
+    # Phase 1 — the <10% acceptance bar: mono vs chunked (no disk),
+    # interleaved with a rotating order so machine noise (this container
+    # jitters +-20% and throttles over time) hits both equally; best-of.
+    # Phase 2 — checkpointing cost, measured afterwards: its disk writes
+    # (page-cache churn) would otherwise poison the phase-1 measurements.
+    results = {}
+    best = {"mono": float("inf"), "chunk": float("inf"),
+            "ckpt": float("inf")}
+    variants = [("mono", mono), ("chunk", lambda: chunked(None))]
+    try:
+        for i in range(repeats):
+            for k, fn in variants[i % 2:] + variants[:i % 2]:
+                t, out = _timed(fn)
+                best[k] = min(best[k], t)
+                results[k] = out
+        for _ in range(repeats):
+            t, out = _timed(with_ckpt)
+            best["ckpt"] = min(best["ckpt"], t)
+            results["ckpt"] = out
+        np.testing.assert_array_equal(results["mono"].error_trace,
+                                      results["chunk"].error_trace)
+        np.testing.assert_array_equal(results["mono"].error_trace,
+                                      results["ckpt"].error_trace)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    mono_s, chunk_s, ckpt_s = best["mono"], best["chunk"], best["ckpt"]
+    mres = results["mono"]
+
+    return {
+        "case": f"chunked/d{d}/To{t_outer}/chunk{chunk_size}",
+        "monolithic_ms": round(mono_s * 1e3, 2),
+        "chunked_ms": round(chunk_s * 1e3, 2),
+        "chunked_ckpt_ms": round(ckpt_s * 1e3, 2),
+        "chunk_overhead_pct": round((chunk_s / mono_s - 1.0) * 100, 2),
+        "ckpt_overhead_pct": round((ckpt_s / mono_s - 1.0) * 100, 2),
+        "chunks": -(-t_outer // chunk_size),
+        "final_err": float(mres.error_trace[-1]),
+    }
+
+
+def bench_launcher(d, t_outer, n_seeds, n_workers):
+    covs, q_true = sample_problem(d=d, r=R, n_nodes=N, n_per=200, gap=0.7,
+                                  seed=0)
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.25, "seed": 1},
+              "schedule": {"kind": "lin2", "cap": 50}}]
+    seeds = list(range(n_seeds))
+    engines = [build_engine(c["topology"]) for c in cases]
+    schedules = [build_schedule(c["schedule"], t_outer, 50) for c in cases]
+
+    single = lambda: sdot_sweep(covs=covs, engines=engines,
+                                schedules=schedules, r=R, t_outer=t_outer,
+                                seeds=seeds, q_true=q_true)
+    single()                                         # warmup compile
+    t0 = time.perf_counter()
+    ref = single()
+    jax.block_until_ready(ref.q)
+    single_s = time.perf_counter() - t0
+
+    workdir = tempfile.mkdtemp(prefix="bench_launch_")
+    try:
+        t0 = time.perf_counter()
+        sw = launch_sweep(covs=covs, cases=cases, r=R, t_outer=t_outer,
+                          seeds=seeds, q_true=q_true, workdir=workdir,
+                          n_workers=n_workers)
+        launch_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+    # acceptance: the merged multi-process result equals the single-process
+    # sweep. Lane-slices are arithmetically identical; XLA may schedule a
+    # width-1 vmap differently, so the bar is float32-epsilon agreement.
+    np.testing.assert_allclose(sw.error_traces, ref.error_traces,
+                               rtol=1e-6, atol=1e-7)
+    assert sw.ledger.p2p == ref.ledger.p2p
+    max_dev = float(np.max(np.abs(sw.error_traces - ref.error_traces)))
+
+    return {
+        "case": f"launcher/{n_seeds}seeds_x_{n_workers}workers",
+        "single_process_ms": round(single_s * 1e3, 2),
+        "launcher_ms": round(launch_s * 1e3, 2),
+        "launcher_equal": True,
+        "launcher_max_trace_dev": max_dev,
+        "note": "launcher cost is dominated by per-worker interpreter + "
+                "compile startup; equality is the acceptance bar here",
+    }
+
+
+def run_bench(smoke: bool = False):
+    if smoke:
+        chunk_cases = [bench_chunked(d=20, t_outer=30, chunk_size=10,
+                                     repeats=1)]
+        launch_cases = [bench_launcher(d=20, t_outer=10, n_seeds=2,
+                                       n_workers=2)]
+    else:
+        # T_o=400 (~0.5 s/run) so the per-chunk dispatch cost is measured
+        # against a run long enough to integrate over this container's
+        # +-20% throttling jitter
+        chunk_cases = [
+            bench_chunked(d=100, t_outer=400, chunk_size=40, repeats=7),
+            bench_chunked(d=100, t_outer=400, chunk_size=100, repeats=7),
+        ]
+        launch_cases = [bench_launcher(d=60, t_outer=40, n_seeds=8,
+                                       n_workers=4)]
+    return chunk_cases + launch_cases
+
+
+def run():
+    """benchmarks.run entry point."""
+    rows = []
+    for rec in run_bench(smoke=False):
+        if rec["case"].startswith("chunked"):
+            rows.append(Row(
+                f"streaming/{rec['case']}", rec["chunked_ms"] * 1e3,
+                {"monolithic_ms": rec["monolithic_ms"],
+                 "overhead_pct": rec["chunk_overhead_pct"],
+                 "ckpt_overhead_pct": rec["ckpt_overhead_pct"]}))
+        else:
+            rows.append(Row(
+                f"streaming/{rec['case']}", rec["launcher_ms"] * 1e3,
+                {"single_process_ms": rec["single_process_ms"],
+                 "equal": rec["launcher_equal"]}))
+    return rows
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "streaming",
+        "scale": {"n_nodes": N, "r": R},
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    print(json.dumps(out, indent=2))
+    name = "BENCH_streaming.smoke.json" if smoke else "BENCH_streaming.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    if not smoke:
+        worst = max(r["chunk_overhead_pct"] for r in results
+                    if "chunk_overhead_pct" in r)
+        if worst > 10.0:
+            print(f"# WARNING: chunked overhead {worst}% above the 10% bar")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -113,8 +113,19 @@ def restore_tree(path: str, like: Any, *, mesh=None, specs=None) -> Any:
             else jax.device_put(leaf)
             for leaf, sp in zip(leaves, spec_flat)]
     else:
-        leaves = [jax.device_put(l) for l in leaves]
+        leaves = [_put_preserving_dtype(l) for l in leaves]
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _put_preserving_dtype(leaf: np.ndarray):
+    """device_put unless it would silently change the saved dtype.
+
+    With jax x64 disabled, device_put downcasts float64/int64 leaves to
+    32-bit — which corrupted e.g. restored CommLedger counters above 2^24.
+    Such leaves stay as host numpy arrays at their manifest dtype; callers
+    that need them on device opted into 32-bit anyway."""
+    out = jax.device_put(leaf)
+    return leaf if out.dtype != leaf.dtype else out
 
 
 class CheckpointManager:

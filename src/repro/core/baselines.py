@@ -45,6 +45,19 @@ def _trace(q_true, q):
     return float(subspace_error(q_true, q)) if q_true is not None else np.nan
 
 
+def _masked_node_mean(q, node_mask):
+    """Mean over the node axis restricted to ``node_mask > 0`` nodes.
+
+    With a mask of ones this is exactly ``q.mean(0)`` (multiply-by-1.0 and
+    divide-by-N reproduce the unmasked op order), so the plain sweeps are
+    unchanged; the ragged-N sweep engine passes a real mask to keep the
+    isolated identity-padding nodes out of the consensus-mean estimate the
+    error trace is computed from."""
+    m = node_mask.astype(q.dtype)
+    bshape = (-1,) + (1,) * (q.ndim - 1)
+    return jnp.sum(q * m.reshape(bshape), axis=0) / jnp.sum(m)
+
+
 def _supports_fused(engine) -> bool:
     """Fused baselines need the dense weight matrix (+ debias table for the
     consensus-sum methods); engines without them (e.g. AsyncConsensus with
@@ -178,7 +191,8 @@ def seq_dist_pm(covs: jnp.ndarray, engine: DenseConsensus, r: int,
 # distributed Sanger's algorithm (DSA)
 # --------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("t_outer", "trace_err"))
-def _fused_dsa(covs, w, q0, lr, q_true, *, t_outer: int, trace_err: bool):
+def _fused_dsa(covs, w, q0, lr, q_true, node_mask, *, t_outer: int,
+               trace_err: bool):
     def body(q, _):
         mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
         mq = local_cov_apply(covs, q)
@@ -186,8 +200,8 @@ def _fused_dsa(covs, w, q0, lr, q_true, *, t_outer: int, trace_err: bool):
         upper = jnp.triu(qmq)
         sanger = mq - jnp.einsum("ndr,nrs->nds", q, upper)
         q_new = mixed + lr * sanger
-        err = (subspace_error(q_true, q_new.mean(0)) if trace_err
-               else jnp.float32(0.0))
+        err = (subspace_error(q_true, _masked_node_mean(q_new, node_mask))
+               if trace_err else jnp.float32(0.0))
         return q_new, err
 
     return jax.lax.scan(body, q0, None, length=t_outer)
@@ -209,6 +223,7 @@ def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
         trace_err = q_true is not None
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
         q, errs = _fused_dsa(covs, engine._w, q, jnp.float32(lr), q_arg,
+                             jnp.ones((n,), jnp.float32),
                              t_outer=t_outer, trace_err=trace_err)
         errs = _finish_errs(errs, t_outer, trace_err)
     else:
@@ -232,14 +247,15 @@ def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
 # distributed projected gradient descent (DPGD)
 # --------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("t_outer", "trace_err"))
-def _fused_dpgd(covs, w, q0, lr, q_true, *, t_outer: int, trace_err: bool):
+def _fused_dpgd(covs, w, q0, lr, q_true, node_mask, *, t_outer: int,
+                trace_err: bool):
     def body(q, _):
         mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
         grad = local_cov_apply(covs, q)
         v = mixed + lr * grad
         q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
-        err = (subspace_error(q_true, q_new.mean(0)) if trace_err
-               else jnp.float32(0.0))
+        err = (subspace_error(q_true, _masked_node_mean(q_new, node_mask))
+               if trace_err else jnp.float32(0.0))
         return q_new, err
 
     return jax.lax.scan(body, q0, None, length=t_outer)
@@ -257,6 +273,7 @@ def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
         trace_err = q_true is not None
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
         q, errs = _fused_dpgd(covs, engine._w, q, jnp.float32(lr), q_arg,
+                              jnp.ones((n,), jnp.float32),
                               t_outer=t_outer, trace_err=trace_err)
         errs = _finish_errs(errs, t_outer, trace_err)
     else:
@@ -278,8 +295,8 @@ def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
 # DeEPCA — gradient tracking + power iteration
 # --------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("t_outer", "t_mix", "trace_err"))
-def _fused_deepca(covs, w, q0, s0, q_true, *, t_outer: int, t_mix: int,
-                  trace_err: bool):
+def _fused_deepca(covs, w, q0, s0, q_true, node_mask, *, t_outer: int,
+                  t_mix: int, trace_err: bool):
     def body(carry, _):
         q, s, mq_prev = carry
         wz = w.astype(s.dtype)
@@ -295,8 +312,8 @@ def _fused_deepca(covs, w, q0, s0, q_true, *, t_outer: int, t_mix: int,
         q_new = q_new * sign[:, None, :]
         mq_new = local_cov_apply(covs, q_new)
         s = s + mq_new - mq_prev       # gradient tracking correction
-        err = (subspace_error(q_true, q_new.mean(0)) if trace_err
-               else jnp.float32(0.0))
+        err = (subspace_error(q_true, _masked_node_mean(q_new, node_mask))
+               if trace_err else jnp.float32(0.0))
         return (q_new, s, mq_new), err
 
     (q, s, _), errs = jax.lax.scan(body, (q0, s0, s0), None, length=t_outer)
@@ -321,6 +338,7 @@ def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
         s0 = local_cov_apply(covs, q)
         q, errs = _fused_deepca(covs, engine._w, q, s0, q_arg,
+                                jnp.ones((n,), jnp.float32),
                                 t_outer=t_outer, t_mix=t_mix,
                                 trace_err=trace_err)
         errs = _finish_errs(errs, t_outer, trace_err)

@@ -138,19 +138,16 @@ def _qr_pass(w, table, v, t_qr, t_max):
     return _solve_from_gram_sum(gsum, v)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fused_fdot_run(x_pad, w, table, sched, q0_pad, qtrue_pad, *,
-                    t_max: int, t_c_qr: int, passes: int, trace_err: bool):
-    """One compiled program for a whole F-DOT run.
+def _fdot_outer_body(x_pad, w, table, qtrue_pad, *, t_max: int, t_c_qr: int,
+                     passes: int, trace_err: bool):
+    """Build the per-outer-iteration body ``(q_pad, t_c) -> (q_new, err)``.
 
-    x_pad: (N, d_max, n) zero-padded slabs; sched: (T_o,) int32 consensus
-    budgets for the partial-product phase; t_c_qr: static constant budget of
-    each QR consensus pass (its gossip scan is exactly t_c_qr rounds — no
-    masking needed); table: (t_max+1, N) debias rows [W^t e_1] with
-    t_max >= max(sched.max(), t_c_qr); q0_pad / qtrue_pad: (N, d_max, r)
-    zero-row-padded slab stacks. Returns (q_pad, (T_o,) error trace — zeros
-    when trace_err is False).
+    One definition feeds the whole-run scan (``_fused_fdot_run``) and the
+    chunked streaming executor (``streaming/resume.py``), so a run split at
+    chunk boundaries replays the monolithic scan bit for bit. No node mask
+    is needed here (unlike the S-DOT body): ragged-N F-DOT cases pad with
+    all-zero slabs, which contribute exactly nothing to every product
+    including the error cross term.
     """
 
     def outer(q_pad, t_c):
@@ -166,22 +163,16 @@ def _fused_fdot_run(x_pad, w, table, sched, q0_pad, qtrue_pad, *,
             err = jnp.float32(0.0)
         return v, err
 
-    return jax.lax.scan(outer, q0_pad, sched)
+    return outer
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fused_async_fdot_run(x_pad, w, adj, p_awake, key0, sched, q0_pad,
-                          qtrue_pad, *, t_max: int, t_c_qr: int, passes: int,
-                          trace_err: bool):
-    """One compiled program for a whole *async* F-DOT run.
+def _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad, *, t_max: int,
+                           t_c_qr: int, passes: int, trace_err: bool):
+    """Async twin of ``_fdot_outer_body``: carry is ``(q_pad, rng key)``.
 
-    Same layout as _fused_fdot_run but every consensus (the partial-product
-    phase and each QR pass) is realized-matrix async gossip with its own
-    (t_max, N) awake-mask block drawn from the carried RNG key — three key
-    splits per outer iteration, in the order the eager oracle consumes them
-    (partial, QR pass 1, QR pass 2). Returns (q_pad, key_final, (T_o,) errs,
-    (T_o, 1+passes, t_max) sends, (T_o, 1+passes, t_max) awake counts).
+    Three key splits per outer iteration (partial-product phase, QR pass 1,
+    QR pass 2) in the order the eager oracle consumes them; carrying the key
+    makes chunked resume exact for straggler F-DOT runs.
     """
     n = w.shape[0]
 
@@ -210,9 +201,102 @@ def _fused_async_fdot_run(x_pad, w, adj, p_awake, key0, sched, q0_pad,
             err = jnp.float32(0.0)
         return (v, key), (err, jnp.stack(sends), jnp.stack(counts))
 
+    return outer
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
+def _fused_fdot_run(x_pad, w, table, sched, q0_pad, qtrue_pad, *,
+                    t_max: int, t_c_qr: int, passes: int, trace_err: bool):
+    """One compiled program for a whole F-DOT run.
+
+    x_pad: (N, d_max, n) zero-padded slabs; sched: (T_o,) int32 consensus
+    budgets for the partial-product phase; t_c_qr: static constant budget of
+    each QR consensus pass (its gossip scan is exactly t_c_qr rounds — no
+    masking needed); table: (t_max+1, N) debias rows [W^t e_1] with
+    t_max >= max(sched.max(), t_c_qr); q0_pad / qtrue_pad: (N, d_max, r)
+    zero-row-padded slab stacks. Returns (q_pad, (T_o,) error trace — zeros
+    when trace_err is False).
+    """
+    outer = _fdot_outer_body(x_pad, w, table, qtrue_pad, t_max=t_max,
+                             t_c_qr=t_c_qr, passes=passes,
+                             trace_err=trace_err)
+    return jax.lax.scan(outer, q0_pad, sched)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
+def _fused_async_fdot_run(x_pad, w, adj, p_awake, key0, sched, q0_pad,
+                          qtrue_pad, *, t_max: int, t_c_qr: int, passes: int,
+                          trace_err: bool):
+    """One compiled program for a whole *async* F-DOT run.
+
+    Same layout as _fused_fdot_run but every consensus (the partial-product
+    phase and each QR pass) is realized-matrix async gossip with its own
+    (t_max, N) awake-mask block drawn from the carried RNG key — three key
+    splits per outer iteration, in the order the eager oracle consumes them
+    (partial, QR pass 1, QR pass 2). Returns (q_pad, key_final, (T_o,) errs,
+    (T_o, 1+passes, t_max) sends, (T_o, 1+passes, t_max) awake counts).
+    """
+    outer = _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad,
+                                   t_max=t_max, t_c_qr=t_c_qr, passes=passes,
+                                   trace_err=trace_err)
     (q_pad, key), (errs, sends, counts) = jax.lax.scan(
         outer, (q0_pad, key0), sched)
     return q_pad, key, errs, sends, counts
+
+
+def _prepare_fdot(*, data_blocks, engine, r, t_outer, t_c, t_c_qr, schedule,
+                  q_init, q_true, seed):
+    """Validate + normalize an F-DOT run's inputs into device-ready pieces.
+
+    Shared by ``fdot`` and the chunked streaming executor
+    (``streaming/resume.py``) — both build the padded slab stacks, schedule
+    array, and initial iterate here, so a chunked run starts from literally
+    the same device values as the monolithic one.
+    """
+    n_nodes = engine.graph.n_nodes
+    if len(data_blocks) != n_nodes:
+        raise ValueError("need one feature slab per node")
+    dims = [int(x.shape[0]) for x in data_blocks]
+    d = sum(dims)
+    n_samples = data_blocks[0].shape[1]
+    t_c_qr = t_c if t_c_qr is None else t_c_qr
+    passes = 2
+
+    if schedule is None:
+        schedule = consensus_schedule("const", t_outer, t_max=t_c)
+    elif len(schedule) < t_outer:
+        raise ValueError(f"schedule has {len(schedule)} entries but "
+                         f"t_outer={t_outer}")
+    schedule = np.asarray(schedule[:t_outer])
+
+    if q_init is None:
+        q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
+    # split the common init into per-node slabs
+    offs = np.cumsum([0] + dims)
+    q_blocks = [q_init[offs[i]:offs[i + 1]] for i in range(n_nodes)]
+
+    is_async = hasattr(engine, "sample_awake")
+    t_max = int(max(schedule.max(), t_c_qr)) if t_outer else 0
+    trace_err = q_true is not None
+
+    def pads():
+        # built lazily: only the fused/chunked executors consume the padded
+        # stacks — the eager oracle iterates the ragged blocks directly and
+        # must not pay the duplicated (N, d_max, n) device copy
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = pad_feature_slabs(q_blocks)
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        return x_pad, q0_pad, qtrue_pad
+
+    return dict(
+        n_nodes=n_nodes, dims=dims, d=d, n_samples=n_samples,
+        t_c_qr=int(t_c_qr), passes=passes, schedule=schedule,
+        sched_dev=jnp.asarray(schedule, jnp.int32), q_blocks=q_blocks,
+        is_async=is_async, t_max=t_max, trace_err=trace_err, pads=pads,
+    )
 
 
 def fdot(
@@ -237,44 +321,25 @@ def fdot(
     compiled scan over zero-padded slabs; ``fused=False`` is the eager
     per-iteration oracle.
     """
-    n_nodes = engine.graph.n_nodes
-    if len(data_blocks) != n_nodes:
-        raise ValueError("need one feature slab per node")
-    dims = [int(x.shape[0]) for x in data_blocks]
-    d = sum(dims)
-    n_samples = data_blocks[0].shape[1]
-    t_c_qr = t_c if t_c_qr is None else t_c_qr
-    passes = 2
-
-    if schedule is None:
-        schedule = consensus_schedule("const", t_outer, t_max=t_c)
-    elif len(schedule) < t_outer:
-        raise ValueError(f"schedule has {len(schedule)} entries but "
-                         f"t_outer={t_outer}")
-    schedule = np.asarray(schedule[:t_outer])
-
-    if q_init is None:
-        q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
-    # split the common init into per-node slabs
-    offs = np.cumsum([0] + dims)
-    q_blocks = [q_init[offs[i]:offs[i + 1]] for i in range(n_nodes)]
+    prep = _prepare_fdot(data_blocks=data_blocks, engine=engine, r=r,
+                         t_outer=t_outer, t_c=t_c, t_c_qr=t_c_qr,
+                         schedule=schedule, q_init=q_init, q_true=q_true,
+                         seed=seed)
+    dims, d, n_samples = prep["dims"], prep["d"], prep["n_samples"]
+    t_c_qr, passes = prep["t_c_qr"], prep["passes"]
+    schedule, q_blocks = prep["schedule"], prep["q_blocks"]
+    is_async, t_max = prep["is_async"], prep["t_max"]
+    trace_err = prep["trace_err"]
 
     ledger = CommLedger()
 
     # async engines get their own whole-run scan; any other engine without
     # the scan interface runs eagerly
-    is_async = hasattr(engine, "sample_awake")
     if fused and not (is_async or hasattr(engine, "debias_table")):
         fused = False
 
-    t_max = int(max(schedule.max(), t_c_qr)) if t_outer else 0
-    trace_err = q_true is not None
-
     if fused and is_async:
-        x_pad = pad_feature_slabs(data_blocks)
-        q0_pad = pad_feature_slabs(q_blocks)
-        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                     else jnp.zeros_like(q0_pad))
+        x_pad, q0_pad, qtrue_pad = prep["pads"]()
         q_pad, key_final, errs, sends, counts = _fused_async_fdot_run(
             x_pad, engine._w, engine._adj,
             jnp.asarray(engine.p_awake, jnp.float32), engine._key,
@@ -297,10 +362,7 @@ def fdot(
         error_trace = np.asarray(errs) if trace_err else None
     elif fused:
         table = engine.debias_table(t_max)
-        x_pad = pad_feature_slabs(data_blocks)
-        q0_pad = pad_feature_slabs(q_blocks)
-        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                     else jnp.zeros_like(q0_pad))
+        x_pad, q0_pad, qtrue_pad = prep["pads"]()
         q_pad, errs = _fused_fdot_run(
             x_pad, engine._w, table, jnp.asarray(schedule, jnp.int32),
             q0_pad, qtrue_pad, t_max=t_max, t_c_qr=int(t_c_qr),

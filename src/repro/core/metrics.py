@@ -140,3 +140,24 @@ class CommLedger:
             self.scalars + other.scalars,
             self.awake_counts + other.awake_counts,
         )
+
+
+def _ledger_flatten(ledger: CommLedger):
+    # awake_counts travels as one float64 leaf so the whole ledger round-trips
+    # through array-only channels (checkpoint shards, worker result files)
+    return ((ledger.p2p, ledger.matrices, ledger.scalars,
+             np.asarray(ledger.awake_counts, np.float64)), None)
+
+
+def _ledger_unflatten(_aux, children):
+    p2p, matrices, scalars, awake = children
+    return CommLedger(float(p2p), float(matrices), float(scalars),
+                      [int(c) for c in np.asarray(awake).ravel()])
+
+
+# Registered pytree: a CommLedger checkpoints through checkpoint/manager.py
+# (and ships across the multi-host launcher boundary) without ad-hoc field
+# plucking — restore rebuilds the list-valued awake_counts, so
+# ``log_awake_rounds`` keeps extending it exactly as before.
+jax.tree_util.register_pytree_node(CommLedger, _ledger_flatten,
+                                   _ledger_unflatten)

@@ -102,6 +102,52 @@ def _apply_operand(operand, mode: str, q_nodes):
     return kops.batched_gram_apply(x_stack, q_nodes, n_true)
 
 
+def _sync_outer_body(operand, w, table, q_true, node_mask, *, mode: str,
+                     t_max: int, trace_err: bool):
+    """Build the per-outer-iteration body ``(q_nodes, t_c) -> (q_new, err)``.
+
+    ONE definition feeds both the whole-run scan (``_fused_run``) and the
+    chunked streaming executor (``streaming/resume.py``), so a run split at
+    arbitrary chunk boundaries replays the monolithic scan bit for bit —
+    the math cannot drift between the two callers.
+    """
+
+    def outer(q_nodes, t_c):
+        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
+        v = debiased_gossip(w, table, z0, t_c, t_max)
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)      # per-node QR
+        err = (mean_subspace_error(q_true, q_new, node_mask) if trace_err
+               else jnp.float32(0.0))
+        return q_new, err
+
+    return outer
+
+
+def _async_outer_body(operand, w, adj, p_awake, q_true, *, mode: str,
+                      t_max: int, trace_err: bool):
+    """Async twin of ``_sync_outer_body``: carry is ``(q_nodes, rng key)``.
+
+    Each call splits the key, draws the iteration's (t_max, N) awake-mask
+    block, and runs realized-matrix gossip — the key ride in the carry is
+    exactly what makes chunked resume exact for straggler runs: checkpointing
+    the carried key restores the stream mid-run with no replay.
+    """
+    n = w.shape[0]
+
+    def outer(carry, t_c):
+        q_nodes, key = carry
+        key, sub = jax.random.split(key)
+        awake = jax.random.bernoulli(sub, p_awake, (t_max, n))
+        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
+        v, sends, counts = masked_async_rounds(w, adj, awake, t_c, z0)
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+        err = (mean_subspace_error(q_true, q_new) if trace_err
+               else jnp.float32(0.0))
+        return (q_new, key), (err, sends, counts)
+
+    return outer
+
+
 @functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
 def _fused_run(operand, w, table, sched, q0_nodes, q_true, node_mask, *,
                mode: str, t_max: int, trace_err: bool):
@@ -115,15 +161,8 @@ def _fused_run(operand, w, table, sched, q0_nodes, q_true, node_mask, *,
     and masks them out of the error trace; plain runs pass all ones.
     Returns (q_nodes, (T_o,) error trace — zeros when trace_err is False).
     """
-
-    def outer(q_nodes, t_c):
-        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
-        v = debiased_gossip(w, table, z0, t_c, t_max)
-        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)      # per-node QR
-        err = (mean_subspace_error(q_true, q_new, node_mask) if trace_err
-               else jnp.float32(0.0))
-        return q_new, err
-
+    outer = _sync_outer_body(operand, w, table, q_true, node_mask,
+                             mode=mode, t_max=t_max, trace_err=trace_err)
     return jax.lax.scan(outer, q0_nodes, sched)
 
 
@@ -140,44 +179,22 @@ def _fused_async_sdot(operand, w, adj, p_awake, key0, sched, q0_nodes,
     awake counts) — masked rounds contribute zero sends/counts, so the
     ledger is recovered exactly from the stacked outputs.
     """
-    n = w.shape[0]
-
-    def outer(carry, t_c):
-        q_nodes, key = carry
-        key, sub = jax.random.split(key)
-        awake = jax.random.bernoulli(sub, p_awake, (t_max, n))
-        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
-        v, sends, counts = masked_async_rounds(w, adj, awake, t_c, z0)
-        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
-        err = (mean_subspace_error(q_true, q_new) if trace_err
-               else jnp.float32(0.0))
-        return (q_new, key), (err, sends, counts)
-
+    outer = _async_outer_body(operand, w, adj, p_awake, q_true,
+                              mode=mode, t_max=t_max, trace_err=trace_err)
     (q_nodes, key), (errs, sends, counts) = jax.lax.scan(
         outer, (q0_nodes, key0), sched)
     return q_nodes, key, errs, sends, counts
 
 
-def sdot(
-    *,
-    covs: Optional[jnp.ndarray] = None,
-    data: Optional[Sequence[jnp.ndarray]] = None,
-    engine: DenseConsensus,
-    r: int,
-    t_outer: int,
-    schedule: Optional[np.ndarray] = None,
-    t_c: int = 50,
-    q_init: Optional[jnp.ndarray] = None,
-    q_true: Optional[jnp.ndarray] = None,
-    seed: int = 0,
-    fused: bool = True,
-) -> SDOTResult:
-    """Run S-DOT / SA-DOT over a simulated network.
+def _prepare_sdot(*, covs, data, engine, r, t_outer, schedule, t_c, q_init,
+                  q_true, seed):
+    """Validate + normalize a run's inputs into device-ready pieces.
 
-    Exactly one of ``covs`` (N, d, d) or ``data`` (list of (d, n_i)) must be
-    given. ``schedule`` overrides ``t_c`` (constant) and makes this SA-DOT.
-    ``fused=True`` (default) executes the whole run as a single compiled
-    scan; ``fused=False`` is the eager per-iteration oracle.
+    Shared by ``sdot`` and the chunked streaming executor
+    (``streaming/resume.py``): both construct the operand stack, schedule
+    array, debias-table bounds, and initial iterate through this one helper,
+    so a chunked run starts from literally the same device values as the
+    monolithic one. Returns a dict of run pieces.
     """
     if (covs is None) == (data is None):
         raise ValueError("provide exactly one of covs / data")
@@ -203,15 +220,7 @@ def sdot(
     # all nodes start from the same Q_init (Theorem 1 requires it)
     q_nodes = jnp.broadcast_to(q_init[None], (n, d, r))
 
-    ledger = CommLedger()
-    payload = d * r
-
-    # async engines get their own whole-run scan (the RNG key rides in the
-    # carry); any other engine without the scan interface runs eagerly
     is_async = hasattr(engine, "sample_awake")
-    if fused and not (is_async or hasattr(engine, "debias_table")):
-        fused = False
-
     sched_np = np.asarray(schedule[:t_outer])
     t_max = int(sched_np.max()) if t_outer else 0
     trace_err = q_true is not None
@@ -220,7 +229,52 @@ def sdot(
         operand, mode = covs, "cov"
     else:
         operand, mode = _stack_data(data), "data"
-    sched_dev = jnp.asarray(sched_np, jnp.int32)
+    return dict(
+        n=n, d=d, operand=operand, mode=mode, q_nodes=q_nodes,
+        schedule=schedule, sched_np=sched_np,
+        sched_dev=jnp.asarray(sched_np, jnp.int32), t_max=t_max,
+        trace_err=trace_err, q_arg=q_arg, is_async=is_async,
+    )
+
+
+def sdot(
+    *,
+    covs: Optional[jnp.ndarray] = None,
+    data: Optional[Sequence[jnp.ndarray]] = None,
+    engine: DenseConsensus,
+    r: int,
+    t_outer: int,
+    schedule: Optional[np.ndarray] = None,
+    t_c: int = 50,
+    q_init: Optional[jnp.ndarray] = None,
+    q_true: Optional[jnp.ndarray] = None,
+    seed: int = 0,
+    fused: bool = True,
+) -> SDOTResult:
+    """Run S-DOT / SA-DOT over a simulated network.
+
+    Exactly one of ``covs`` (N, d, d) or ``data`` (list of (d, n_i)) must be
+    given. ``schedule`` overrides ``t_c`` (constant) and makes this SA-DOT.
+    ``fused=True`` (default) executes the whole run as a single compiled
+    scan; ``fused=False`` is the eager per-iteration oracle.
+    """
+    prep = _prepare_sdot(covs=covs, data=data, engine=engine, r=r,
+                         t_outer=t_outer, schedule=schedule, t_c=t_c,
+                         q_init=q_init, q_true=q_true, seed=seed)
+    n, d = prep["n"], prep["d"]
+    operand, mode = prep["operand"], prep["mode"]
+    q_nodes, schedule = prep["q_nodes"], prep["schedule"]
+    sched_np, sched_dev = prep["sched_np"], prep["sched_dev"]
+    t_max, trace_err, q_arg = prep["t_max"], prep["trace_err"], prep["q_arg"]
+    is_async = prep["is_async"]
+
+    ledger = CommLedger()
+    payload = d * r
+
+    # async engines get their own whole-run scan (the RNG key rides in the
+    # carry); any other engine without the scan interface runs eagerly
+    if fused and not (is_async or hasattr(engine, "debias_table")):
+        fused = False
 
     if fused and is_async:
         q_nodes, key_final, errs, sends, counts = _fused_async_sdot(

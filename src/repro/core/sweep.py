@@ -11,14 +11,21 @@ into a single compiled program and ONE device call:
   (N, N) / (t_max+1, N) / (T_o,) arrays, so heterogeneous graphs stack as
   long as they share the node count;
 * **ragged node counts** (the Table-II connectivity axis: ER N=10 next to
-  ring N=20) stack too, in ``sdot_sweep``'s covs mode: pass one cov stack
-  per case and every case is padded to N_max with *isolated identity
-  nodes* — W becomes block-diag(W, I) (the padding rows are identity, so
-  padded nodes never mix with real ones), the padded covs are identity
-  (keeping the padded iterates finite), the debias table is built from the
-  padded W, and a node mask keeps the padded estimates out of the error
-  trace. Padded-vs-unpadded traces are bit-comparable because a real
-  node's gossip row has exact zeros against every padded node.
+  ring N=20) stack too (shared helpers: ``sweep_utils``):
+  - ``sdot_sweep`` / ``baseline_sweep`` (dsa / dpgd / deepca), covs mode:
+    pass one cov stack per case and every case is padded to N_max with
+    *isolated identity nodes* — W becomes block-diag(W, I) (the padding
+    rows are identity, so padded nodes never mix with real ones), the
+    padded covs are identity (keeping the padded iterates finite), the
+    debias table is built from the padded W, and a node mask keeps the
+    padded estimates out of the error trace. Padded-vs-unpadded traces are
+    bit-comparable because a real node's gossip row has exact zeros
+    against every padded node.
+  - ``fdot_sweep``: pass one slab *list* per case and every case is padded
+    to N_max with *all-zero slabs* (plus zero rows up to the sweep-wide
+    d_max).  Zero slabs are self-masking — they contribute exactly nothing
+    to any product in Alg. 2, including the error cross term — so the
+    feature-partitioned path needs no node mask at all.
 
 Compare: the eager zoo runs seeds x cases x t_outer Python iterations with a
 host sync each — the sweep engine runs one dispatch total, and the whole
@@ -42,6 +49,9 @@ from .fdot import pad_feature_slabs, split_pad_rows
 from .linalg import orthonormal_init
 from .metrics import CommLedger
 from .sdot import _fused_run, _stack_data, local_cov_apply
+from .sweep_utils import (broadcast_per_case, case_node_masks,
+                          pad_covs_identity, pad_weights_identity,
+                          pad_zero_nodes)
 
 __all__ = ["SweepResult", "sdot_sweep", "fdot_sweep", "baseline_sweep"]
 
@@ -114,25 +124,9 @@ def _broadcast_cases(engines, schedules, t_outer, t_c, allow_ragged=False):
     return engines, [s[:t_outer] for s in schedules]
 
 
-def _pad_weights_identity(w: np.ndarray, n_max: int) -> np.ndarray:
-    """block-diag(W, I): identity-padding rows keep padded nodes isolated
-    (a real node's row has exact zeros against every padded column, so the
-    padded subgraph never perturbs the real gossip)."""
-    out = np.eye(n_max)
-    out[:w.shape[0], :w.shape[0]] = w
-    return out
-
-
-def _pad_covs_identity(covs: jnp.ndarray, n_max: int) -> jnp.ndarray:
-    """Pad a (N, d, d) cov stack to (N_max, d, d) with identity covariances
-    (NOT zeros: a zero cov would drive the padded iterate to the Cholesky of
-    a singular Gram and the resulting NaNs would poison the padded lanes)."""
-    pad = n_max - covs.shape[0]
-    if pad == 0:
-        return covs
-    d = covs.shape[1]
-    eye = jnp.broadcast_to(jnp.eye(d, dtype=covs.dtype), (pad, d, d))
-    return jnp.concatenate([covs, eye], axis=0)
+# retained names for callers that grew up with the in-module helpers
+_pad_weights_identity = pad_weights_identity
+_pad_covs_identity = pad_covs_identity
 
 
 def _case_stacks(engines, schedules, t_max):
@@ -184,13 +178,8 @@ def sdot_sweep(
     trace_err = q_true is not None
 
     if per_case_covs:
-        case_covs = [jnp.asarray(c) for c in covs]
-        if len(case_covs) == 1:
-            case_covs = case_covs * len(engines)
-        if len(case_covs) != len(engines):
-            raise ValueError("per-case covs must zip-broadcast with the "
-                             f"cases: got {len(case_covs)} cov stacks for "
-                             f"{len(engines)} cases")
+        case_covs = broadcast_per_case([jnp.asarray(c) for c in covs],
+                                       len(engines), "covs")
         for c, e in zip(case_covs, engines):
             if c.shape[0] != e.graph.n_nodes:
                 raise ValueError("per-case covs must match each engine's "
@@ -198,14 +187,12 @@ def sdot_sweep(
                                  f"{e.graph.n_nodes}-node graph")
         d = int(case_covs[0].shape[1])
         n_max = max(n_list)
-        ws = jnp.stack([jnp.asarray(_pad_weights_identity(e.weights, n_max))
+        ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
                         for e in engines])
         tables = jnp.stack([debias_table(w, t_max) for w in ws])
-        covs_pad = jnp.stack([_pad_covs_identity(c, n_max)
+        covs_pad = jnp.stack([pad_covs_identity(c, n_max)
                               for c in case_covs])              # (C,N_max,d,d)
-        masks = jnp.asarray(
-            np.arange(n_max)[None, :] < np.asarray(n_list)[:, None],
-            jnp.float32)                                        # (C, N_max)
+        masks = case_node_masks(n_list, n_max)                  # (C, N_max)
         scheds = jnp.asarray(np.stack(schedules), jnp.int32)
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
         q0 = _seed_inits(seeds, d, r)                           # (S, d, r)
@@ -259,7 +246,7 @@ def sdot_sweep(
 
 def fdot_sweep(
     *,
-    data_blocks: Sequence[jnp.ndarray],
+    data_blocks: Sequence,
     engines: Union[DenseConsensus, Sequence[DenseConsensus]],
     r: int,
     t_outer: int,
@@ -269,35 +256,94 @@ def fdot_sweep(
     seeds: Sequence[int] = (0,),
     q_true: Optional[jnp.ndarray] = None,
 ) -> SweepResult:
-    """Monte-Carlo F-DOT sweep over padded feature slabs (Fig. 6 axis)."""
+    """Monte-Carlo F-DOT sweep over padded feature slabs (Fig. 6 axis).
+
+    ``data_blocks`` is either one slab list shared by every case, or a
+    list/tuple of slab *lists* with one per case — the per-case form may mix
+    node counts (different partitionings of the same d features): every case
+    is padded to N_max with all-zero slabs, which are exact no-ops in every
+    product of Alg. 2 (see the module docstring), so the traces match the
+    unpadded per-case runs and no node mask is needed. The result carries
+    ``node_counts`` so callers can slice the padding off ``q``.
+    """
     from .fdot import _fused_fdot_run
 
-    engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c)
+    per_case = (len(data_blocks) > 0
+                and isinstance(data_blocks[0], (list, tuple)))
+    engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c,
+                                          allow_ragged=per_case)
     single_case = len(engines) == 1
-    n_nodes = engines[0].graph.n_nodes
-    if len(data_blocks) != n_nodes:
-        raise ValueError("need one feature slab per node")
-    dims = [int(x.shape[0]) for x in data_blocks]
-    d = sum(dims)
-    n_samples = int(data_blocks[0].shape[1])
     t_c_qr = int(t_c if t_c_qr is None else t_c_qr)
     passes = 2
     t_max = int(max(max(int(s.max()) for s in schedules), t_c_qr))
-    ws, tables, scheds = _case_stacks(engines, schedules, t_max)
-
-    x_pad = pad_feature_slabs(data_blocks)
-    q0_pad = jnp.stack([split_pad_rows(q, dims)
-                        for q in _seed_inits(seeds, d, r)])
     trace_err = q_true is not None
-    qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                 else jnp.zeros_like(q0_pad[0]))
 
-    run = lambda w, table, sched, q0p: _fused_fdot_run(
-        x_pad, w, table, sched, q0p, qtrue_pad,
-        t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
-    over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
-    over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
-    q_pad, errs = over_cases(ws, tables, scheds, q0_pad)
+    if per_case:
+        case_blocks = broadcast_per_case(data_blocks, len(engines),
+                                         "data_blocks")
+        n_list = []
+        for blocks, e in zip(case_blocks, engines):
+            if len(blocks) != e.graph.n_nodes:
+                raise ValueError("per-case data_blocks must match each "
+                                 f"engine's node count: got {len(blocks)} "
+                                 f"slabs for an {e.graph.n_nodes}-node graph")
+            n_list.append(e.graph.n_nodes)
+        case_dims = [[int(x.shape[0]) for x in blocks]
+                     for blocks in case_blocks]
+        d = sum(case_dims[0])
+        if any(sum(dims) != d for dims in case_dims):
+            raise ValueError("every case must partition the same d features")
+        n_samples = int(case_blocks[0][0].shape[1])
+        n_max = max(n_list)
+        d_slab = max(max(dims) for dims in case_dims)
+        pad_case = lambda stack: pad_zero_nodes(
+            jnp.pad(stack, ((0, 0), (0, d_slab - stack.shape[1]), (0, 0))),
+            n_max)
+        x_pads = jnp.stack([pad_case(pad_feature_slabs(blocks))
+                            for blocks in case_blocks])  # (C,N_max,d_slab,n)
+        ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
+                        for e in engines])
+        tables = jnp.stack([debias_table(w, t_max) for w in ws])
+        scheds = jnp.asarray(np.stack(schedules), jnp.int32)
+        q_seeds = _seed_inits(seeds, d, r)
+        q0_pads = jnp.stack([
+            jnp.stack([pad_case(split_pad_rows(q, dims)) for q in q_seeds])
+            for dims in case_dims])                      # (C,S,N_max,d_slab,r)
+        qtrue_pads = jnp.stack([
+            (pad_case(split_pad_rows(q_true, dims)) if trace_err
+             else jnp.zeros((n_max, d_slab, r), jnp.float32))
+            for dims in case_dims])                      # (C,N_max,d_slab,r)
+
+        run = lambda w, table, sched, xp, qt, q0p: _fused_fdot_run(
+            xp, w, table, sched, q0p, qt,
+            t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
+        over_seeds = jax.vmap(run, in_axes=(None, None, None, None, None, 0))
+        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, 0))
+        q_pad, errs = over_cases(ws, tables, scheds, x_pads, qtrue_pads,
+                                 q0_pads)
+        node_counts = np.asarray(n_list)
+    else:
+        n_nodes = engines[0].graph.n_nodes
+        if len(data_blocks) != n_nodes:
+            raise ValueError("need one feature slab per node")
+        dims = [int(x.shape[0]) for x in data_blocks]
+        d = sum(dims)
+        n_samples = int(data_blocks[0].shape[1])
+        ws, tables, scheds = _case_stacks(engines, schedules, t_max)
+
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = jnp.stack([split_pad_rows(q, dims)
+                            for q in _seed_inits(seeds, d, r)])
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad[0]))
+
+        run = lambda w, table, sched, q0p: _fused_fdot_run(
+            x_pad, w, table, sched, q0p, qtrue_pad,
+            t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
+        over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
+        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
+        q_pad, errs = over_cases(ws, tables, scheds, q0_pad)
+        node_counts = None
 
     ledger = CommLedger()
     for eng, sched in zip(engines, schedules):
@@ -312,15 +358,60 @@ def fdot_sweep(
                       if trace_err else None),
         ledger=ledger,
         seeds=np.asarray(list(seeds)),
+        node_counts=node_counts,
     )
+
+
+def _baseline_case_sweep(name, case_covs, engines, r, seeds, q_true, t_outer,
+                         lr, t_mix, ledger):
+    """Case x seed grid for the cov-based baselines (dsa / dpgd / deepca)
+    with ragged node counts: identity-padded covs + block-diag(W, I) weights
+    (sweep_utils), and the node mask keeps the isolated padding nodes out of
+    the consensus-mean estimate the error trace scores."""
+    trace_err = q_true is not None
+    s_count = len(list(seeds))
+    n_list = [e.graph.n_nodes for e in engines]
+    n_max = max(n_list)
+    d = int(case_covs[0].shape[1])
+    ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
+                    for e in engines])
+    covs_pad = jnp.stack([pad_covs_identity(c, n_max) for c in case_covs])
+    masks = case_node_masks(n_list, n_max)                   # (C, N_max)
+    q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+    q0 = _seed_inits(seeds, d, r)
+    q0_nodes = jnp.broadcast_to(q0[:, None], (s_count, n_max, d, r))
+
+    if name == "dsa":
+        run = lambda w, covp, mask, q0n: _fused_dsa(
+            covp, w, q0n, jnp.float32(lr), q_arg, mask,
+            t_outer=t_outer, trace_err=trace_err)
+        rounds = np.ones(t_outer)
+    elif name == "dpgd":
+        run = lambda w, covp, mask, q0n: _fused_dpgd(
+            covp, w, q0n, jnp.float32(lr), q_arg, mask,
+            t_outer=t_outer, trace_err=trace_err)
+        rounds = np.ones(t_outer)
+    else:
+        run = lambda w, covp, mask, q0n: _fused_deepca(
+            covp, w, q0n, local_cov_apply(covp, q0n), q_arg, mask,
+            t_outer=t_outer, t_mix=t_mix, trace_err=trace_err)
+        rounds = np.full(t_outer, t_mix)
+    over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
+    over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
+    q, errs = over_cases(ws, covs_pad, masks, q0_nodes)
+    for eng in engines:
+        for _ in range(s_count):
+            ledger.log_gossip_rounds(rounds, eng.graph.adjacency, d * r)
+    return q, errs, np.asarray(n_list)
 
 
 def baseline_sweep(
     name: str,
     *,
-    covs: Optional[jnp.ndarray] = None,
+    covs=None,
     data_blocks: Optional[Sequence[jnp.ndarray]] = None,
-    engine: DenseConsensus,
+    engine: Optional[DenseConsensus] = None,
+    engines=None,
     r: int,
     seeds: Sequence[int] = (0,),
     q_true: Optional[jnp.ndarray] = None,
@@ -335,33 +426,82 @@ def baseline_sweep(
     ``name``: dsa | dpgd | deepca (sample-partitioned, need ``covs`` +
     ``t_outer``), seq_dist_pm (``covs`` + ``iters_per_vec``), or d_pm
     (feature-partitioned, ``data_blocks`` + ``iters_per_vec``).
+
+    The cov-based trio also accepts ``engines`` (a list) plus per-case
+    ``covs`` (a list of (N_c, d, d) stacks) with mixed node counts — the
+    same ragged-N identity-padding contract as ``sdot_sweep``; the result
+    then carries a case axis and ``node_counts``. The sequential-deflation
+    baselines (seq_dist_pm, d_pm) are single-case only.
     """
+    if engines is not None and engine is not None:
+        raise ValueError("pass engine or engines, not both")
+    engine_list = None
+    if engines is not None:
+        if isinstance(engines, DenseConsensus):
+            engine = engines
+        else:
+            engine_list = list(engines)
+    if engine is None and engine_list is None:
+        raise ValueError("baseline_sweep needs an engine")
+
     trace_err = q_true is not None
     ledger = CommLedger()
-    adj = engine.graph.adjacency
     s_count = len(list(seeds))
+    node_counts = None
+
+    if engine_list is not None:
+        if name not in ("dsa", "dpgd", "deepca"):
+            raise ValueError(f"{name} does not support a ragged-N case axis "
+                             "(sequential-deflation baselines are "
+                             "single-case only)")
+        if covs is None or t_outer is None:
+            raise ValueError(f"{name} sweep needs covs and t_outer")
+        if not isinstance(covs, (list, tuple)):
+            covs = [covs]
+        case_covs = broadcast_per_case([jnp.asarray(c) for c in covs],
+                                       len(engine_list), "covs")
+        for c, e in zip(case_covs, engine_list):
+            if c.shape[0] != e.graph.n_nodes:
+                raise ValueError("per-case covs must match each engine's "
+                                 f"node count: got {c.shape[0]} covs for an "
+                                 f"{e.graph.n_nodes}-node graph")
+        q, errs, node_counts = _baseline_case_sweep(
+            name, case_covs, engine_list, r, seeds, q_true, t_outer, lr,
+            t_mix, ledger)
+        if len(engine_list) == 1:
+            q, errs, node_counts = q[0], errs[0], None
+        return SweepResult(
+            q=q,
+            error_traces=np.asarray(errs) if trace_err else None,
+            ledger=ledger,
+            seeds=np.asarray(list(seeds)),
+            node_counts=node_counts,
+        )
+
+    adj = engine.graph.adjacency
 
     if name in ("dsa", "dpgd", "deepca"):
         if covs is None or t_outer is None:
             raise ValueError(f"{name} sweep needs covs and t_outer")
         n, d, _ = covs.shape
+        ones = jnp.ones((n,), jnp.float32)
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
         q0 = _seed_inits(seeds, d, r)
         q0_nodes = jnp.broadcast_to(q0[:, None], (s_count, n, d, r))
         if name == "dsa":
             run = lambda q0n: _fused_dsa(covs, engine._w, q0n,
-                                         jnp.float32(lr), q_arg,
+                                         jnp.float32(lr), q_arg, ones,
                                          t_outer=t_outer, trace_err=trace_err)
             rounds = np.ones(t_outer)
         elif name == "dpgd":
             run = lambda q0n: _fused_dpgd(covs, engine._w, q0n,
-                                          jnp.float32(lr), q_arg,
+                                          jnp.float32(lr), q_arg, ones,
                                           t_outer=t_outer, trace_err=trace_err)
             rounds = np.ones(t_outer)
         else:
             run = lambda q0n: _fused_deepca(
                 covs, engine._w, q0n, local_cov_apply(covs, q0n), q_arg,
-                t_outer=t_outer, t_mix=t_mix, trace_err=trace_err)
+                ones, t_outer=t_outer, t_mix=t_mix, trace_err=trace_err)
             rounds = np.full(t_outer, t_mix)
         q, errs = jax.vmap(run)(q0_nodes)
         for _ in range(s_count):

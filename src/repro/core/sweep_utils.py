@@ -1,0 +1,89 @@
+"""Shared ragged-N utilities for the vmapped sweep engines.
+
+The Table-II connectivity axis mixes node counts (ER N=10 next to ring
+N=20).  To stack such cases into ONE vmapped program every case is padded to
+N_max with nodes that provably cannot perturb the real ones:
+
+* **weights** — W becomes block-diag(W, I).  A real node's gossip row has
+  exact zeros against every padded column, so padded nodes never mix with
+  real ones; the padded subgraph is a set of isolated self-loops.
+* **covariances** (sample-partitioned algorithms) — padded nodes get
+  *identity* covariances, NOT zeros: a zero cov would drive the padded
+  iterate into the Cholesky of a singular Gram and the resulting NaNs would
+  poison the padded lanes.  A node mask keeps the padded estimates out of
+  the error trace (``metrics.mean_subspace_error`` /
+  ``baselines``' masked node mean).
+* **feature slabs** (feature-partitioned algorithms) — padded nodes get
+  *all-zero* slabs.  Zero slabs are self-masking: they contribute exactly
+  nothing to the partial products, the consensus sums (their W rows are
+  identity), the Gram matrices (the 1e-10 jitter keeps the Cholesky
+  finite), and the error cross term — so no node mask is needed and the
+  padded trace is bit-comparable to the unpadded per-case run.
+
+These helpers were grown inside ``sdot_sweep`` first (PR 3) and are now the
+shared substrate of ``sdot_sweep``, ``fdot_sweep``, and ``baseline_sweep``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pad_weights_identity",
+    "pad_covs_identity",
+    "pad_zero_nodes",
+    "case_node_masks",
+    "broadcast_per_case",
+]
+
+
+def pad_weights_identity(w: np.ndarray, n_max: int) -> np.ndarray:
+    """block-diag(W, I): identity-padding rows keep padded nodes isolated
+    (a real node's row has exact zeros against every padded column, so the
+    padded subgraph never perturbs the real gossip)."""
+    out = np.eye(n_max)
+    out[:w.shape[0], :w.shape[0]] = w
+    return out
+
+
+def pad_covs_identity(covs: jnp.ndarray, n_max: int) -> jnp.ndarray:
+    """Pad a (N, d, d) cov stack to (N_max, d, d) with identity covariances
+    (NOT zeros: a zero cov would drive the padded iterate to the Cholesky of
+    a singular Gram and the resulting NaNs would poison the padded lanes)."""
+    pad = n_max - covs.shape[0]
+    if pad == 0:
+        return covs
+    d = covs.shape[1]
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=covs.dtype), (pad, d, d))
+    return jnp.concatenate([covs, eye], axis=0)
+
+
+def pad_zero_nodes(stack: jnp.ndarray, n_max: int) -> jnp.ndarray:
+    """Pad the leading node axis of a slab stack with all-zero entries.
+
+    Used by the ragged-N F-DOT sweep: a zero feature slab is exact padding
+    for every product in Alg. 2 (see the module docstring)."""
+    pad = n_max - stack.shape[0]
+    if pad == 0:
+        return stack
+    return jnp.pad(stack, ((0, pad),) + ((0, 0),) * (stack.ndim - 1))
+
+
+def case_node_masks(n_list: Sequence[int], n_max: int) -> jnp.ndarray:
+    """(C, N_max) float mask: 1.0 for real nodes, 0.0 for padded ones."""
+    return jnp.asarray(
+        np.arange(n_max)[None, :] < np.asarray(list(n_list))[:, None],
+        jnp.float32)
+
+
+def broadcast_per_case(items, n_cases: int, what: str) -> List:
+    """Zip-broadcast a per-case list against the case axis (1 -> n_cases)."""
+    items = list(items)
+    if len(items) == 1:
+        items = items * n_cases
+    if len(items) != n_cases:
+        raise ValueError(f"per-case {what} must zip-broadcast with the "
+                         f"cases: got {len(items)} for {n_cases} cases")
+    return items

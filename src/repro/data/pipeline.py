@@ -19,7 +19,35 @@ import numpy as np
 from ..configs.base import ModelConfig
 
 __all__ = ["gaussian_eigengap_data", "partition_samples", "partition_features",
-           "synthetic_lm_stream", "make_lm_batch", "spectrum_matched_data"]
+           "synthetic_lm_stream", "make_lm_batch", "spectrum_matched_data",
+           "spectrum_matched_stream", "eigengap_stream"]
+
+
+def _eigengap_cov(rng, d: int, r: int, gap: float, lead: float,
+                  repeated_top: bool):
+    """Controlled-gap population covariance C = U diag(evals) U^T.
+
+    The one construction behind both the one-shot generator
+    (``gaussian_eigengap_data``) and its stateless stream twin
+    (``eigengap_stream``) — consuming ``rng`` identically, so the two stay
+    seed-compatible by sharing code rather than by copy."""
+    if repeated_top:
+        top = np.full(r, lead)
+    else:
+        top = np.linspace(lead, lead * 0.6, r)
+    tail_lead = top[-1] * gap
+    tail = np.linspace(tail_lead, tail_lead * 0.1, d - r)
+    evals = np.concatenate([top, tail])
+    u = np.linalg.qr(rng.standard_normal((d, d)))[0]
+    return u @ np.diag(evals) @ u.T, u
+
+
+def _spectrum_factor(rng, d: int, alpha: float) -> np.ndarray:
+    """Power-law factor L with L L^T spectrum lambda_i ~ i^-alpha (shared by
+    ``spectrum_matched_data`` and ``spectrum_matched_stream``)."""
+    evals = np.arange(1, d + 1, dtype=np.float64) ** (-alpha)
+    u = np.linalg.qr(rng.standard_normal((d, d)))[0]
+    return u * np.sqrt(evals)
 
 
 def gaussian_eigengap_data(d: int, n: int, r: int, gap: float, seed: int = 0,
@@ -30,15 +58,7 @@ def gaussian_eigengap_data(d: int, n: int, r: int, gap: float, seed: int = 0,
     non-distinct case). Returns (X (d, n), C, Q_true (d, r)).
     """
     rng = np.random.default_rng(seed)
-    if repeated_top:
-        top = np.full(r, lead)
-    else:
-        top = np.linspace(lead, lead * 0.6, r)
-    tail_lead = top[-1] * gap
-    tail = np.linspace(tail_lead, tail_lead * 0.1, d - r)
-    evals = np.concatenate([top, tail])
-    u = np.linalg.qr(rng.standard_normal((d, d)))[0]
-    c = u @ np.diag(evals) @ u.T
+    c, u = _eigengap_cov(rng, d, r, gap, lead, repeated_top)
     x = np.linalg.cholesky(c + 1e-12 * np.eye(d)) @ rng.standard_normal((d, n))
     return jnp.asarray(x, jnp.float32), jnp.asarray(c, jnp.float32), \
         jnp.asarray(u[:, :r], jnp.float32)
@@ -48,9 +68,7 @@ def spectrum_matched_data(d: int, n: int, seed: int = 0, alpha: float = 1.2):
     """Synthetic stand-in for natural-image datasets: power-law spectrum
     lambda_i ~ i^-alpha (matches MNIST/CIFAR covariance decay shape)."""
     rng = np.random.default_rng(seed)
-    evals = np.arange(1, d + 1, dtype=np.float64) ** (-alpha)
-    u = np.linalg.qr(rng.standard_normal((d, d)))[0]
-    x = (u * np.sqrt(evals)) @ rng.standard_normal((d, n))
+    x = _spectrum_factor(rng, d, alpha) @ rng.standard_normal((d, n))
     return jnp.asarray(x, jnp.float32)
 
 
@@ -70,6 +88,58 @@ def partition_features(x: jnp.ndarray, n_nodes: int) -> List[jnp.ndarray]:
         hi = d if i == n_nodes - 1 else (i + 1) * per
         out.append(x[i * per:hi])
     return out
+
+
+# ---------------------------------------------------------------------------
+# stateless-seeded PSA sample streams (streaming covariance ingestion)
+# ---------------------------------------------------------------------------
+def _stream_batch_fn(chol_factor: jnp.ndarray, seed: int):
+    """Wrap a (d, d) covariance factor L into a pure micro-batch function.
+
+    ``batch(step, m) = L @ N(0, I)`` keyed by fold_in(seed, step) — the same
+    statelessness contract as the LM stream: step -> batch is a pure
+    function of (seed, step), so a restarted ingestor replays the identical
+    stream with no reader state beyond the next step index, and any
+    straggling host regenerates its shard locally.
+    """
+    base = jax.random.PRNGKey(seed)
+
+    def batch(step: int, m: int) -> jnp.ndarray:
+        key = jax.random.fold_in(base, step)
+        return chol_factor @ jax.random.normal(key, (chol_factor.shape[0], m),
+                                               jnp.float32)
+
+    return batch
+
+
+def spectrum_matched_stream(d: int, seed: int = 0, alpha: float = 1.2):
+    """Stateless micro-batch twin of ``spectrum_matched_data``.
+
+    Returns ``batch(step, m) -> (d, m)`` drawing from the same power-law
+    population covariance (``_spectrum_factor``, lambda_i ~ i^-alpha).  The
+    mixing basis depends only on ``seed``; the samples only on
+    ``(seed, step)`` — batches are iid draws from the population, so the
+    streamed second moment converges to the same covariance the one-shot
+    generator samples from.
+    """
+    rng = np.random.default_rng(seed)
+    factor = jnp.asarray(_spectrum_factor(rng, d, alpha), jnp.float32)
+    return _stream_batch_fn(factor, seed)
+
+
+def eigengap_stream(d: int, r: int, gap: float, seed: int = 0,
+                    lead: float = 3.0, repeated_top: bool = False):
+    """Stateless micro-batch twin of ``gaussian_eigengap_data``.
+
+    Returns ``(batch_fn, C, Q_true)``: the same controlled-eigengap
+    population covariance (``_eigengap_cov``), but samples arrive as pure
+    ``(seed, step)`` micro-batches instead of one (d, n) matrix.
+    """
+    rng = np.random.default_rng(seed)
+    c, u = _eigengap_cov(rng, d, r, gap, lead, repeated_top)
+    factor = np.linalg.cholesky(c + 1e-12 * np.eye(d))
+    return (_stream_batch_fn(jnp.asarray(factor, jnp.float32), seed),
+            jnp.asarray(c, jnp.float32), jnp.asarray(u[:, :r], jnp.float32))
 
 
 # ---------------------------------------------------------------------------

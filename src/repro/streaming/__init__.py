@@ -1,0 +1,5 @@
+# Streaming PSA subsystem: online covariance ingestion (ingest.py),
+# chunked-resumable fused runs (resume.py), and the multi-host sweep
+# launcher (launcher.py / worker.py). Nothing here may import at package
+# level that launch/dryrun.py cannot tolerate — keep this module empty of
+# jax imports so `python -m repro.streaming.worker` controls its own flags.

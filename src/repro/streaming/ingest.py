@@ -1,0 +1,220 @@
+"""Online covariance ingestion: per-node sketches fed by micro-batches.
+
+The paper (and its MPI implementation) materializes each node's covariance
+``M_i = X_i X_i^T / n_i`` up front.  At production scale the data is a
+stream: samples arrive in micro-batches, the run starts before the data
+ends, and no host ever holds its full sample block.  This module closes
+that gap with two per-node sketches, both maintained as ONE stacked pytree
+over all simulated nodes (a single device dispatch per micro-batch):
+
+* ``CovSketch`` — the exact running second moment ``sum_t X_t X_t^T`` plus a
+  sample count.  ``cov_stack()`` is the covariance stack the batch pipeline
+  would compute from the same samples — the same sum, accumulated per
+  micro-batch, so it matches to float32 summation-order ulps (pinned with
+  allclose in tests/test_streaming.py; ingest *resume*, by contrast, IS
+  bitwise because the restored partial sums are the saved ones) — and the
+  fused executors and sweep engines consume the evolving stack with zero
+  API change.
+* ``FrequentDirections`` — the deterministic Liberty sketch for d where the
+  (d, d) second moment won't fit: per node an (ell, d) row sketch B with
+  the guarantee ``||X X^T - B^T B||_2 <= shrink_loss`` (the accumulated
+  shrink mass, tracked per node), ell << d rows instead of d.
+
+``StreamingIngestor`` drives either sketch from a stateless-seeded stream
+(``data/pipeline.spectrum_matched_stream`` / ``eigengap_stream``): each
+micro-batch is split over nodes with the same ``partition_samples``
+column-sharding the batch pipeline uses, so node i's accumulated samples
+are exactly the concatenation of its per-batch shards.  The ingestor's
+whole state (sketch pytree + next stream step) checkpoints through
+``checkpoint/manager.py``; because the stream is stateless, a restarted
+ingestor resumes at the saved step and replays the identical remainder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import partition_samples
+
+__all__ = ["CovSketch", "FrequentDirections", "StreamingIngestor"]
+
+
+def _require_samples(counts) -> None:
+    """Fail at the call site instead of emitting a 0/0 all-NaN cov stack."""
+    if not float(jnp.min(counts)) > 0:
+        raise ValueError("cov_stack() before any batch was ingested — "
+                         "call ingest() first")
+
+
+@jax.jit
+def _cov_update(second_moment, counts, blocks):
+    """One micro-batch into the exact sketch: blocks (N, d, m)."""
+    sm = second_moment + jnp.einsum("ndm,nem->nde", blocks, blocks)
+    return sm, counts + jnp.float32(blocks.shape[2])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CovSketch:
+    """Exact stacked running second moment: (N, d, d) + per-node counts."""
+
+    second_moment: jnp.ndarray       # (N, d, d) running sum X X^T
+    counts: jnp.ndarray              # (N,) samples seen per node
+
+    @classmethod
+    def init(cls, n_nodes: int, d: int) -> "CovSketch":
+        return cls(jnp.zeros((n_nodes, d, d), jnp.float32),
+                   jnp.zeros((n_nodes,), jnp.float32))
+
+    def update(self, blocks: jnp.ndarray) -> "CovSketch":
+        sm, counts = _cov_update(self.second_moment, self.counts, blocks)
+        return CovSketch(sm, counts)
+
+    def cov_stack(self) -> jnp.ndarray:
+        """(N, d, d) per-node covariances M_i = sum X X^T / n_i — the exact
+        operand stack ``sdot`` / ``sdot_sweep`` expect."""
+        _require_samples(self.counts)
+        return self.second_moment / self.counts[:, None, None]
+
+    def tree_flatten(self):
+        return (self.second_moment, self.counts), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+
+def _fd_shrink_one(buf, ell: int):
+    """One Frequent-Directions shrink: (ell + m, d) rows -> (ell, d).
+
+    SVD, subtract the ell-th squared singular value from every direction
+    (zeroing at least one kept row), keep the top ell. Returns the new
+    sketch and the shrink mass delta (the step's addition to the spectral
+    error bound)."""
+    _, s, vt = jnp.linalg.svd(buf, full_matrices=False)
+    delta = s[ell - 1] ** 2
+    s_shrunk = jnp.sqrt(jnp.maximum(s ** 2 - delta, 0.0))
+    return (s_shrunk[:ell, None] * vt[:ell]), delta
+
+
+@functools.partial(jax.jit, static_argnames=("ell",))
+def _fd_update(sketch, counts, loss, blocks, *, ell: int):
+    """One micro-batch into the FD sketch: blocks (N, d, m)."""
+    buf = jnp.concatenate([sketch, jnp.swapaxes(blocks, 1, 2)], axis=1)
+    new, delta = jax.vmap(lambda b: _fd_shrink_one(b, ell))(buf)
+    return new, counts + jnp.float32(blocks.shape[2]), loss + delta
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FrequentDirections:
+    """Stacked per-node Frequent-Directions sketches: (N, ell, d).
+
+    Deterministic, mergeable, and ell << d memory: per node
+    ``||X X^T - B^T B||_2 <= shrink_loss`` (Liberty '13 / Ghashami et al.
+    '16 — the bound is the accumulated shrink mass, at most
+    ``||X||_F^2 / (ell - r)`` after the standard argument)."""
+
+    sketch: jnp.ndarray              # (N, ell, d)
+    counts: jnp.ndarray              # (N,)
+    shrink_loss: jnp.ndarray         # (N,) accumulated spectral-error bound
+
+    @classmethod
+    def init(cls, n_nodes: int, d: int, ell: int) -> "FrequentDirections":
+        if ell > d:
+            raise ValueError(f"sketch size ell={ell} exceeds d={d} — use the "
+                             "exact CovSketch instead")
+        return cls(jnp.zeros((n_nodes, ell, d), jnp.float32),
+                   jnp.zeros((n_nodes,), jnp.float32),
+                   jnp.zeros((n_nodes,), jnp.float32))
+
+    @property
+    def ell(self) -> int:
+        return self.sketch.shape[1]
+
+    def update(self, blocks: jnp.ndarray) -> "FrequentDirections":
+        sk, counts, loss = _fd_update(self.sketch, self.counts,
+                                      self.shrink_loss, blocks, ell=self.ell)
+        return FrequentDirections(sk, counts, loss)
+
+    def cov_stack(self) -> jnp.ndarray:
+        """(N, d, d) approximate covariances B^T B / n_i (for moderate d;
+        at the scales FD exists for, consume ``sketch`` directly)."""
+        _require_samples(self.counts)
+        return (jnp.einsum("nld,nle->nde", self.sketch, self.sketch)
+                / self.counts[:, None, None])
+
+    def tree_flatten(self):
+        return (self.sketch, self.counts, self.shrink_loss), None
+
+    @classmethod
+    def tree_unflatten(cls, _aux, children):
+        return cls(*children)
+
+
+class StreamingIngestor:
+    """Drive N per-node sketches from a stateless micro-batch stream.
+
+    ``batch_fn(step, m) -> (d, m)`` must be a pure function of (seed, step)
+    — the contract of ``data/pipeline``'s stream constructors.  Every
+    micro-batch is column-sharded over nodes with ``partition_samples``
+    (node i always takes the i-th shard), so the accumulated per-node
+    sample sets are deterministic and restart-invariant.
+
+    ``state()`` / ``restore()`` round-trip the full ingestion state (sketch
+    pytree + next step) through ``checkpoint/manager.py``.
+    """
+
+    def __init__(self, *, n_nodes: int, d: int,
+                 batch_fn: Callable[[int, int], jnp.ndarray],
+                 batch_size: int, sketch: str = "exact",
+                 ell: Optional[int] = None, start_step: int = 0):
+        if batch_size % n_nodes:
+            raise ValueError(f"batch_size={batch_size} must divide evenly "
+                             f"over {n_nodes} nodes (partition_samples "
+                             "drops remainder columns)")
+        self.n_nodes = n_nodes
+        self.d = d
+        self.batch_fn = batch_fn
+        self.batch_size = batch_size
+        self.step = start_step
+        if sketch == "exact":
+            self.sketch = CovSketch.init(n_nodes, d)
+        elif sketch == "fd":
+            if ell is None:
+                raise ValueError("sketch='fd' needs ell")
+            self.sketch = FrequentDirections.init(n_nodes, d, ell)
+        else:
+            raise ValueError(f"unknown sketch kind: {sketch}")
+
+    def ingest(self, n_batches: int = 1) -> "StreamingIngestor":
+        """Consume the next ``n_batches`` stream steps into the sketches."""
+        for _ in range(n_batches):
+            x = self.batch_fn(self.step, self.batch_size)
+            blocks = jnp.stack(partition_samples(x, self.n_nodes))
+            self.sketch = self.sketch.update(blocks)
+            self.step += 1
+        return self
+
+    def cov_stack(self) -> jnp.ndarray:
+        """The evolving (N, d, d) operand stack for the fused executors."""
+        return self.sketch.cov_stack()
+
+    @property
+    def samples_per_node(self) -> np.ndarray:
+        return np.asarray(self.sketch.counts)
+
+    # -- checkpointing ------------------------------------------------------
+    def state(self) -> dict:
+        """Pytree snapshot for CheckpointManager.save."""
+        return {"step": jnp.int32(self.step), "sketch": self.sketch}
+
+    def restore(self, tree: dict) -> "StreamingIngestor":
+        self.step = int(tree["step"])
+        self.sketch = tree["sketch"]
+        return self

@@ -1,0 +1,259 @@
+"""Multi-host Monte-Carlo sweep launcher.
+
+``core/sweep.py`` collapses a seeds x cases grid into one compiled program —
+for one process.  This module shards that grid over *hosts* (subprocess
+workers standing in for hosts in this container; the same spec/result
+protocol maps onto one job per machine on a real fleet):
+
+    launch_sweep(...)
+      -> writes <workdir>/spec.json (topologies, schedules, shard seed
+         lists — everything a worker needs to rebuild its slice) and
+         <workdir>/problem.npz (cov stacks, optional ground truth)
+      -> spawns one `python -m repro.streaming.worker <spec> <shard>` per
+         shard; each worker runs its vmap lane-slice of the sweep and
+         publishes its result atomically (checkpoint/manager.save_tree,
+         CommLedger riding along as a registered pytree) into its own
+         checkpoint dir <workdir>/worker_<i>/
+      -> gathers the shard results and merges them along the seed axis
+         into ONE SweepResult, equal to the single-process ``sdot_sweep``
+         over the full seed list (lane-slices are arithmetically
+         identical; XLA may schedule a width-1 vmap differently, so
+         equality is pinned at float32 epsilon in tests/test_streaming.py
+         and bit-for-bit when shard widths match the full sweep's).
+
+Shard-granular fault tolerance: a worker that already published a valid
+result is never relaunched (so a killed launcher resumes where it left
+off), a crashed worker is retried, and only then does the launch fail.
+
+Topologies/schedules travel as small JSON specs (``build_engine`` /
+``build_schedule``) because graph constructions are seed-deterministic —
+the paper's experiment grid is fully reproducible from the spec file.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import subprocess
+import sys
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import restore_tree
+from ..core.consensus import DenseConsensus, consensus_schedule
+from ..core.metrics import CommLedger
+from ..core.sweep import SweepResult
+from ..core.topology import complete, erdos_renyi, ring, star, torus2d
+
+__all__ = ["build_engine", "build_schedule", "launch_sweep"]
+
+_SPEC = "spec.json"
+_PROBLEM = "problem.npz"
+
+
+def build_engine(topo: dict) -> DenseConsensus:
+    """Topology spec -> consensus engine (seed-deterministic across hosts)."""
+    kind = topo["kind"]
+    if kind == "ring":
+        g = ring(topo["n"])
+    elif kind == "star":
+        g = star(topo["n"])
+    elif kind == "complete":
+        g = complete(topo["n"])
+    elif kind == "torus2d":
+        g = torus2d(topo["rows"], topo["cols"])
+    elif kind == "er":
+        g = erdos_renyi(topo["n"], topo["p"], seed=topo.get("seed", 0))
+    else:
+        raise ValueError(f"unknown topology kind: {kind}")
+    return DenseConsensus(g)
+
+
+def build_schedule(sched: Optional[dict], t_outer: int,
+                   t_c: int) -> np.ndarray:
+    """Schedule spec -> (t_outer,) consensus budgets."""
+    if sched is None:
+        return consensus_schedule("const", t_outer, t_max=t_c)
+    if "values" in sched:
+        return np.asarray(sched["values"])[:t_outer]
+    return consensus_schedule(sched["kind"], t_outer,
+                              t_max=sched.get("t_max", t_c),
+                              cap=sched.get("cap"))
+
+
+def _worker_dir(workdir: str, shard: int) -> str:
+    return os.path.join(workdir, f"worker_{shard}")
+
+
+def _result_dir(workdir: str, shard: int) -> str:
+    return os.path.join(_worker_dir(workdir, shard), "result")
+
+
+def spec_fingerprint(spec: dict) -> int:
+    """Stable 31-bit digest of the sweep spec (int32-safe: jax x64 is off).
+
+    Stamped into every worker's published result and checked before a
+    shard is reused, so rerunning a workdir with a *changed* spec (more
+    seeds, different cases/t_outer) relaunches instead of silently merging
+    stale shards."""
+    blob = json.dumps(spec, sort_keys=True).encode()
+    return int.from_bytes(hashlib.sha256(blob).digest()[:4], "big") >> 1
+
+
+def _result_like(spec: dict):
+    """Structure template for restore_tree (values are ignored)."""
+    like = {"q": jnp.zeros(()), "seeds": jnp.zeros(()),
+            "ledger": CommLedger(), "spec_fp": jnp.zeros((), jnp.int32)}
+    if spec["has_q_true"]:
+        like["error_traces"] = jnp.zeros(())
+    if spec["ragged"]:
+        like["node_counts"] = jnp.zeros(())
+    return like
+
+
+def _load_result(workdir: str, spec: dict, shard: int):
+    """The shard's published result, or None if absent/stale/corrupt.
+
+    A result published under a different spec (stale workdir reuse) fails
+    either the tree-structure check or the fingerprint comparison and is
+    discarded so the launcher recomputes it."""
+    path = _result_dir(workdir, shard)
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        return None
+    try:
+        tree = restore_tree(path, _result_like(spec))
+    except Exception:
+        return None
+    if int(tree["spec_fp"]) != spec_fingerprint(spec):
+        return None
+    return tree
+
+
+def _spawn(spec_path: str, shard: int, env) -> subprocess.Popen:
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.streaming.worker", spec_path,
+         str(shard)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+
+
+def launch_sweep(
+    *,
+    covs,
+    cases: Sequence[dict],
+    r: int,
+    t_outer: int,
+    t_c: int = 50,
+    seeds: Sequence[int],
+    q_true=None,
+    workdir: str,
+    n_workers: int = 2,
+    retries: int = 1,
+    timeout: float = 900.0,
+) -> SweepResult:
+    """Shard a ``sdot_sweep`` case x seed grid over subprocess workers.
+
+    ``covs``: one (N, d, d) stack shared by every case, or a list with one
+    stack per case (ragged node counts allowed — the workers run the same
+    identity-padding path as single-process ``sdot_sweep``).  ``cases``:
+    list of ``{"topology": {...}, "schedule": {...}}`` specs (see
+    ``build_engine`` / ``build_schedule``).  The seed axis is split
+    contiguously into ``n_workers`` shards (one vmap lane-slice each), so
+    the merged result preserves seed order and equals the single-process
+    sweep exactly.
+    """
+    os.makedirs(workdir, exist_ok=True)
+    seeds = [int(s) for s in seeds]
+    n_workers = max(1, min(int(n_workers), len(seeds)))
+    shards = [list(map(int, s))
+              for s in np.array_split(np.asarray(seeds), n_workers)]
+
+    ragged = isinstance(covs, (list, tuple))
+    if ragged and len(covs) not in (1, len(cases)):
+        # enforce sdot_sweep's zip-broadcast contract before anything is
+        # written, rather than as a KeyError inside every worker; a
+        # 1-element list is written ONCE (not duplicated per case) and
+        # broadcast worker-side by sdot_sweep itself
+        raise ValueError(f"per-case covs must zip-broadcast with the "
+                         f"cases: got {len(covs)} cov stacks for "
+                         f"{len(cases)} cases")
+    spec = {
+        "algo": "sdot",
+        "r": int(r),
+        "t_outer": int(t_outer),
+        "t_c": int(t_c),
+        "cases": list(cases),
+        "shards": shards,
+        "ragged": ragged,
+        "n_cov_stacks": len(covs) if ragged else 1,
+        "has_q_true": q_true is not None,
+    }
+    spec_path = os.path.join(workdir, _SPEC)
+    with open(spec_path, "w") as f:
+        json.dump(spec, f, indent=2)
+
+    arrays = {}
+    if ragged:
+        for ci, c in enumerate(covs):
+            arrays[f"covs_{ci}"] = np.asarray(c)
+    else:
+        arrays["covs"] = np.asarray(covs)
+    if q_true is not None:
+        arrays["q_true"] = np.asarray(q_true)
+    np.savez(os.path.join(workdir, _PROBLEM), **arrays)
+
+    env = dict(os.environ)
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    # published shards are reused only if their stamped spec fingerprint
+    # matches; stale/corrupt ones are cleared and recomputed
+    results = {i: _load_result(workdir, spec, i) for i in range(n_workers)}
+    pending = [i for i, t in results.items() if t is None]
+    for i in pending:
+        shutil.rmtree(_result_dir(workdir, i), ignore_errors=True)
+    for attempt in range(retries + 1):
+        if not pending:
+            break
+        procs = {i: _spawn(spec_path, i, env) for i in pending}
+        failed = []
+        for i, p in procs.items():
+            try:
+                _out, err = p.communicate(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                _out, err = p.communicate()
+            results[i] = (None if p.returncode != 0
+                          else _load_result(workdir, spec, i))
+            if results[i] is None:
+                failed.append((i, err))
+        pending = [i for i, _ in failed]
+        if pending and attempt == retries:
+            raise RuntimeError(
+                f"sweep workers {pending} failed after {retries + 1} "
+                f"attempts; last stderr:\n{failed[0][1][-2000:]}")
+
+    # gather + merge along the seed axis (shards are contiguous slices)
+    qs, errs, counts, node_counts = [], [], [], None
+    ledger = CommLedger()
+    seed_axis = 1 if len(cases) > 1 else 0
+    for i in range(n_workers):
+        tree = results[i]
+        qs.append(np.asarray(tree["q"]))
+        counts.append(np.asarray(tree["seeds"]))
+        ledger = ledger.merged(tree["ledger"])
+        if spec["has_q_true"]:
+            errs.append(np.asarray(tree["error_traces"]))
+        if spec["ragged"]:
+            node_counts = np.asarray(tree["node_counts"])
+    return SweepResult(
+        q=jnp.asarray(np.concatenate(qs, axis=seed_axis)),
+        error_traces=(np.concatenate(errs, axis=seed_axis)
+                      if spec["has_q_true"] else None),
+        ledger=ledger,
+        seeds=np.concatenate(counts),
+        node_counts=node_counts,
+    )

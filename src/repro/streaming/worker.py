@@ -1,0 +1,87 @@
+"""Sweep worker: one host's vmap lane-slice of a sharded Monte-Carlo sweep.
+
+Usage (spawned by ``streaming/launcher.py``; runnable by hand for debugs):
+
+    python -m repro.streaming.worker <workdir>/spec.json <shard_idx>
+
+Rebuilds its engines/schedules from the spec (seed-deterministic graph
+constructions — no pickled objects cross the host boundary), loads the cov
+stacks from ``problem.npz``, runs ``sdot_sweep`` over its shard's seed
+slice, and publishes ``{q, error_traces, seeds, ledger}`` atomically into
+its own checkpoint dir ``<workdir>/worker_<shard>/result`` via
+``checkpoint/manager.save_tree`` — the CommLedger travels as a registered
+pytree.  If a valid result is already published the worker exits
+immediately (idempotent relaunch).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    spec_path, shard = argv[0], int(argv[1])
+    workdir = os.path.dirname(os.path.abspath(spec_path))
+    with open(spec_path) as f:
+        spec = json.load(f)
+
+    out_dir = os.path.join(workdir, f"worker_{shard}", "result")
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint.manager import save_tree
+    from repro.core.sweep import sdot_sweep
+    from repro.streaming.launcher import (_load_result, build_engine,
+                                          build_schedule, spec_fingerprint)
+
+    # idempotent relaunch — but only for a result stamped with THIS spec's
+    # fingerprint: a hand-run worker in a reused workdir must not keep a
+    # shard computed under an older spec
+    if _load_result(workdir, spec, shard) is not None:
+        print(f"worker {shard}: result already published, nothing to do")
+        return 0
+    shutil.rmtree(out_dir, ignore_errors=True)
+
+    seeds = spec["shards"][shard]
+    if not seeds:
+        raise ValueError(f"worker {shard} got an empty seed shard")
+    problem = np.load(os.path.join(workdir, "problem.npz"))
+    engines = [build_engine(c["topology"]) for c in spec["cases"]]
+    schedules = [build_schedule(c.get("schedule"), spec["t_outer"],
+                                spec["t_c"]) for c in spec["cases"]]
+    if spec["ragged"]:
+        # a 1-element list is stored once; sdot_sweep zip-broadcasts it
+        covs = [jnp.asarray(problem[f"covs_{ci}"])
+                for ci in range(spec["n_cov_stacks"])]
+    else:
+        covs = jnp.asarray(problem["covs"])
+    q_true = (jnp.asarray(problem["q_true"]) if spec["has_q_true"]
+              else None)
+
+    sw = sdot_sweep(covs=covs, engines=engines, schedules=schedules,
+                    r=spec["r"], t_outer=spec["t_outer"], t_c=spec["t_c"],
+                    seeds=seeds, q_true=q_true)
+
+    # the stamped fingerprint lets the launcher reject this result if the
+    # workdir is later reused with a different spec
+    tree = {"q": sw.q, "seeds": jnp.asarray(np.asarray(seeds)),
+            "ledger": sw.ledger,
+            "spec_fp": jnp.asarray(spec_fingerprint(spec), jnp.int32)}
+    if spec["has_q_true"]:
+        tree["error_traces"] = jnp.asarray(sw.error_traces)
+    if spec["ragged"]:
+        tree["node_counts"] = jnp.asarray(sw.node_counts)
+    save_tree(out_dir, tree, step=shard)
+    print(f"worker {shard}: published {len(seeds)} seed lanes -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,392 @@
+"""Streaming subsystem: online ingestion, chunked crash-resume, launcher.
+
+The load-bearing assertions are *bitwise*: a run checkpointed and restored
+at any chunk boundary must reproduce the uninterrupted fused run's error
+trace, final iterate, and comm ledger exactly — including the async
+straggler RNG carry. The launcher's merged multi-process sweep must match
+the single-process sweep at float32 epsilon (XLA may schedule a width-1
+vmap lane-slice differently; everything else is identical arithmetic).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.async_gossip import AsyncConsensus
+from repro.core.consensus import DenseConsensus
+from repro.core.fdot import fdot
+from repro.core.linalg import eigh_topr
+from repro.core.metrics import CommLedger
+from repro.core.sdot import sdot
+from repro.core.sweep import sdot_sweep
+from repro.core.topology import erdos_renyi
+from repro.data.pipeline import (eigengap_stream, partition_features,
+                                 partition_samples)
+from repro.streaming.ingest import (CovSketch, FrequentDirections,
+                                    StreamingIngestor)
+from repro.streaming.launcher import (build_engine, build_schedule,
+                                      launch_sweep)
+from repro.streaming.resume import RunState, fdot_chunked, sdot_chunked
+
+D, R, N = 14, 3, 6
+T_OUTER, T_C, CHUNK = 12, 15, 5
+
+
+@pytest.fixture(scope="module")
+def stream_problem():
+    batch_fn, c_pop, q_pop = eigengap_stream(D, R, 0.7, seed=0)
+    ing = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn, batch_size=30)
+    ing.ingest(20)
+    covs = ing.cov_stack()
+    _, q_true = eigh_topr(covs.sum(0), R)
+    return dict(batch_fn=batch_fn, covs=covs, q_true=q_true,
+                graph=erdos_renyi(N, 0.5, seed=1))
+
+
+# ---------------------------------------------------------------------------
+# ingestion
+# ---------------------------------------------------------------------------
+def test_exact_sketch_matches_batch_pipeline(stream_problem):
+    """Streamed covs == partitioning each micro-batch and batching the cov:
+    node i's accumulated samples are exactly its per-batch column shards."""
+    batch_fn = stream_problem["batch_fn"]
+    per_node = [[] for _ in range(N)]
+    for t in range(20):
+        for i, b in enumerate(partition_samples(batch_fn(t, 30), N)):
+            per_node[i].append(b)
+    blocks = [jnp.concatenate(bs, axis=1) for bs in per_node]
+    want = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    np.testing.assert_allclose(np.asarray(stream_problem["covs"]),
+                               np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_ingestor_checkpoint_resume_is_bitwise(tmp_path, stream_problem):
+    """Kill-and-restart mid-stream: the stateless stream + checkpointed
+    sketch state reproduce the uninterrupted ingestion exactly."""
+    batch_fn = stream_problem["batch_fn"]
+    full = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                             batch_size=30).ingest(10)
+
+    part = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                             batch_size=30).ingest(4)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(part.step, part.state())
+
+    fresh = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                              batch_size=30)
+    tree, _ = mgr.restore(fresh.state())
+    fresh.restore(tree)
+    assert fresh.step == 4
+    fresh.ingest(6)
+    np.testing.assert_array_equal(np.asarray(fresh.cov_stack()),
+                                  np.asarray(full.cov_stack()))
+    np.testing.assert_array_equal(fresh.samples_per_node,
+                                  full.samples_per_node)
+
+
+def test_frequent_directions_error_bound(stream_problem):
+    """||X X^T - B^T B||_2 <= accumulated shrink mass, per node."""
+    batch_fn = stream_problem["batch_fn"]
+    ell = 10
+    fd = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn, batch_size=30,
+                           sketch="fd", ell=ell)
+    fd.ingest(12)
+    exact = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                              batch_size=30).ingest(12)
+    sm = np.asarray(exact.sketch.second_moment)
+    bb = np.asarray(jnp.einsum("nld,nle->nde", fd.sketch.sketch,
+                               fd.sketch.sketch))
+    loss = np.asarray(fd.sketch.shrink_loss)
+    for i in range(N):
+        gap = np.linalg.norm(sm[i] - bb[i], ord=2)
+        assert gap <= loss[i] * (1 + 1e-4) + 1e-4
+    # and the bound is non-trivial (the sketch actually compresses)
+    assert (loss > 0).all()
+
+
+def test_ingestor_rejects_ragged_batch(stream_problem):
+    with pytest.raises(ValueError, match="divide evenly"):
+        StreamingIngestor(n_nodes=N, d=D,
+                          batch_fn=stream_problem["batch_fn"], batch_size=31)
+
+
+def test_cov_stack_before_ingest_raises(stream_problem):
+    """0/0 must fail at the call site, not emit an all-NaN operand stack."""
+    fresh = StreamingIngestor(n_nodes=N, d=D,
+                              batch_fn=stream_problem["batch_fn"],
+                              batch_size=30)
+    with pytest.raises(ValueError, match="ingest"):
+        fresh.cov_stack()
+
+
+def test_fd_rejects_ell_over_d():
+    with pytest.raises(ValueError, match="ell"):
+        FrequentDirections.init(2, 8, 9)
+
+
+# ---------------------------------------------------------------------------
+# registered pytrees
+# ---------------------------------------------------------------------------
+def test_ledger_checkpoints_as_pytree(tmp_path):
+    """CommLedger round-trips through checkpoint/manager.py with its
+    list-valued awake_counts intact (stacking keeps working after restore).
+    Counters are float64 at table scale (> 2^24) — restore must not let a
+    device_put with x64 disabled downcast them to float32."""
+    led = CommLedger(p2p=123456789.0, matrices=10.0, scalars=9.876543219e12)
+    led.log_awake_rounds([3, 4, 5])
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"ledger": led})
+    got, _ = mgr.restore({"ledger": CommLedger()})
+    restored = got["ledger"]
+    assert restored.p2p == led.p2p
+    assert restored.scalars == led.scalars
+    assert restored.awake_counts == [3, 4, 5]
+    restored.log_awake_rounds([7])            # stacking intact post-restore
+    assert restored.awake_counts == [3, 4, 5, 7]
+    assert restored.mean_awake() == pytest.approx(np.mean([3, 4, 5, 7]))
+
+
+def test_runstate_is_pytree():
+    st = RunState(q=jnp.zeros((2, 3, 1)), key=jnp.zeros((2,), jnp.uint32),
+                  step=jnp.int32(4), errs=jnp.zeros(7),
+                  sends=jnp.zeros((7, 2)), counts=jnp.zeros((7, 2)))
+    leaves = jax.tree.leaves(st)
+    assert len(leaves) == 6
+    st2 = jax.tree.map(lambda x: x, st)
+    assert isinstance(st2, RunState) and int(st2.step) == 4
+
+
+# ---------------------------------------------------------------------------
+# chunked crash-resume: bit-identical traces, ledgers, iterates
+# ---------------------------------------------------------------------------
+def _assert_ledgers_equal(a, b):
+    assert a.p2p == b.p2p
+    assert a.matrices == b.matrices
+    assert a.scalars == b.scalars
+    assert a.awake_counts == b.awake_counts
+
+
+def _async_engine():
+    return AsyncConsensus(erdos_renyi(N, 0.5, seed=1), p_awake=0.8, seed=5)
+
+
+@pytest.mark.parametrize("kill_at", [1, 2])
+def test_sdot_sync_crash_resume_bitwise(tmp_path, stream_problem, kill_at):
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    mono = sdot(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path / f"k{kill_at}"))
+    part = sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER,
+                        t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                        manager=mgr, max_chunks=kill_at)
+    assert len(part.error_trace) == min(kill_at * CHUNK, T_OUTER)
+    res = sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER,
+                       t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                       manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    np.testing.assert_array_equal(np.asarray(res.q_nodes),
+                                  np.asarray(mono.q_nodes))
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+
+
+@pytest.mark.parametrize("kill_at", [1, 2])
+def test_sdot_async_crash_resume_bitwise(tmp_path, stream_problem, kill_at):
+    """The straggler path: the RNG key rides in the checkpointed RunState,
+    so the restored run continues the SAME awake-mask realization, and the
+    realized ledger (sends + awake counts) survives the crash too."""
+    p = stream_problem
+    mono = sdot(covs=p["covs"], engine=_async_engine(), r=R, t_outer=T_OUTER,
+                t_c=T_C, q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path / f"k{kill_at}"))
+    eng2 = _async_engine()
+    sdot_chunked(covs=p["covs"], engine=eng2, r=R, t_outer=T_OUTER, t_c=T_C,
+                 q_true=p["q_true"], chunk_size=CHUNK, manager=mgr,
+                 max_chunks=kill_at)
+    eng3 = _async_engine()
+    res = sdot_chunked(covs=p["covs"], engine=eng3, r=R, t_outer=T_OUTER,
+                       t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                       manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    np.testing.assert_array_equal(np.asarray(res.q_nodes),
+                                  np.asarray(mono.q_nodes))
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+    # the engine's RNG stream position matches the uninterrupted run's
+    eng_mono = _async_engine()
+    sdot(covs=p["covs"], engine=eng_mono, r=R, t_outer=T_OUTER, t_c=T_C)
+    np.testing.assert_array_equal(np.asarray(eng3._key),
+                                  np.asarray(eng_mono._key))
+
+
+@pytest.mark.parametrize("kill_at", [1, 2])
+def test_fdot_crash_resume_bitwise(tmp_path, kill_at):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((16, 240)), jnp.float32)
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], R)
+    blocks = partition_features(x, 4)
+    eng = DenseConsensus(erdos_renyi(4, 0.9, seed=1))
+    mono = fdot(data_blocks=blocks, engine=eng, r=R, t_outer=9, t_c=T_C,
+                q_true=q_true)
+    mgr = CheckpointManager(str(tmp_path))
+    fdot_chunked(data_blocks=blocks, engine=eng, r=R, t_outer=9, t_c=T_C,
+                 q_true=q_true, chunk_size=4, manager=mgr, max_chunks=kill_at)
+    res = fdot_chunked(data_blocks=blocks, engine=eng, r=R, t_outer=9,
+                       t_c=T_C, q_true=q_true, chunk_size=4, manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    np.testing.assert_array_equal(np.asarray(res.q_full),
+                                  np.asarray(mono.q_full))
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+
+
+def test_corrupt_latest_checkpoint_recovery(tmp_path, stream_problem):
+    """A torn latest snapshot (manifest present, shards unreadable) must not
+    kill the run: resume falls back to the newest restorable step and the
+    final trace is still bit-identical."""
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    mono = sdot(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                 q_true=p["q_true"], chunk_size=CHUNK, manager=mgr,
+                 max_chunks=2)
+    steps = mgr.all_steps()
+    assert len(steps) == 2
+    # corrupt the newest step's shard file, manifest intact
+    shard = os.path.join(tmp_path, f"step_{steps[-1]:08d}", "shards.npz")
+    with open(shard, "wb") as f:
+        f.write(b"not an npz")
+    res = sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER,
+                       t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                       manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+
+
+def test_all_checkpoints_corrupt_falls_back_to_fresh(tmp_path,
+                                                     stream_problem):
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    mono = sdot(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path))
+    sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                 q_true=p["q_true"], chunk_size=CHUNK, manager=mgr,
+                 max_chunks=1)
+    for s in mgr.all_steps():
+        with open(os.path.join(tmp_path, f"step_{s:08d}", "shards.npz"),
+                  "wb") as f:
+            f.write(b"garbage")
+    res = sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER,
+                       t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                       manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+
+
+def test_stale_checkpoint_dir_rejected_with_warning(tmp_path,
+                                                    stream_problem):
+    """A checkpoint dir from a run with a different t_outer must not be
+    silently resumed (the buffers have the wrong length): the run warns,
+    starts fresh, and still produces the correct full-length trace."""
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    mgr = CheckpointManager(str(tmp_path))
+    sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                 q_true=p["q_true"], chunk_size=CHUNK, manager=mgr,
+                 max_chunks=1)
+    longer = T_OUTER + 8
+    mono = sdot(covs=p["covs"], engine=eng, r=R, t_outer=longer, t_c=T_C,
+                q_true=p["q_true"])
+    with pytest.warns(UserWarning, match="none restored"):
+        res = sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=longer,
+                           t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                           manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+
+
+def test_chunk_size_invariance(stream_problem):
+    """The trace must not depend on where the chunk boundaries fall."""
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    mono = sdot(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER, t_c=T_C,
+                q_true=p["q_true"])
+    for chunk in (1, 4, T_OUTER, T_OUTER + 7):
+        res = sdot_chunked(covs=p["covs"], engine=eng, r=R, t_outer=T_OUTER,
+                           t_c=T_C, q_true=p["q_true"], chunk_size=chunk)
+        np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+
+
+# ---------------------------------------------------------------------------
+# multi-process launcher
+# ---------------------------------------------------------------------------
+def test_launcher_matches_single_process(tmp_path, stream_problem):
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1},
+              "schedule": {"kind": "lin2", "cap": T_C}}]
+    seeds = [0, 1, 2, 3]
+    engines = [build_engine(c["topology"]) for c in cases]
+    schedules = [build_schedule(c["schedule"], 8, T_C) for c in cases]
+    ref = sdot_sweep(covs=p["covs"], engines=engines, schedules=schedules,
+                     r=R, t_outer=8, t_c=T_C, seeds=seeds,
+                     q_true=p["q_true"])
+    sw = launch_sweep(covs=p["covs"], cases=cases, r=R, t_outer=8, t_c=T_C,
+                      seeds=seeds, q_true=p["q_true"],
+                      workdir=str(tmp_path), n_workers=2)
+    np.testing.assert_allclose(sw.error_traces, ref.error_traces,
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sw.q), np.asarray(ref.q),
+                               rtol=1e-6, atol=1e-7)
+    assert list(sw.seeds) == seeds
+    assert sw.ledger.p2p == ref.ledger.p2p
+    assert sw.ledger.scalars == ref.ledger.scalars
+
+    # relaunch with published shards: no recompute, same merged result
+    sw2 = launch_sweep(covs=p["covs"], cases=cases, r=R, t_outer=8, t_c=T_C,
+                       seeds=seeds, q_true=p["q_true"],
+                       workdir=str(tmp_path), n_workers=2)
+    np.testing.assert_array_equal(sw2.error_traces, sw.error_traces)
+
+    # reusing the workdir with a CHANGED spec must not merge stale shards:
+    # the stamped spec fingerprint forces a relaunch
+    sw3 = launch_sweep(covs=p["covs"], cases=cases, r=R, t_outer=6, t_c=T_C,
+                       seeds=seeds, q_true=p["q_true"],
+                       workdir=str(tmp_path), n_workers=2)
+    assert sw3.error_traces.shape == (len(seeds), 6)
+    np.testing.assert_allclose(sw3.error_traces, ref.error_traces[:, :6],
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_launcher_ragged_shared_covs(tmp_path, stream_problem):
+    """Ragged-covs mode with ONE shared stack: stored once in problem.npz,
+    zip-broadcast worker-side; merged result matches the single-process
+    ragged sweep."""
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1}},
+             {"topology": {"kind": "ring", "n": N}}]
+    seeds = [0, 1]
+    engines = [build_engine(c["topology"]) for c in cases]
+    ref = sdot_sweep(covs=[p["covs"]], engines=engines, r=R, t_outer=5,
+                     t_c=T_C, seeds=seeds, q_true=p["q_true"])
+    sw = launch_sweep(covs=[p["covs"]], cases=cases, r=R, t_outer=5,
+                      t_c=T_C, seeds=seeds, q_true=p["q_true"],
+                      workdir=str(tmp_path), n_workers=2)
+    np.testing.assert_allclose(sw.error_traces, ref.error_traces,
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(sw.node_counts, ref.node_counts)
+    # the shared stack was written once, not once per case
+    problem = np.load(os.path.join(tmp_path, "problem.npz"))
+    assert "covs_0" in problem and "covs_1" not in problem
+
+
+def test_launcher_rejects_mismatched_case_covs(tmp_path, stream_problem):
+    """A covs list that cannot zip-broadcast with the cases fails up front
+    (before any worker spawn), matching sdot_sweep's contract."""
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1}}] * 3
+    with pytest.raises(ValueError, match="zip-broadcast"):
+        launch_sweep(covs=[p["covs"], p["covs"]], cases=cases, r=R,
+                     t_outer=4, seeds=[0], workdir=str(tmp_path),
+                     n_workers=1)

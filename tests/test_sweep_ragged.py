@@ -1,0 +1,172 @@
+"""Ragged-N sweep paths for fdot_sweep / baseline_sweep (shared sweep_utils).
+
+``sdot_sweep`` grew identity padding in PR 3 (tested in test_bdot_fused.py);
+these tests pin the same contract for the feature-partitioned sweep (zero-
+slab padding, no mask needed) and the cov-based baselines (identity covs +
+node-masked trace): stacked mixed-node-count cases reproduce the per-case
+unpadded runs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines as B
+from repro.core.consensus import DenseConsensus
+from repro.core.fdot import fdot
+from repro.core.linalg import eigh_topr
+from repro.core.sweep import baseline_sweep, fdot_sweep
+from repro.core.sweep_utils import (case_node_masks, pad_covs_identity,
+                                    pad_weights_identity, pad_zero_nodes)
+from repro.core.topology import erdos_renyi, ring
+from repro.data.pipeline import (gaussian_eigengap_data, partition_features,
+                                 partition_samples)
+
+SEEDS = [0, 1]
+
+
+def _cov_problem(n_nodes, d=16, r=4, n_per=200):
+    x, _, _ = gaussian_eigengap_data(d, n_nodes * n_per, r, 0.7, seed=0)
+    blocks = partition_samples(x, n_nodes)
+    covs = jnp.stack([b @ b.T / b.shape[1] for b in blocks])
+    _, q_true = eigh_topr(covs.sum(0), r)
+    return covs, q_true
+
+
+@pytest.fixture(scope="module")
+def cov_cases():
+    covs6, q_true = _cov_problem(6)
+    covs10, _ = _cov_problem(10)
+    engines = [DenseConsensus(erdos_renyi(6, 0.6, seed=1)),
+               DenseConsensus(ring(10))]
+    return dict(covs=[covs6, covs10], engines=engines, q_true=q_true)
+
+
+@pytest.fixture(scope="module")
+def feature_cases():
+    x, _, _ = gaussian_eigengap_data(18, 300, 4, 0.6, seed=2)
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], 4)
+    return dict(
+        blocks=[partition_features(x, 3), partition_features(x, 5)],
+        engines=[DenseConsensus(erdos_renyi(3, 0.9, seed=1)),
+                 DenseConsensus(ring(5))],
+        q_true=q_true)
+
+
+# ---------------------------------------------------------------------------
+# sweep_utils
+# ---------------------------------------------------------------------------
+def test_pad_weights_identity_isolates():
+    w = np.full((3, 3), 1.0 / 3)
+    out = pad_weights_identity(w, 5)
+    assert out.shape == (5, 5)
+    np.testing.assert_array_equal(out[:3, 3:], 0.0)
+    np.testing.assert_array_equal(out[3:, :3], 0.0)
+    np.testing.assert_array_equal(out[3:, 3:], np.eye(2))
+    assert np.allclose(out.sum(1), 1.0)          # still doubly stochastic
+
+
+def test_pad_helpers_shapes():
+    covs = jnp.ones((3, 4, 4))
+    assert pad_covs_identity(covs, 5).shape == (5, 4, 4)
+    np.testing.assert_array_equal(np.asarray(pad_covs_identity(covs, 5)[3:]),
+                                  np.broadcast_to(np.eye(4), (2, 4, 4)))
+    slabs = jnp.ones((3, 6, 7))
+    padded = pad_zero_nodes(slabs, 5)
+    assert padded.shape == (5, 6, 7)
+    np.testing.assert_array_equal(np.asarray(padded[3:]), 0.0)
+    masks = case_node_masks([3, 5], 5)
+    np.testing.assert_array_equal(np.asarray(masks),
+                                  [[1, 1, 1, 0, 0], [1, 1, 1, 1, 1]])
+
+
+# ---------------------------------------------------------------------------
+# fdot_sweep: zero-slab padding
+# ---------------------------------------------------------------------------
+def test_fdot_ragged_sweep_matches_unpadded_runs(feature_cases):
+    fc = feature_cases
+    sw = fdot_sweep(data_blocks=fc["blocks"], engines=fc["engines"], r=4,
+                    t_outer=6, t_c=20, seeds=SEEDS, q_true=fc["q_true"])
+    assert sw.error_traces.shape == (2, 2, 6)
+    np.testing.assert_array_equal(sw.node_counts, [3, 5])
+    for ci, (eng, blocks) in enumerate(zip(fc["engines"], fc["blocks"])):
+        for si, s in enumerate(SEEDS):
+            res = fdot(data_blocks=blocks, engine=eng, r=4, t_outer=6,
+                       t_c=20, seed=s, q_true=fc["q_true"])
+            np.testing.assert_allclose(sw.error_traces[ci, si],
+                                       res.error_trace, rtol=1e-4,
+                                       atol=1e-6)
+
+
+def test_fdot_ragged_sweep_ledger(feature_cases):
+    fc = feature_cases
+    sw = fdot_sweep(data_blocks=fc["blocks"], engines=fc["engines"], r=4,
+                    t_outer=6, t_c=20, seeds=SEEDS)
+    from repro.core.metrics import CommLedger
+    led = CommLedger()
+    for eng, blocks in zip(fc["engines"], fc["blocks"]):
+        for s in SEEDS:
+            res = fdot(data_blocks=blocks, engine=eng, r=4, t_outer=6,
+                       t_c=20, seed=s)
+            led = led.merged(res.ledger)
+    assert sw.ledger.p2p == led.p2p
+    assert sw.ledger.scalars == led.scalars
+
+
+def test_fdot_ragged_rejects_mismatches(feature_cases):
+    fc = feature_cases
+    with pytest.raises(ValueError, match="node count"):
+        fdot_sweep(data_blocks=[fc["blocks"][0], fc["blocks"][0]],
+                   engines=fc["engines"], r=4, t_outer=3, seeds=[0])
+    short = [b[:-1] for b in fc["blocks"][1]]       # drops feature rows
+    with pytest.raises(ValueError, match="same d features"):
+        fdot_sweep(data_blocks=[fc["blocks"][0], short],
+                   engines=fc["engines"], r=4, t_outer=3, seeds=[0])
+
+
+# ---------------------------------------------------------------------------
+# baseline_sweep: identity padding + node-masked trace
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["dsa", "dpgd", "deepca"])
+def test_baseline_ragged_sweep_matches_unpadded_runs(cov_cases, name):
+    cc = cov_cases
+    sw = baseline_sweep(name, covs=cc["covs"], engines=cc["engines"], r=4,
+                        t_outer=8, seeds=SEEDS, q_true=cc["q_true"])
+    assert sw.error_traces.shape == (2, 2, 8)
+    np.testing.assert_array_equal(sw.node_counts, [6, 10])
+    fn = {"dsa": B.dsa, "dpgd": B.dpgd, "deepca": B.deepca}[name]
+    for ci, (eng, cv) in enumerate(zip(cc["engines"], cc["covs"])):
+        for si, s in enumerate(SEEDS):
+            _, errs = fn(cv, eng, 4, 8, q_true=cc["q_true"], seed=s)
+            np.testing.assert_allclose(sw.error_traces[ci, si], errs,
+                                       rtol=1e-4, atol=1e-6)
+        n_c = eng.graph.n_nodes
+        # padded nodes stay isolated: real-node estimates match too
+        _, _ = fn(cc["covs"][ci], eng, 4, 8, seed=SEEDS[0])
+
+
+def test_baseline_single_engine_list_squeezes(cov_cases):
+    cc = cov_cases
+    sw = baseline_sweep("dsa", covs=[cc["covs"][0]],
+                        engines=[cc["engines"][0]], r=4, t_outer=5,
+                        seeds=SEEDS, q_true=cc["q_true"])
+    assert sw.error_traces.shape == (2, 5)          # no case axis
+    assert sw.node_counts is None
+    # and equals the classic single-engine path exactly
+    ref = baseline_sweep("dsa", covs=cc["covs"][0],
+                         engine=cc["engines"][0], r=4, t_outer=5,
+                         seeds=SEEDS, q_true=cc["q_true"])
+    np.testing.assert_array_equal(sw.error_traces, ref.error_traces)
+
+
+def test_baseline_ragged_rejections(cov_cases):
+    cc = cov_cases
+    with pytest.raises(ValueError, match="not both"):
+        baseline_sweep("dsa", covs=cc["covs"], engine=cc["engines"][0],
+                       engines=cc["engines"], r=4, t_outer=3, seeds=[0])
+    with pytest.raises(ValueError, match="single-case"):
+        baseline_sweep("seq_dist_pm", covs=cc["covs"],
+                       engines=cc["engines"], r=4, iters_per_vec=3,
+                       seeds=[0])
+    with pytest.raises(ValueError, match="node count"):
+        baseline_sweep("dsa", covs=[cc["covs"][0], cc["covs"][0]],
+                       engines=cc["engines"], r=4, t_outer=3, seeds=[0])
