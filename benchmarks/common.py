@@ -37,6 +37,38 @@ def timed(fn: Callable, *args, **kw):
     return out, (time.perf_counter() - t0) * 1e6
 
 
+def interleaved_best_of(variants, repeats: int, *,
+                        sync: Optional[Callable] = None):
+    """Best-of-N walltimes with the variant order rotated every round.
+
+    This container shows +-20% walltime jitter and throttles over time, so
+    a single-pass A-then-B comparison is unreliable: whichever variant runs
+    later eats the throttling. Rotating the order each round spreads the
+    machine noise over every variant and the per-variant MINIMUM is the
+    least-noise estimate of its true cost.
+
+    ``variants``: list of (name, thunk) pairs; each thunk runs one
+    measurement and returns its result. ``sync`` (optional) is called on
+    the result before the clock stops (e.g. ``jax.block_until_ready`` on
+    the result's arrays) — omit it if the thunks block internally.
+
+    Returns ``(best, outs)``: name -> best seconds, name -> last result.
+    """
+    variants = list(variants)
+    best = {name: float("inf") for name, _ in variants}
+    outs = {}
+    for i in range(max(1, repeats)):
+        k = i % len(variants)
+        for name, fn in variants[k:] + variants[:k]:
+            t0 = time.perf_counter()
+            out = fn()
+            if sync is not None:
+                sync(out)
+            best[name] = min(best[name], time.perf_counter() - t0)
+            outs[name] = out
+    return best, outs
+
+
 def sample_problem(*, d: int, r: int, n_nodes: int, n_per: int, gap: float,
                    seed: int = 0, repeated_top: bool = False):
     """Sample-partitioned PSA problem + ground truth of the global covariance."""

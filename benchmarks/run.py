@@ -15,6 +15,7 @@ MODULES = [
     "bdot_fused",
     "sweep_bench",
     "streaming_bench",
+    "runtime_bench",
     "table1_eigengap_p2p",
     "table2_connectivity",
     "table3_ring",

@@ -1,0 +1,215 @@
+"""Unified-runtime benchmark: chunked-driver overhead across the zoo.
+
+The unified executor runtime (core/runtime.py) gave B-DOT, the five fused
+baselines, and the sweep engine chunked-resumable execution through ONE
+generic driver. This benchmark prices that generality: a chunked run must
+stay within 10% of its monolithic whole-run scan (the chunk programs
+enqueue back-to-back with zero per-chunk host sync, so the cost is pure
+dispatch + compile-cache lookup).
+
+Measured cases (all through ``common.interleaved_best_of`` — this
+container shows +-20% walltime jitter, so variants run in rotating order
+and the per-variant best-of-N is reported):
+
+* monolithic vs chunked fused B-DOT (the family that could not checkpoint
+  at all before the runtime), with and without atomic async checkpoints;
+* monolithic vs chunked DeEPCA (the baseline with a pytree carry);
+* monolithic vs chunked ``sdot_sweep`` (the mid-grid-resumable sweep).
+
+Every chunked result is asserted bit-identical to its monolithic twin
+before timings are reported.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.runtime_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.run runtime_bench
+
+Writes BENCH_runtime.json (or .smoke.json) next to the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.baselines import deepca
+from repro.core.bdot import bdot
+from repro.core.consensus import DenseConsensus
+from repro.core.sweep import sdot_sweep
+from repro.core.topology import complete, erdos_renyi, ring
+from repro.data.pipeline import gaussian_eigengap_data, partition_features
+from repro.streaming.resume import baseline_chunked, bdot_chunked
+
+from .common import Row, interleaved_best_of, sample_problem
+
+R = 5
+
+
+def _grid_problem(d, n_samples, rows, cols, r, seed=0):
+    x, _, _ = gaussian_eigengap_data(d, n_samples, r, 0.7, seed=seed)
+    from repro.core.linalg import eigh_topr
+
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], r)
+    slabs = partition_features(x, rows)
+    col_splits = np.array_split(np.arange(n_samples), cols)
+    blocks = [[slab[:, idx] for idx in col_splits] for slab in slabs]
+    col_engines = [DenseConsensus(complete(rows)) for _ in range(cols)]
+    row_engines = [DenseConsensus(ring(cols)) for _ in range(rows)]
+    return blocks, col_engines, row_engines, q_true
+
+
+def bench_bdot_chunked(d, n_samples, t_outer, chunk_size, repeats):
+    blocks, ce, re_, q_true = _grid_problem(d, n_samples, 3, 2, R)
+    kw = dict(blocks=blocks, col_engines=ce, row_engines=re_, r=R,
+              t_outer=t_outer, t_c=30, q_true=q_true)
+    mono = lambda: bdot(**kw)
+    chunked = lambda mgr: bdot_chunked(chunk_size=chunk_size, manager=mgr,
+                                       **kw)
+    mono()                                           # warmup compile
+    chunked(None)
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_rt_ckpt_")
+
+    def with_ckpt():
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+        return chunked(CheckpointManager(ckpt_dir, keep_last=2))
+
+    sync = lambda out: jax.block_until_ready(out.q_rows[0])
+    try:
+        best, outs = interleaved_best_of(
+            [("mono", mono), ("chunk", lambda: chunked(None))],
+            repeats, sync=sync)
+        best_c, outs_c = interleaved_best_of([("ckpt", with_ckpt)], repeats,
+                                             sync=sync)
+        best.update(best_c)
+        outs.update(outs_c)
+        np.testing.assert_array_equal(outs["mono"].error_trace,
+                                      outs["chunk"].error_trace)
+        np.testing.assert_array_equal(outs["mono"].error_trace,
+                                      outs["ckpt"].error_trace)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    return {
+        "case": f"bdot/d{d}/To{t_outer}/chunk{chunk_size}",
+        "monolithic_ms": round(best["mono"] * 1e3, 2),
+        "chunked_ms": round(best["chunk"] * 1e3, 2),
+        "chunked_ckpt_ms": round(best["ckpt"] * 1e3, 2),
+        "chunk_overhead_pct": round(
+            (best["chunk"] / best["mono"] - 1.0) * 100, 2),
+        "ckpt_overhead_pct": round(
+            (best["ckpt"] / best["mono"] - 1.0) * 100, 2),
+        "final_err": float(outs["mono"].error_trace[-1]),
+    }
+
+
+def bench_baseline_chunked(d, t_outer, chunk_size, repeats):
+    n_nodes = 20
+    covs, q_true = sample_problem(d=d, r=R, n_nodes=n_nodes, n_per=100,
+                                  gap=0.7, seed=0)
+    eng = DenseConsensus(erdos_renyi(n_nodes, 0.25, seed=1))
+    mono = lambda: deepca(covs, eng, R, t_outer, q_true=q_true)
+    chunked = lambda: baseline_chunked(
+        "deepca", covs=covs, engine=eng, r=R, t_outer=t_outer,
+        q_true=q_true, chunk_size=chunk_size)
+    mono()
+    chunked()
+    sync = lambda out: jax.block_until_ready(
+        out.q if hasattr(out, "q") else out[0])
+    best, outs = interleaved_best_of(
+        [("mono", mono), ("chunk", chunked)], repeats, sync=sync)
+    np.testing.assert_array_equal(outs["mono"][1],
+                                  outs["chunk"].error_trace)
+    return {
+        "case": f"deepca/d{d}/To{t_outer}/chunk{chunk_size}",
+        "monolithic_ms": round(best["mono"] * 1e3, 2),
+        "chunked_ms": round(best["chunk"] * 1e3, 2),
+        "chunk_overhead_pct": round(
+            (best["chunk"] / best["mono"] - 1.0) * 100, 2),
+    }
+
+
+def bench_sweep_chunked(d, t_outer, n_seeds, chunk_size, repeats):
+    n_nodes = 20
+    covs, q_true = sample_problem(d=d, r=R, n_nodes=n_nodes, n_per=100,
+                                  gap=0.7, seed=0)
+    engines = [DenseConsensus(erdos_renyi(n_nodes, 0.25, seed=1)),
+               DenseConsensus(ring(n_nodes))]
+    seeds = list(range(n_seeds))
+    kw = dict(covs=covs, engines=engines, r=R, t_outer=t_outer, t_c=30,
+              seeds=seeds, q_true=q_true)
+    mono = lambda: sdot_sweep(**kw)
+    chunked = lambda: sdot_sweep(chunk_size=chunk_size, **kw)
+    mono()
+    chunked()
+    sync = lambda out: jax.block_until_ready(out.q)
+    best, outs = interleaved_best_of(
+        [("mono", mono), ("chunk", chunked)], repeats, sync=sync)
+    np.testing.assert_array_equal(outs["mono"].error_traces,
+                                  outs["chunk"].error_traces)
+    return {
+        "case": f"sweep/d{d}/To{t_outer}/{n_seeds}seeds/chunk{chunk_size}",
+        "monolithic_ms": round(best["mono"] * 1e3, 2),
+        "chunked_ms": round(best["chunk"] * 1e3, 2),
+        "chunk_overhead_pct": round(
+            (best["chunk"] / best["mono"] - 1.0) * 100, 2),
+    }
+
+
+def run_bench(smoke: bool = False):
+    if smoke:
+        return [
+            bench_bdot_chunked(d=24, n_samples=240, t_outer=20,
+                               chunk_size=8, repeats=1),
+            bench_baseline_chunked(d=24, t_outer=30, chunk_size=10,
+                                   repeats=1),
+        ]
+    # runs sized >= ~0.5 s so per-chunk dispatch cost is integrated over
+    # this container's +-20% throttling jitter
+    return [
+        bench_bdot_chunked(d=240, n_samples=1200, t_outer=150,
+                           chunk_size=25, repeats=7),
+        bench_baseline_chunked(d=100, t_outer=600, chunk_size=60,
+                               repeats=7),
+        bench_sweep_chunked(d=80, t_outer=200, n_seeds=8, chunk_size=40,
+                            repeats=5),
+    ]
+
+
+def run():
+    """benchmarks.run entry point."""
+    rows = []
+    for rec in run_bench(smoke=False):
+        rows.append(Row(
+            f"runtime/{rec['case']}", rec["chunked_ms"] * 1e3,
+            {"monolithic_ms": rec["monolithic_ms"],
+             "overhead_pct": rec["chunk_overhead_pct"]}))
+    return rows
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "runtime",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    print(json.dumps(out, indent=2))
+    name = "BENCH_runtime.smoke.json" if smoke else "BENCH_runtime.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    if not smoke:
+        worst = max(r["chunk_overhead_pct"] for r in results)
+        if worst > 10.0:
+            print(f"# WARNING: chunked overhead {worst}% above the 10% bar")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

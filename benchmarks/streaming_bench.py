@@ -42,7 +42,7 @@ from repro.core.topology import erdos_renyi
 from repro.streaming.launcher import build_engine, build_schedule, launch_sweep
 from repro.streaming.resume import sdot_chunked
 
-from .common import Row, sample_problem
+from .common import Row, interleaved_best_of, sample_problem
 
 N, R = 20, 5
 
@@ -74,24 +74,19 @@ def bench_chunked(d, t_outer, chunk_size, repeats):
         return chunked(CheckpointManager(ckpt_dir, keep_last=2))
 
     # Phase 1 — the <10% acceptance bar: mono vs chunked (no disk),
-    # interleaved with a rotating order so machine noise (this container
-    # jitters +-20% and throttles over time) hits both equally; best-of.
+    # interleaved with a rotating order (common.interleaved_best_of) so
+    # machine noise hits both equally; best-of.
     # Phase 2 — checkpointing cost, measured afterwards: its disk writes
     # (page-cache churn) would otherwise poison the phase-1 measurements.
-    results = {}
-    best = {"mono": float("inf"), "chunk": float("inf"),
-            "ckpt": float("inf")}
-    variants = [("mono", mono), ("chunk", lambda: chunked(None))]
+    sync = lambda out: jax.block_until_ready(out.q_nodes)
     try:
-        for i in range(repeats):
-            for k, fn in variants[i % 2:] + variants[:i % 2]:
-                t, out = _timed(fn)
-                best[k] = min(best[k], t)
-                results[k] = out
-        for _ in range(repeats):
-            t, out = _timed(with_ckpt)
-            best["ckpt"] = min(best["ckpt"], t)
-            results["ckpt"] = out
+        best, results = interleaved_best_of(
+            [("mono", mono), ("chunk", lambda: chunked(None))],
+            repeats, sync=sync)
+        best_ckpt, out_ckpt = interleaved_best_of(
+            [("ckpt", with_ckpt)], repeats, sync=sync)
+        best.update(best_ckpt)
+        results.update(out_ckpt)
         np.testing.assert_array_equal(results["mono"].error_trace,
                                       results["chunk"].error_trace)
         np.testing.assert_array_equal(results["mono"].error_trace,

@@ -9,10 +9,12 @@ Public API:
     bdot         — B-DOT (block-partitioned; beyond-paper, the paper's §VI)
     baselines    — SeqPM, SeqDistPM, DSA, DPGD, DeEPCA, d-PM
     metrics      — subspace error (paper eq. 11), comm ledgers
+    runtime      — unified executor runtime (Program protocol + the
+                   monolithic / chunked / sweep drivers)
     sweep        — vmapped Monte-Carlo sweeps over the fused executors
     sweep_utils  — shared ragged-N padding (identity nodes / zero slabs)
 """
-from . import baselines, bdot, consensus, fdot, linalg, metrics, oi, sdot, sweep, sweep_utils, topology  # noqa: F401
+from . import baselines, bdot, consensus, fdot, linalg, metrics, oi, runtime, sdot, sweep, sweep_utils, topology  # noqa: F401
 from .bdot import bdot as run_bdot  # noqa: F401
 from .consensus import DenseConsensus, SpmdConsensus, consensus_schedule  # noqa: F401
 from .fdot import fdot as run_fdot  # noqa: F401

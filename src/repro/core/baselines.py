@@ -26,19 +26,21 @@ per-iteration loop as the correctness oracle (tests/test_fused_zoo.py).
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import runtime
 from .consensus import DenseConsensus, debiased_gossip
 from .linalg import cholesky_qr2, orthonormal_init
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
 from .sdot import local_cov_apply
 
-__all__ = ["seq_pm", "seq_dist_pm", "dsa", "dpgd", "deepca", "d_pm"]
+__all__ = ["seq_pm", "seq_dist_pm", "dsa", "dpgd", "deepca", "d_pm",
+           "baseline_program", "BaselineResult"]
 
 
 def _trace(q_true, q):
@@ -69,6 +71,22 @@ def _finish_errs(errs, n_steps: int, trace_err: bool) -> np.ndarray:
     """Device trace -> host array; NaN-fill when no ground truth was given
     (matching the eager loop's per-iteration np.nan appends)."""
     return np.asarray(errs) if trace_err else np.full(n_steps, np.nan)
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    """A fused baseline run as the unified runtime reports it.
+
+    ``q`` is the family-shaped estimate (stacked per-node (N, d, r) for the
+    consensus methods, the assembled (d, r) basis for the sequential-
+    deflation ones); ``error_trace`` is NaN-filled when no ground truth was
+    given, matching the eager oracles; ``ledger`` is the closed-form
+    accounting for the completed prefix (so a chunked run killed mid-way
+    reports exactly what it spent)."""
+
+    q: jnp.ndarray
+    error_trace: np.ndarray
+    ledger: CommLedger
 
 
 # --------------------------------------------------------------------------
@@ -107,17 +125,16 @@ def seq_pm(m: jnp.ndarray, r: int, iters_per_vec: int, q_true=None, seed: int = 
 # --------------------------------------------------------------------------
 # distributed sequential power method (SeqDistPM)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("r", "iters_per_vec", "t_c",
-                                             "t_max", "trace_err"))
-def _fused_seq_dist_pm(covs, w, table, cols0, q_true, *, r: int,
-                       iters_per_vec: int, t_c: int, t_max: int,
-                       trace_err: bool):
-    """Whole SeqDistPM run as one scan over the flattened (k, j) index.
+def _seq_dist_pm_build_body(operands, *, r: int, iters_per_vec: int,
+                            t_c: int, t_max: int, trace_err: bool):
+    """Runtime body for SeqDistPM: one step of the flattened (k, j) index.
 
-    cols0: (r, N, d) per-node column estimates. Deflation against converged
-    vectors is a fori_loop masked to kk < k — same sequential Gram-Schmidt
-    order as the eager loop.
+    Carry: (r, N, d) per-node column estimates; the scan input is the
+    flattened step index m (k = m // iters_per_vec). Deflation against
+    converged vectors is a fori_loop masked to kk < k — same sequential
+    Gram-Schmidt order as the eager loop.
     """
+    covs, w, table, q_true = operands
 
     def body(cols, m):
         k = m // iters_per_vec
@@ -137,7 +154,7 @@ def _fused_seq_dist_pm(covs, w, table, cols0, q_true, *, r: int,
                else jnp.float32(0.0))
         return cols, err
 
-    return jax.lax.scan(body, cols0, jnp.arange(r * iters_per_vec))
+    return runtime.sync_body(body)
 
 
 def seq_dist_pm(covs: jnp.ndarray, engine: DenseConsensus, r: int,
@@ -149,15 +166,12 @@ def seq_dist_pm(covs: jnp.ndarray, engine: DenseConsensus, r: int,
     fused = fused and closed_form
     n_steps = r * iters_per_vec
     if fused:
-        cols0 = jnp.broadcast_to(q0.T[:, None, :], (r, n, d))
-        trace_err = q_true is not None
-        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-        cols, errs = _fused_seq_dist_pm(
-            covs, engine._w, engine.debias_table(t_c), cols0, q_arg,
-            r=r, iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
-            trace_err=trace_err)
-        q_nodes = jnp.transpose(cols, (1, 2, 0))               # (n, d, r)
-        errs = _finish_errs(errs, n_steps, trace_err)
+        run = runtime.run_monolithic(baseline_program(
+            "seq_dist_pm", covs=covs, engine=engine, r=r,
+            iters_per_vec=iters_per_vec, t_c=t_c, q_true=q_true, seed=seed))
+        if ledger is not None:
+            ledger.merge_from(run.ledger)
+        return run.q, run.error_trace
     else:
         cols = [jnp.broadcast_to(q0[:, k][None], (n, d)) for k in range(r)]
         errs = []
@@ -190,9 +204,9 @@ def seq_dist_pm(covs: jnp.ndarray, engine: DenseConsensus, r: int,
 # --------------------------------------------------------------------------
 # distributed Sanger's algorithm (DSA)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("t_outer", "trace_err"))
-def _fused_dsa(covs, w, q0, lr, q_true, node_mask, *, t_outer: int,
-               trace_err: bool):
+def _dsa_build_body(operands, *, trace_err: bool):
+    covs, w, lr, q_true, node_mask = operands
+
     def body(q, _):
         mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
         mq = local_cov_apply(covs, q)
@@ -204,7 +218,7 @@ def _fused_dsa(covs, w, q0, lr, q_true, node_mask, *, t_outer: int,
                if trace_err else jnp.float32(0.0))
         return q_new, err
 
-    return jax.lax.scan(body, q0, None, length=t_outer)
+    return runtime.sync_body(body)
 
 
 def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
@@ -216,27 +230,25 @@ def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     One gossip round per iteration (as in [19]).
     """
     n, d, _ = covs.shape
+    if fused and _supports_fused(engine):
+        run = runtime.run_monolithic(baseline_program(
+            "dsa", covs=covs, engine=engine, r=r, t_outer=t_outer, lr=lr,
+            q_true=q_true, seed=seed))
+        if ledger is not None:
+            ledger.merge_from(run.ledger)
+        return run.q, run.error_trace
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     q = jnp.broadcast_to(q0[None], (n, d, r))
-    fused = fused and _supports_fused(engine)
-    if fused:
-        trace_err = q_true is not None
-        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-        q, errs = _fused_dsa(covs, engine._w, q, jnp.float32(lr), q_arg,
-                             jnp.ones((n,), jnp.float32),
-                             t_outer=t_outer, trace_err=trace_err)
-        errs = _finish_errs(errs, t_outer, trace_err)
-    else:
-        errs = []
-        for _ in range(t_outer):
-            mixed = engine.run(q, 1)
-            mq = local_cov_apply(covs, q)
-            qmq = jnp.einsum("ndr,nds->nrs", q, mq)
-            upper = jnp.triu(qmq)
-            sanger = mq - jnp.einsum("ndr,nrs->nds", q, upper)
-            q = mixed + lr * sanger
-            errs.append(_trace(q_true, q.mean(0)))
-        errs = np.asarray(errs)
+    errs = []
+    for _ in range(t_outer):
+        mixed = engine.run(q, 1)
+        mq = local_cov_apply(covs, q)
+        qmq = jnp.einsum("ndr,nds->nrs", q, mq)
+        upper = jnp.triu(qmq)
+        sanger = mq - jnp.einsum("ndr,nrs->nds", q, upper)
+        q = mixed + lr * sanger
+        errs.append(_trace(q_true, q.mean(0)))
+    errs = np.asarray(errs)
     if ledger is not None:
         ledger.log_gossip_rounds(np.ones(t_outer), engine.graph.adjacency,
                                  d * r)
@@ -246,9 +258,9 @@ def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
 # --------------------------------------------------------------------------
 # distributed projected gradient descent (DPGD)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("t_outer", "trace_err"))
-def _fused_dpgd(covs, w, q0, lr, q_true, node_mask, *, t_outer: int,
-                trace_err: bool):
+def _dpgd_build_body(operands, *, trace_err: bool):
+    covs, w, lr, q_true, node_mask = operands
+
     def body(q, _):
         mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
         grad = local_cov_apply(covs, q)
@@ -258,7 +270,7 @@ def _fused_dpgd(covs, w, q0, lr, q_true, node_mask, *, t_outer: int,
                if trace_err else jnp.float32(0.0))
         return q_new, err
 
-    return jax.lax.scan(body, q0, None, length=t_outer)
+    return runtime.sync_body(body)
 
 
 def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
@@ -266,25 +278,23 @@ def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
          ledger: Optional[CommLedger] = None, fused: bool = True):
     """Trace-maximization DGD + QR retraction (converges to a neighborhood)."""
     n, d, _ = covs.shape
+    if fused and _supports_fused(engine):
+        run = runtime.run_monolithic(baseline_program(
+            "dpgd", covs=covs, engine=engine, r=r, t_outer=t_outer, lr=lr,
+            q_true=q_true, seed=seed))
+        if ledger is not None:
+            ledger.merge_from(run.ledger)
+        return run.q, run.error_trace
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     q = jnp.broadcast_to(q0[None], (n, d, r))
-    fused = fused and _supports_fused(engine)
-    if fused:
-        trace_err = q_true is not None
-        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-        q, errs = _fused_dpgd(covs, engine._w, q, jnp.float32(lr), q_arg,
-                              jnp.ones((n,), jnp.float32),
-                              t_outer=t_outer, trace_err=trace_err)
-        errs = _finish_errs(errs, t_outer, trace_err)
-    else:
-        errs = []
-        for _ in range(t_outer):
-            mixed = engine.run(q, 1)
-            grad = local_cov_apply(covs, q)  # d/dQ Tr(Q^T M_i Q) = 2 M_i Q
-            v = mixed + lr * grad
-            q = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
-            errs.append(_trace(q_true, q.mean(0)))
-        errs = np.asarray(errs)
+    errs = []
+    for _ in range(t_outer):
+        mixed = engine.run(q, 1)
+        grad = local_cov_apply(covs, q)  # d/dQ Tr(Q^T M_i Q) = 2 M_i Q
+        v = mixed + lr * grad
+        q = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+        errs.append(_trace(q_true, q.mean(0)))
+    errs = np.asarray(errs)
     if ledger is not None:
         ledger.log_gossip_rounds(np.ones(t_outer), engine.graph.adjacency,
                                  d * r)
@@ -294,9 +304,12 @@ def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
 # --------------------------------------------------------------------------
 # DeEPCA — gradient tracking + power iteration
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("t_outer", "t_mix", "trace_err"))
-def _fused_deepca(covs, w, q0, s0, q_true, node_mask, *, t_outer: int,
-                  t_mix: int, trace_err: bool):
+def _deepca_build_body(operands, *, t_mix: int, trace_err: bool):
+    """Carry: the (q, s, mq_prev) tracking triple — the runtime's carry is
+    an arbitrary pytree, so DeEPCA's gradient-tracking state checkpoints
+    through the generic chunk driver like any iterate."""
+    covs, w, q_true, node_mask = operands
+
     def body(carry, _):
         q, s, mq_prev = carry
         wz = w.astype(s.dtype)
@@ -316,8 +329,7 @@ def _fused_deepca(covs, w, q0, s0, q_true, node_mask, *, t_outer: int,
                if trace_err else jnp.float32(0.0))
         return (q_new, s, mq_new), err
 
-    (q, s, _), errs = jax.lax.scan(body, (q0, s0, s0), None, length=t_outer)
-    return q, errs
+    return runtime.sync_body(body)
 
 
 def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
@@ -330,34 +342,30 @@ def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     advantage over S-DOT the paper's Remark 1 concedes.
     """
     n, d, _ = covs.shape
+    if fused and _supports_fused(engine):
+        run = runtime.run_monolithic(baseline_program(
+            "deepca", covs=covs, engine=engine, r=r, t_outer=t_outer,
+            t_mix=t_mix, q_true=q_true, seed=seed))
+        if ledger is not None:
+            ledger.merge_from(run.ledger)
+        return run.q, run.error_trace
     q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
     q = jnp.broadcast_to(q0[None], (n, d, r))
-    fused = fused and _supports_fused(engine)
-    if fused:
-        trace_err = q_true is not None
-        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-        s0 = local_cov_apply(covs, q)
-        q, errs = _fused_deepca(covs, engine._w, q, s0, q_arg,
-                                jnp.ones((n,), jnp.float32),
-                                t_outer=t_outer, t_mix=t_mix,
-                                trace_err=trace_err)
-        errs = _finish_errs(errs, t_outer, trace_err)
-    else:
-        mq_prev = local_cov_apply(covs, q)
-        s = mq_prev
-        errs = []
-        for _ in range(t_outer):
-            s = engine.run(s, t_mix)
-            q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(s)
-            # align signs with previous iterate for smooth tracking
-            sign = jnp.sign(jnp.einsum("ndr,ndr->nr", q_new, q))
-            sign = jnp.where(sign == 0, 1.0, sign)
-            q_new = q_new * sign[:, None, :]
-            mq_new = local_cov_apply(covs, q_new)
-            s = s + mq_new - mq_prev       # gradient tracking correction
-            mq_prev, q = mq_new, q_new
-            errs.append(_trace(q_true, q.mean(0)))
-        errs = np.asarray(errs)
+    mq_prev = local_cov_apply(covs, q)
+    s = mq_prev
+    errs = []
+    for _ in range(t_outer):
+        s = engine.run(s, t_mix)
+        q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(s)
+        # align signs with previous iterate for smooth tracking
+        sign = jnp.sign(jnp.einsum("ndr,ndr->nr", q_new, q))
+        sign = jnp.where(sign == 0, 1.0, sign)
+        q_new = q_new * sign[:, None, :]
+        mq_new = local_cov_apply(covs, q_new)
+        s = s + mq_new - mq_prev       # gradient tracking correction
+        mq_prev, q = mq_new, q_new
+        errs.append(_trace(q_true, q.mean(0)))
+    errs = np.asarray(errs)
     if ledger is not None:
         ledger.log_gossip_rounds(np.full(t_outer, t_mix),
                                  engine.graph.adjacency, d * r)
@@ -367,16 +375,15 @@ def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
 # --------------------------------------------------------------------------
 # d-PM — sequential distributed power method for feature-partitioned data
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("r", "iters_per_vec", "t_c",
-                                             "t_max", "trace_err"))
-def _fused_d_pm(x_pad, w, table, blocks0, qtrue_pad, *, r: int,
-                iters_per_vec: int, t_c: int, t_max: int, trace_err: bool):
-    """Whole d-PM run as one scan over the flattened (k, j) index.
+def _d_pm_build_body(operands, *, r: int, iters_per_vec: int, t_c: int,
+                     t_max: int, trace_err: bool):
+    """Runtime body for d-PM: one step of the flattened (k, j) index.
 
-    x_pad: (N, d_max, n) zero-padded feature slabs; blocks0: (r, N, d_max)
+    x_pad: (N, d_max, n) zero-padded feature slabs; carry: (r, N, d_max)
     per-vector padded slab estimates; qtrue_pad: (N, d_max, r_true). All
     dots/norms run over the padded layout — exact, padding entries are zero.
     """
+    x_pad, w, table, qtrue_pad = operands
 
     def body(blocks, m):
         k = m // iters_per_vec
@@ -399,7 +406,7 @@ def _fused_d_pm(x_pad, w, table, blocks0, qtrue_pad, *, r: int,
             err = jnp.float32(0.0)
         return blocks, err
 
-    return jax.lax.scan(body, blocks0, jnp.arange(r * iters_per_vec))
+    return runtime.sync_body(body)
 
 
 def d_pm(data_blocks: Sequence[jnp.ndarray], engine: DenseConsensus, r: int,
@@ -419,19 +426,12 @@ def d_pm(data_blocks: Sequence[jnp.ndarray], engine: DenseConsensus, r: int,
     fused = fused and closed_form
     n_steps = r * iters_per_vec
     if fused:
-        x_pad = pad_feature_slabs(data_blocks)
-        q0_pad = split_pad_rows(q0, dims)
-        blocks0 = jnp.transpose(q0_pad, (2, 0, 1))             # (r, N, d_max)
-        trace_err = q_true is not None
-        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                     else jnp.zeros_like(q0_pad))
-        blocks, errs = _fused_d_pm(
-            x_pad, engine._w, engine.debias_table(t_c), blocks0, qtrue_pad,
-            r=r, iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
-            trace_err=trace_err)
-        q_full = jnp.concatenate(
-            [blocks[:, i, :di].T for i, di in enumerate(dims)], axis=0)
-        errs = _finish_errs(errs, n_steps, trace_err)
+        run = runtime.run_monolithic(baseline_program(
+            "d_pm", data_blocks=data_blocks, engine=engine, r=r,
+            iters_per_vec=iters_per_vec, t_c=t_c, q_true=q_true, seed=seed))
+        if ledger is not None:
+            ledger.merge_from(run.ledger)
+        return run.q, run.error_trace
     else:
         blocks = [[q0[offs[i]:offs[i + 1], k] for i in range(n_nodes)]
                   for k in range(r)]
@@ -462,3 +462,123 @@ def d_pm(data_blocks: Sequence[jnp.ndarray], engine: DenseConsensus, r: int,
         ledger.log_gossip_rounds(np.full(n_steps, t_c),
                                  engine.graph.adjacency, n_samples)
     return q_full, errs
+
+
+# --------------------------------------------------------------------------
+# unified-runtime registration
+# --------------------------------------------------------------------------
+def baseline_program(
+    name: str,
+    *,
+    covs: Optional[jnp.ndarray] = None,
+    data_blocks: Optional[Sequence[jnp.ndarray]] = None,
+    engine: Optional[DenseConsensus] = None,
+    r: int,
+    t_outer: Optional[int] = None,
+    iters_per_vec: Optional[int] = None,
+    lr: float = 0.1,
+    t_mix: int = 3,
+    t_c: int = 50,
+    q_true=None,
+    seed: int = 0,
+) -> runtime.Program:
+    """Register one fused baseline run with the unified executor runtime.
+
+    ``name``: dsa | dpgd | deepca (need ``covs`` + ``t_outer``),
+    seq_dist_pm (``covs`` + ``iters_per_vec``), or d_pm (``data_blocks`` +
+    ``iters_per_vec``). ``runtime.run_monolithic`` reproduces the fused
+    default paths of the public functions; ``runtime.run_chunked`` makes
+    every baseline restartable (kill-at-chunk-boundary bit-identical
+    resume) — a capability none of them had before the unified runtime.
+    """
+    if engine is None:
+        raise ValueError("baseline_program needs an engine")
+    if not _supports_fused(engine):
+        raise ValueError(f"fused {name} needs a dense-weight engine with a "
+                         "debias table")
+    trace_err = q_true is not None
+
+    if name in ("dsa", "dpgd", "deepca"):
+        if covs is None or t_outer is None:
+            raise ValueError(f"{name} needs covs and t_outer")
+        n, d, _ = covs.shape
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q0 = jnp.broadcast_to(
+            orthonormal_init(jax.random.PRNGKey(seed), d, r)[None],
+            (n, d, r))
+        ones = jnp.ones((n,), jnp.float32)
+        xs = np.zeros(t_outer, np.int32)          # bodies ignore the input
+        payload = d * r
+        if name == "deepca":
+            build = _deepca_build_body
+            statics = (("t_mix", t_mix), ("trace_err", trace_err))
+            operands = (covs, engine._w, q_arg, ones)
+            s0 = local_cov_apply(covs, q0)
+            carry0 = (q0, s0, s0)
+            rounds = lambda done: np.full(done, t_mix)
+            to_q = lambda carry: carry[0]
+        else:
+            build = _dsa_build_body if name == "dsa" else _dpgd_build_body
+            statics = (("trace_err", trace_err),)
+            operands = (covs, engine._w, jnp.float32(lr), q_arg, ones)
+            carry0 = q0
+            rounds = lambda done: np.ones(done)
+            to_q = lambda carry: carry
+    elif name == "seq_dist_pm":
+        if covs is None or iters_per_vec is None:
+            raise ValueError("seq_dist_pm needs covs and iters_per_vec")
+        n, d, _ = covs.shape
+        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+        q0 = orthonormal_init(jax.random.PRNGKey(seed), d, r)
+        carry0 = jnp.broadcast_to(q0.T[:, None, :], (r, n, d))
+        build = _seq_dist_pm_build_body
+        statics = (("r", r), ("iters_per_vec", iters_per_vec),
+                   ("t_c", t_c), ("t_max", t_c), ("trace_err", trace_err))
+        operands = (covs, engine._w, engine.debias_table(t_c), q_arg)
+        xs = np.arange(r * iters_per_vec, dtype=np.int32)
+        payload = d
+        rounds = lambda done: np.full(done, t_c)
+        to_q = lambda cols: jnp.transpose(cols, (1, 2, 0))     # (n, d, r)
+    elif name == "d_pm":
+        if data_blocks is None or iters_per_vec is None:
+            raise ValueError("d_pm needs data_blocks and iters_per_vec")
+        from .fdot import pad_feature_slabs, split_pad_rows
+
+        dims = [int(x.shape[0]) for x in data_blocks]
+        d = sum(dims)
+        x_pad = pad_feature_slabs(data_blocks)
+        q0_pad = split_pad_rows(
+            orthonormal_init(jax.random.PRNGKey(seed), d, r), dims)
+        carry0 = jnp.transpose(q0_pad, (2, 0, 1))              # (r, N, d_max)
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        build = _d_pm_build_body
+        statics = (("r", r), ("iters_per_vec", iters_per_vec),
+                   ("t_c", t_c), ("t_max", t_c), ("trace_err", trace_err))
+        operands = (x_pad, engine._w, engine.debias_table(t_c), qtrue_pad)
+        xs = np.arange(r * iters_per_vec, dtype=np.int32)
+        payload = int(data_blocks[0].shape[1])                 # n_samples
+        rounds = lambda done: np.full(done, t_c)
+        to_q = lambda blocks: jnp.concatenate(
+            [blocks[:, i, :di].T for i, di in enumerate(dims)], axis=0)
+    else:
+        raise ValueError(f"unknown baseline: {name}")
+
+    def finalize(state: runtime.RunState, done: int) -> BaselineResult:
+        ledger = CommLedger()
+        ledger.log_gossip_rounds(rounds(done), engine.graph.adjacency,
+                                 payload)
+        return BaselineResult(
+            q=to_q(state.q),
+            error_trace=_finish_errs(state.errs[:done], done, trace_err),
+            ledger=ledger,
+        )
+
+    return runtime.Program(
+        build_body=build,
+        operands=operands,
+        statics=statics,
+        xs=xs,
+        q0=carry0,
+        finalize=finalize,
+    )

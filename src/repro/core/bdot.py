@@ -58,20 +58,20 @@ Execution modes (``fused`` flag, same architecture as sdot.py/fdot.py):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import runtime
 from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .fdot import _qr_pass, distributed_cholesky_qr, split_pad_rows
 from .linalg import orthonormal_init
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
 from ..kernels import ops as kops
 
-__all__ = ["BDOTResult", "bdot", "pad_grid_blocks"]
+__all__ = ["BDOTResult", "bdot", "bdot_program", "pad_grid_blocks"]
 
 
 @dataclasses.dataclass
@@ -98,20 +98,17 @@ def pad_grid_blocks(blocks: Sequence[Sequence[jnp.ndarray]]) -> jnp.ndarray:
         for row in blocks])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fused_bdot_run(x_grid, w_col, tab_col, w_row, tab_row, sched, q0_pad,
-                    qtrue_pad, *, t_max: int, t_c_qr: int, passes: int,
-                    trace_err: bool):
-    """One compiled program for a whole B-DOT run.
+def _bdot_outer_body(x_grid, w_col, tab_col, w_row, tab_row, qtrue_pad, *,
+                     t_max: int, t_c_qr: int, passes: int, trace_err: bool):
+    """Build the per-outer-iteration body ``(q_pad, t_c) -> (q_new, err)``.
 
     x_grid: (I, J, d_max, n_max) zero-padded blocks; w_col/tab_col:
     (J, I, I) column weights + (J, t_max+1, I) debias tables; w_row/tab_row:
-    (I, J, J) + (I, t_max+1, J) for the row stage; sched: (T_o,) int32
-    budgets for stages 1-2; t_c_qr: static constant budget per QR pass
-    (gossiped over the column-0 engine, exactly as the eager oracle does);
-    q0_pad / qtrue_pad: (I, d_max, r) zero-row-padded slab stacks. Returns
-    (q_pad, (T_o,) error trace — zeros when trace_err is False).
+    (I, J, J) + (I, t_max+1, J) for the row stage; t_c_qr: static constant
+    budget per QR pass (gossiped over the column-0 engine, exactly as the
+    eager oracle does); qtrue_pad: (I, d_max, r) zero-row-padded slabs.
+    One definition feeds every runtime driver (monolithic, chunked), so a
+    run split at chunk boundaries replays the monolithic scan bit for bit.
     """
     gossip_cols = jax.vmap(debiased_gossip, in_axes=(0, 0, 0, None, None))
     gossip_rows = jax.vmap(debiased_gossip, in_axes=(0, 0, 0, None, None))
@@ -135,7 +132,135 @@ def _fused_bdot_run(x_grid, w_col, tab_col, w_row, tab_row, sched, q0_pad,
             err = jnp.float32(0.0)
         return v, err
 
-    return jax.lax.scan(outer, q0_pad, sched)
+    return outer
+
+
+def _bdot_build_body(operands, *, t_max: int, t_c_qr: int, passes: int,
+                     trace_err: bool):
+    """Runtime body builder for B-DOT (the Program protocol's
+    ``build_body``). B-DOT is sync-only: the key threads through."""
+    x_grid, w_col, tab_col, w_row, tab_row, qtrue_pad = operands
+    return runtime.sync_body(
+        _bdot_outer_body(x_grid, w_col, tab_col, w_row, tab_row, qtrue_pad,
+                         t_max=t_max, t_c_qr=t_c_qr, passes=passes,
+                         trace_err=trace_err))
+
+
+def _prepare_bdot(*, blocks, col_engines, row_engines, r, t_outer, t_c,
+                  t_c_qr, schedule, q_init, q_true, seed):
+    """Validate + normalize a B-DOT run's inputs into device-ready pieces.
+
+    Shared by ``bdot`` (eager oracle) and ``bdot_program`` (every runtime
+    driver), so a chunked run starts from literally the same device values
+    as the monolithic one.
+    """
+    n_rows = len(blocks)
+    n_cols = len(blocks[0])
+    if len(col_engines) != n_cols or len(row_engines) != n_rows:
+        raise ValueError("need one column engine per grid column and one "
+                         "row engine per grid row")
+    dims = [int(blocks[i][0].shape[0]) for i in range(n_rows)]
+    n_samps = [int(blocks[0][j].shape[1]) for j in range(n_cols)]
+    d = sum(dims)
+    t_c_qr = int(t_c if t_c_qr is None else t_c_qr)
+    passes = 2
+
+    if schedule is None:
+        schedule = consensus_schedule("const", t_outer, t_max=t_c)
+    elif len(schedule) < t_outer:
+        raise ValueError(f"schedule has {len(schedule)} entries but "
+                         f"t_outer={t_outer}")
+    schedule = np.asarray(schedule[:t_outer])
+
+    if q_init is None:
+        q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
+    offs = np.cumsum([0] + dims)
+    # every node of row i starts from the same slab Q_i
+    q_rows = [q_init[offs[i]:offs[i + 1]] for i in range(n_rows)]
+    t_max = int(max(schedule.max(), t_c_qr)) if t_outer else t_c_qr
+    trace_err = q_true is not None
+
+    def pads():
+        # built lazily: only the fused/chunked executors consume the padded
+        # stacks — the eager oracle iterates the ragged blocks directly
+        x_grid = pad_grid_blocks(blocks)
+        q0_pad = split_pad_rows(q_init, dims)            # (I, d_max, r)
+        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                     else jnp.zeros_like(q0_pad))
+        return x_grid, q0_pad, qtrue_pad
+
+    return dict(
+        n_rows=n_rows, n_cols=n_cols, dims=dims, n_samps=n_samps, d=d,
+        t_c_qr=t_c_qr, passes=passes, schedule=schedule, q_rows=q_rows,
+        t_max=t_max, trace_err=trace_err, pads=pads,
+    )
+
+
+def bdot_program(
+    *,
+    blocks: Sequence[Sequence[jnp.ndarray]],
+    col_engines: Sequence[DenseConsensus],
+    row_engines: Sequence[DenseConsensus],
+    r: int,
+    t_outer: int,
+    t_c: int = 50,
+    t_c_qr: Optional[int] = None,
+    schedule: Optional[np.ndarray] = None,
+    q_init: Optional[jnp.ndarray] = None,
+    q_true: Optional[jnp.ndarray] = None,
+    seed: int = 0,
+) -> runtime.Program:
+    """Register a B-DOT run with the unified executor runtime.
+
+    ``runtime.run_monolithic`` reproduces ``bdot(fused=True)``;
+    ``runtime.run_chunked`` makes the block-partitioned runs restartable —
+    a capability B-DOT never had before the unified runtime, and it comes
+    from the generic driver rather than bespoke wiring.
+    """
+    if not all(hasattr(e, "debias_table")
+               for e in list(col_engines) + list(row_engines)):
+        raise ValueError("fused B-DOT needs fused-capable engines "
+                         "(debias_table) on every row and column")
+    prep = _prepare_bdot(blocks=blocks, col_engines=col_engines,
+                         row_engines=row_engines, r=r, t_outer=t_outer,
+                         t_c=t_c, t_c_qr=t_c_qr, schedule=schedule,
+                         q_init=q_init, q_true=q_true, seed=seed)
+    x_grid, q0_pad, qtrue_pad = prep["pads"]()
+    t_max, t_c_qr, passes = prep["t_max"], prep["t_c_qr"], prep["passes"]
+    trace_err = prep["trace_err"]
+    sched_np = prep["schedule"]
+    dims, n_samps = prep["dims"], prep["n_samps"]
+    w_col = jnp.stack([e._w for e in col_engines])       # (J, I, I)
+    tab_col = jnp.stack([e.debias_table(t_max) for e in col_engines])
+    w_row = jnp.stack([e._w for e in row_engines])       # (I, J, J)
+    tab_row = jnp.stack([e.debias_table(t_max) for e in row_engines])
+
+    def finalize(state: runtime.RunState, done: int) -> BDOTResult:
+        ledger = CommLedger()
+        for j, eng in enumerate(col_engines):
+            ledger.log_gossip_rounds(sched_np[:done], eng.graph.adjacency,
+                                     n_samps[j] * r)
+        for i, eng in enumerate(row_engines):
+            ledger.log_gossip_rounds(sched_np[:done], eng.graph.adjacency,
+                                     dims[i] * r)
+        ledger.log_gossip_rounds(np.full(done, passes * t_c_qr),
+                                 col_engines[0].graph.adjacency, r * r)
+        return BDOTResult(
+            q_rows=[state.q[i, :di] for i, di in enumerate(dims)],
+            error_trace=(np.asarray(state.errs[:done]) if trace_err
+                         else None),
+            ledger=ledger,
+        )
+
+    return runtime.Program(
+        build_body=_bdot_build_body,
+        operands=(x_grid, w_col, tab_col, w_row, tab_row, qtrue_pad),
+        statics=(("t_max", t_max), ("t_c_qr", t_c_qr), ("passes", passes),
+                 ("trace_err", trace_err)),
+        xs=sched_np,
+        q0=q0_pad,
+        finalize=finalize,
+    )
 
 
 def bdot(
@@ -164,89 +289,53 @@ def bdot(
     ``schedule`` overrides ``t_c`` with per-outer-iteration consensus
     budgets for stages 1-2 (the QR stage keeps the constant ``t_c_qr``,
     default ``t_c``). ``fused=True`` (default) executes the whole run as a
-    single compiled scan over the zero-padded block stack; ``fused=False``
-    is the eager per-iteration oracle.
+    single compiled scan over the zero-padded block stack (a thin shim over
+    ``runtime.run_monolithic``); ``fused=False`` is the eager
+    per-iteration oracle.
     """
-    n_rows = len(blocks)
-    n_cols = len(blocks[0])
-    assert len(col_engines) == n_cols and len(row_engines) == n_rows
-    dims = [int(blocks[i][0].shape[0]) for i in range(n_rows)]
-    n_samps = [int(blocks[0][j].shape[1]) for j in range(n_cols)]
-    d = sum(dims)
-    t_c_qr = int(t_c if t_c_qr is None else t_c_qr)
-    passes = 2
+    if fused and all(hasattr(e, "debias_table")
+                     for e in list(col_engines) + list(row_engines)):
+        return runtime.run_monolithic(bdot_program(
+            blocks=blocks, col_engines=col_engines, row_engines=row_engines,
+            r=r, t_outer=t_outer, t_c=t_c, t_c_qr=t_c_qr, schedule=schedule,
+            q_init=q_init, q_true=q_true, seed=seed))
 
-    if schedule is None:
-        schedule = consensus_schedule("const", t_outer, t_max=t_c)
-    elif len(schedule) < t_outer:
-        raise ValueError(f"schedule has {len(schedule)} entries but "
-                         f"t_outer={t_outer}")
-    schedule = np.asarray(schedule[:t_outer])
-
-    if q_init is None:
-        q_init = orthonormal_init(jax.random.PRNGKey(seed), d, r)
-    offs = np.cumsum([0] + dims)
-    # every node of row i starts from the same slab Q_i
-    q_rows = [q_init[offs[i]:offs[i + 1]] for i in range(n_rows)]
+    prep = _prepare_bdot(blocks=blocks, col_engines=col_engines,
+                         row_engines=row_engines, r=r, t_outer=t_outer,
+                         t_c=t_c, t_c_qr=t_c_qr, schedule=schedule,
+                         q_init=q_init, q_true=q_true, seed=seed)
+    n_rows, n_cols = prep["n_rows"], prep["n_cols"]
+    t_c_qr, passes = prep["t_c_qr"], prep["passes"]
+    schedule, q_rows = prep["schedule"], prep["q_rows"]
+    trace_err = prep["trace_err"]
 
     ledger = CommLedger()
-    trace_err = q_true is not None
+    errs = [] if trace_err else None
+    for t in range(t_outer):
+        t_c_t = int(schedule[t])
+        # --- stage 1: per column j, consensus-sum the (n_j x r) partials
+        s_cols = []
+        for j in range(n_cols):
+            z0 = jnp.stack([blocks[i][j].T @ q_rows[i]
+                            for i in range(n_rows)])      # (I, n_j, r)
+            s = col_engines[j].run_debiased(z0, t_c_t, ledger)
+            s_cols.append(s.mean(0))   # all column members now agree (≈)
 
-    if fused and not all(hasattr(e, "debias_table")
-                         for e in list(col_engines) + list(row_engines)):
-        fused = False
+        # --- stage 2: per row i, consensus-sum the (d_i x r) expansions
+        new_rows = []
+        for i in range(n_rows):
+            z0 = jnp.stack([blocks[i][j] @ s_cols[j]
+                            for j in range(n_cols)])      # (J, d_i, r)
+            w = row_engines[i].run_debiased(z0, t_c_t, ledger)
+            new_rows.append(w.mean(0))
 
-    if fused:
-        t_max = int(max(schedule.max(), t_c_qr)) if t_outer else t_c_qr
-        x_grid = pad_grid_blocks(blocks)
-        q0_pad = split_pad_rows(q_init, dims)                # (I, d_max, r)
-        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                     else jnp.zeros_like(q0_pad))
-        w_col = jnp.stack([e._w for e in col_engines])       # (J, I, I)
-        tab_col = jnp.stack([e.debias_table(t_max) for e in col_engines])
-        w_row = jnp.stack([e._w for e in row_engines])       # (I, J, J)
-        tab_row = jnp.stack([e.debias_table(t_max) for e in row_engines])
-        q_pad, errs = _fused_bdot_run(
-            x_grid, w_col, tab_col, w_row, tab_row,
-            jnp.asarray(schedule, jnp.int32), q0_pad, qtrue_pad,
-            t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
-        q_rows = [q_pad[i, :di] for i, di in enumerate(dims)]
-        for j, eng in enumerate(col_engines):
-            ledger.log_gossip_rounds(schedule, eng.graph.adjacency,
-                                     n_samps[j] * r)
-        for i, eng in enumerate(row_engines):
-            ledger.log_gossip_rounds(schedule, eng.graph.adjacency,
-                                     dims[i] * r)
-        ledger.log_gossip_rounds(np.full(t_outer, passes * t_c_qr),
-                                 col_engines[0].graph.adjacency, r * r)
-        error_trace = np.asarray(errs) if trace_err else None
-    else:
-        errs = [] if trace_err else None
-        for t in range(t_outer):
-            t_c_t = int(schedule[t])
-            # --- stage 1: per column j, consensus-sum the (n_j x r) partials
-            s_cols = []
-            for j in range(n_cols):
-                z0 = jnp.stack([blocks[i][j].T @ q_rows[i]
-                                for i in range(n_rows)])      # (I, n_j, r)
-                s = col_engines[j].run_debiased(z0, t_c_t, ledger)
-                s_cols.append(s.mean(0))   # all column members now agree (≈)
-
-            # --- stage 2: per row i, consensus-sum the (d_i x r) expansions
-            new_rows = []
-            for i in range(n_rows):
-                z0 = jnp.stack([blocks[i][j] @ s_cols[j]
-                                for j in range(n_cols)])      # (J, d_i, r)
-                w = row_engines[i].run_debiased(z0, t_c_t, ledger)
-                new_rows.append(w.mean(0))
-
-            # --- stage 3: distributed CholeskyQR across feature slabs
-            q_rows = distributed_cholesky_qr(new_rows, col_engines[0],
-                                             t_c_qr, ledger, passes=passes)
-            if errs is not None:
-                errs.append(float(subspace_error(
-                    q_true, jnp.concatenate(q_rows, axis=0))))
-        error_trace = np.asarray(errs) if errs is not None else None
+        # --- stage 3: distributed CholeskyQR across feature slabs
+        q_rows = distributed_cholesky_qr(new_rows, col_engines[0],
+                                         t_c_qr, ledger, passes=passes)
+        if errs is not None:
+            errs.append(float(subspace_error(
+                q_true, jnp.concatenate(q_rows, axis=0))))
+    error_trace = np.asarray(errs) if errs is not None else None
 
     return BDOTResult(
         q_rows=q_rows,

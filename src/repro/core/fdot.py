@@ -28,20 +28,20 @@ Execution modes (``fused`` flag, same architecture as sdot.py):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import runtime
 from .async_gossip import masked_async_rounds
 from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .linalg import orthonormal_init
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
 from ..kernels import ops as kops
 
-__all__ = ["FDOTResult", "fdot", "distributed_cholesky_qr",
+__all__ = ["FDOTResult", "fdot", "fdot_program", "distributed_cholesky_qr",
            "pad_feature_slabs", "unpad_feature_slabs", "split_pad_rows"]
 
 
@@ -121,7 +121,7 @@ def _solve_from_gram_sum(gsum, v):
     """Finish one in-scan CholeskyQR pass from consensus-summed Grams:
     symmetrize + jitter, Cholesky, and the per-node triangular solve over
     the padded (N, d_max, r) slabs. Shared by the sync (_qr_pass) and async
-    (_fused_async_fdot_run) executors so the numerics cannot diverge."""
+    (_fdot_async_outer_body) executors so the numerics cannot diverge."""
     r = v.shape[-1]
     g = (0.5 * (gsum + jnp.swapaxes(gsum, 1, 2))
          + 1e-10 * jnp.eye(r, dtype=v.dtype))
@@ -142,9 +142,9 @@ def _fdot_outer_body(x_pad, w, table, qtrue_pad, *, t_max: int, t_c_qr: int,
                      passes: int, trace_err: bool):
     """Build the per-outer-iteration body ``(q_pad, t_c) -> (q_new, err)``.
 
-    One definition feeds the whole-run scan (``_fused_fdot_run``) and the
-    chunked streaming executor (``streaming/resume.py``), so a run split at
-    chunk boundaries replays the monolithic scan bit for bit. No node mask
+    One definition feeds every runtime driver (monolithic, chunked, sweep —
+    via ``_fdot_build_body``), so a run split at chunk boundaries replays
+    the monolithic scan bit for bit. No node mask
     is needed here (unlike the S-DOT body): ragged-N F-DOT cases pad with
     all-zero slabs, which contribute exactly nothing to every product
     including the error cross term.
@@ -204,46 +204,99 @@ def _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad, *, t_max: int,
     return outer
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fused_fdot_run(x_pad, w, table, sched, q0_pad, qtrue_pad, *,
-                    t_max: int, t_c_qr: int, passes: int, trace_err: bool):
-    """One compiled program for a whole F-DOT run.
+def _fdot_build_body(operands, *, t_max: int, t_c_qr: int, passes: int,
+                     trace_err: bool, is_async: bool):
+    """Runtime body builder for F-DOT (the Program protocol's
+    ``build_body``) — adapts the same outer-iteration bodies the monolithic
+    executor uses, so every driver steps through identical math. Async
+    programs make three key splits per outer iteration (partial-product
+    phase, QR pass 1, QR pass 2) in eager-oracle order."""
+    if is_async:
+        x_pad, w, adj, p_awake, qtrue_pad = operands
+        return _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad,
+                                      t_max=t_max, t_c_qr=t_c_qr,
+                                      passes=passes, trace_err=trace_err)
+    x_pad, w, table, qtrue_pad = operands
+    return runtime.sync_body(
+        _fdot_outer_body(x_pad, w, table, qtrue_pad, t_max=t_max,
+                         t_c_qr=t_c_qr, passes=passes, trace_err=trace_err))
 
-    x_pad: (N, d_max, n) zero-padded slabs; sched: (T_o,) int32 consensus
-    budgets for the partial-product phase; t_c_qr: static constant budget of
-    each QR consensus pass (its gossip scan is exactly t_c_qr rounds — no
-    masking needed); table: (t_max+1, N) debias rows [W^t e_1] with
-    t_max >= max(sched.max(), t_c_qr); q0_pad / qtrue_pad: (N, d_max, r)
-    zero-row-padded slab stacks. Returns (q_pad, (T_o,) error trace — zeros
-    when trace_err is False).
+
+def fdot_program(
+    *,
+    data_blocks: Sequence[jnp.ndarray],
+    engine,
+    r: int,
+    t_outer: int,
+    t_c: int = 50,
+    t_c_qr: Optional[int] = None,
+    schedule: Optional[np.ndarray] = None,
+    q_init: Optional[jnp.ndarray] = None,
+    q_true: Optional[jnp.ndarray] = None,
+    seed: int = 0,
+) -> runtime.Program:
+    """Register an F-DOT run with the unified executor runtime.
+
+    ``runtime.run_monolithic`` reproduces ``fdot(fused=True)``;
+    ``runtime.run_chunked`` is the restartable twin (streaming/resume.py),
+    including async engines — the per-iteration RNG splits ride in the
+    checkpointed key.
     """
-    outer = _fdot_outer_body(x_pad, w, table, qtrue_pad, t_max=t_max,
-                             t_c_qr=t_c_qr, passes=passes,
-                             trace_err=trace_err)
-    return jax.lax.scan(outer, q0_pad, sched)
+    prep = _prepare_fdot(data_blocks=data_blocks, engine=engine, r=r,
+                         t_outer=t_outer, t_c=t_c, t_c_qr=t_c_qr,
+                         schedule=schedule, q_init=q_init, q_true=q_true,
+                         seed=seed)
+    x_pad, q0_pad, qtrue_pad = prep["pads"]()
+    t_max, t_c_qr, passes = prep["t_max"], prep["t_c_qr"], prep["passes"]
+    trace_err, is_async = prep["trace_err"], prep["is_async"]
+    sched_np = prep["schedule"]
+    n_samples, dims = prep["n_samples"], prep["dims"]
 
+    if is_async:
+        operands = (x_pad, engine._w, engine._adj,
+                    jnp.asarray(engine.p_awake, jnp.float32), qtrue_pad)
+        key0, tail = engine._key, (1 + passes, t_max)
+    else:
+        if not hasattr(engine, "debias_table"):
+            raise ValueError("fused F-DOT needs a fused-capable engine "
+                             "(debias_table) or an async engine")
+        operands = (x_pad, engine._w, engine.debias_table(t_max), qtrue_pad)
+        key0, tail = None, ()
 
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fused_async_fdot_run(x_pad, w, adj, p_awake, key0, sched, q0_pad,
-                          qtrue_pad, *, t_max: int, t_c_qr: int, passes: int,
-                          trace_err: bool):
-    """One compiled program for a whole *async* F-DOT run.
+    def finalize(state: runtime.RunState, done: int) -> FDOTResult:
+        adj = engine.graph.adjacency
+        if is_async:
+            if done == t_outer:
+                engine._key = state.key
+            ledger = runtime.async_ledger(
+                sched_np[:done], state.sends[:done], state.counts[:done],
+                lambda s: (float(s[:, 0].sum()) * n_samples * r
+                           + float(s[:, 1:].sum()) * r * r),
+                lambda t_c_t: [((0,), t_c_t)] + [((1 + p,), t_c_qr)
+                                                 for p in range(passes)])
+        else:
+            ledger = CommLedger()
+            ledger.log_gossip_rounds(sched_np[:done], adj, n_samples * r)
+            ledger.log_gossip_rounds(np.full(done, passes * t_c_qr), adj,
+                                     r * r)
+        return FDOTResult(
+            q_blocks=unpad_feature_slabs(state.q, dims),
+            error_trace=(np.asarray(state.errs[:done]) if trace_err
+                         else None),
+            ledger=ledger,
+        )
 
-    Same layout as _fused_fdot_run but every consensus (the partial-product
-    phase and each QR pass) is realized-matrix async gossip with its own
-    (t_max, N) awake-mask block drawn from the carried RNG key — three key
-    splits per outer iteration, in the order the eager oracle consumes them
-    (partial, QR pass 1, QR pass 2). Returns (q_pad, key_final, (T_o,) errs,
-    (T_o, 1+passes, t_max) sends, (T_o, 1+passes, t_max) awake counts).
-    """
-    outer = _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad,
-                                   t_max=t_max, t_c_qr=t_c_qr, passes=passes,
-                                   trace_err=trace_err)
-    (q_pad, key), (errs, sends, counts) = jax.lax.scan(
-        outer, (q0_pad, key0), sched)
-    return q_pad, key, errs, sends, counts
+    return runtime.Program(
+        build_body=_fdot_build_body,
+        operands=operands,
+        statics=(("t_max", t_max), ("t_c_qr", t_c_qr), ("passes", passes),
+                 ("trace_err", trace_err), ("is_async", is_async)),
+        xs=sched_np,
+        q0=q0_pad,
+        key0=key0,
+        tail=tail,
+        finalize=finalize,
+    )
 
 
 def _prepare_fdot(*, data_blocks, engine, r, t_outer, t_c, t_c_qr, schedule,
@@ -318,82 +371,48 @@ def fdot(
     ``schedule`` overrides ``t_c`` with per-outer-iteration consensus budgets
     for the partial-product phase (the QR phase keeps the constant
     ``t_c_qr``). ``fused=True`` (default) executes the whole run as a single
-    compiled scan over zero-padded slabs; ``fused=False`` is the eager
+    compiled scan over zero-padded slabs (a thin shim over
+    ``runtime.run_monolithic``); ``fused=False`` is the eager
     per-iteration oracle.
     """
+    # async engines get their own whole-run scan; any other engine without
+    # the scan interface runs eagerly
+    if fused and (hasattr(engine, "sample_awake")
+                  or hasattr(engine, "debias_table")):
+        return runtime.run_monolithic(fdot_program(
+            data_blocks=data_blocks, engine=engine, r=r, t_outer=t_outer,
+            t_c=t_c, t_c_qr=t_c_qr, schedule=schedule, q_init=q_init,
+            q_true=q_true, seed=seed))
+
     prep = _prepare_fdot(data_blocks=data_blocks, engine=engine, r=r,
                          t_outer=t_outer, t_c=t_c, t_c_qr=t_c_qr,
                          schedule=schedule, q_init=q_init, q_true=q_true,
                          seed=seed)
-    dims, d, n_samples = prep["dims"], prep["d"], prep["n_samples"]
     t_c_qr, passes = prep["t_c_qr"], prep["passes"]
     schedule, q_blocks = prep["schedule"], prep["q_blocks"]
     is_async, t_max = prep["is_async"], prep["t_max"]
-    trace_err = prep["trace_err"]
 
     ledger = CommLedger()
-
-    # async engines get their own whole-run scan; any other engine without
-    # the scan interface runs eagerly
-    if fused and not (is_async or hasattr(engine, "debias_table")):
-        fused = False
-
-    if fused and is_async:
-        x_pad, q0_pad, qtrue_pad = prep["pads"]()
-        q_pad, key_final, errs, sends, counts = _fused_async_fdot_run(
-            x_pad, engine._w, engine._adj,
-            jnp.asarray(engine.p_awake, jnp.float32), engine._key,
-            jnp.asarray(schedule, jnp.int32), q0_pad, qtrue_pad,
-            t_max=t_max, t_c_qr=int(t_c_qr), passes=passes,
-            trace_err=trace_err)
-        engine._key = key_final
-        q_blocks = unpad_feature_slabs(q_pad, dims)
-        sends_np = np.asarray(sends, np.float64)   # (T_o, 1+passes, t_max)
-        total = float(sends_np.sum())
-        ledger.p2p += total
-        ledger.matrices += total
-        ledger.scalars += (float(sends_np[:, 0].sum()) * n_samples * r
-                           + float(sends_np[:, 1:].sum()) * r * r)
-        counts_np = np.asarray(counts)
-        for t in range(t_outer):
-            ledger.log_awake_rounds(counts_np[t, 0, :int(schedule[t])])
-            for p in range(passes):
-                ledger.log_awake_rounds(counts_np[t, 1 + p, :int(t_c_qr)])
-        error_trace = np.asarray(errs) if trace_err else None
-    elif fused:
-        table = engine.debias_table(t_max)
-        x_pad, q0_pad, qtrue_pad = prep["pads"]()
-        q_pad, errs = _fused_fdot_run(
-            x_pad, engine._w, table, jnp.asarray(schedule, jnp.int32),
-            q0_pad, qtrue_pad, t_max=t_max, t_c_qr=int(t_c_qr),
-            passes=passes, trace_err=trace_err)
-        q_blocks = unpad_feature_slabs(q_pad, dims)
-        adj = engine.graph.adjacency
-        ledger.log_gossip_rounds(schedule, adj, n_samples * r)
-        ledger.log_gossip_rounds(np.full(t_outer, passes * t_c_qr), adj,
-                                 r * r)
-        error_trace = np.asarray(errs) if trace_err else None
-    else:
-        errs = [] if q_true is not None else None
-        for t in range(t_outer):
-            # step 1-2: consensus over the (n x r) partial products
-            z0 = jnp.stack([x.T @ q for x, q in zip(data_blocks, q_blocks)])
-            if is_async:
-                awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
-                s = engine.run_debiased(z0, int(schedule[t]), ledger,
-                                        awake=awake)
-            else:
-                s = engine.run_debiased(z0, int(schedule[t]), ledger)
-            # step 3: local expansion
-            v_blocks = [x @ s[i] for i, x in enumerate(data_blocks)]
-            # step 4: distributed orthonormalization
-            q_blocks = distributed_cholesky_qr(
-                v_blocks, engine, t_c_qr, ledger, passes=passes,
-                awake_pad=t_max if is_async else None)
-            if errs is not None:
-                q_full = jnp.concatenate(q_blocks, axis=0)
-                errs.append(float(subspace_error(q_true, q_full)))
-        error_trace = np.asarray(errs) if errs is not None else None
+    errs = [] if q_true is not None else None
+    for t in range(t_outer):
+        # step 1-2: consensus over the (n x r) partial products
+        z0 = jnp.stack([x.T @ q for x, q in zip(data_blocks, q_blocks)])
+        if is_async:
+            awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
+            s = engine.run_debiased(z0, int(schedule[t]), ledger,
+                                    awake=awake)
+        else:
+            s = engine.run_debiased(z0, int(schedule[t]), ledger)
+        # step 3: local expansion
+        v_blocks = [x @ s[i] for i, x in enumerate(data_blocks)]
+        # step 4: distributed orthonormalization
+        q_blocks = distributed_cholesky_qr(
+            v_blocks, engine, t_c_qr, ledger, passes=passes,
+            awake_pad=t_max if is_async else None)
+        if errs is not None:
+            q_full = jnp.concatenate(q_blocks, axis=0)
+            errs.append(float(subspace_error(q_true, q_full)))
+    error_trace = np.asarray(errs) if errs is not None else None
 
     return FDOTResult(
         q_blocks=q_blocks,

@@ -141,6 +141,15 @@ class CommLedger:
             self.awake_counts + other.awake_counts,
         )
 
+    def merge_from(self, other: "CommLedger") -> None:
+        """In-place accumulate ``other`` (callers that own a running ledger
+        fold a finished run's accounting into it, e.g. the fused baselines
+        merging their Program's closed-form ledger)."""
+        self.p2p += other.p2p
+        self.matrices += other.matrices
+        self.scalars += other.scalars
+        self.awake_counts.extend(other.awake_counts)
+
 
 def _ledger_flatten(ledger: CommLedger):
     # awake_counts travels as one float64 leaf so the whole ledger round-trips

@@ -38,7 +38,6 @@ one compiled SPMD program instead of one collective dispatch per iteration.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Sequence
 
 import jax
@@ -46,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from . import runtime
 from .async_gossip import masked_async_rounds
 from .compat import shard_map
 from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
@@ -53,7 +53,8 @@ from .linalg import cholesky_qr2, orthonormal_init
 from .metrics import CommLedger, mean_subspace_error, subspace_error
 from ..kernels import ops as kops
 
-__all__ = ["SDOTResult", "sdot", "sadot", "sdot_spmd", "local_cov_apply"]
+__all__ = ["SDOTResult", "sdot", "sadot", "sdot_program", "sdot_spmd",
+           "local_cov_apply"]
 
 
 @dataclasses.dataclass
@@ -106,10 +107,10 @@ def _sync_outer_body(operand, w, table, q_true, node_mask, *, mode: str,
                      t_max: int, trace_err: bool):
     """Build the per-outer-iteration body ``(q_nodes, t_c) -> (q_new, err)``.
 
-    ONE definition feeds both the whole-run scan (``_fused_run``) and the
-    chunked streaming executor (``streaming/resume.py``), so a run split at
-    arbitrary chunk boundaries replays the monolithic scan bit for bit —
-    the math cannot drift between the two callers.
+    ONE definition feeds every runtime driver (monolithic, chunked, sweep —
+    via ``_sdot_build_body``), so a run split at arbitrary chunk boundaries
+    replays the monolithic scan bit for bit — the math cannot drift between
+    the callers.
     """
 
     def outer(q_nodes, t_c):
@@ -148,42 +149,101 @@ def _async_outer_body(operand, w, adj, p_awake, q_true, *, mode: str,
     return outer
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
-def _fused_run(operand, w, table, sched, q0_nodes, q_true, node_mask, *,
-               mode: str, t_max: int, trace_err: bool):
-    """One compiled program for a whole S-DOT/SA-DOT run.
+def _sdot_build_body(operands, *, mode: str, t_max: int, trace_err: bool,
+                     is_async: bool):
+    """Runtime body builder for S-DOT/SA-DOT (the Program protocol's
+    ``build_body``) — a thin adapter over the SAME outer-iteration bodies
+    the executors have always used, so every driver (monolithic, chunked,
+    sweep) steps through identical per-iteration math."""
+    if mode == "cov":
+        op, rest = operands[0], operands[1:]
+    else:
+        op, rest = (operands[0], operands[1]), operands[2:]
+    if is_async:
+        w, adj, p_awake, q_true = rest
+        return _async_outer_body(op, w, adj, p_awake, q_true, mode=mode,
+                                 t_max=t_max, trace_err=trace_err)
+    w, table, q_true, node_mask = rest
+    return runtime.sync_body(
+        _sync_outer_body(op, w, table, q_true, node_mask, mode=mode,
+                         t_max=t_max, trace_err=trace_err))
 
-    operand: covs (N,d,d) for mode='cov'; (x_stack, n_true) for mode='data'.
-    sched: (T_o,) int32 consensus budgets; t_max: static max budget (inner
-    masked-scan length); table: (t_max+1, N) debias rows [W^t e_1];
-    node_mask: (N,) 1.0 for real nodes — the ragged-N sweep engine pads
-    small networks to N_max with isolated identity nodes (block-diagonal W)
-    and masks them out of the error trace; plain runs pass all ones.
-    Returns (q_nodes, (T_o,) error trace — zeros when trace_err is False).
+
+def sdot_program(
+    *,
+    covs=None,
+    data: Optional[Sequence[jnp.ndarray]] = None,
+    engine,
+    r: int,
+    t_outer: int,
+    schedule: Optional[np.ndarray] = None,
+    t_c: int = 50,
+    q_init: Optional[jnp.ndarray] = None,
+    q_true: Optional[jnp.ndarray] = None,
+    seed: int = 0,
+) -> runtime.Program:
+    """Register an S-DOT/SA-DOT run with the unified executor runtime.
+
+    Built from the same ``_prepare_sdot`` pieces as the eager oracle, so a
+    Program run under any driver starts from literally the same device
+    values. ``runtime.run_monolithic`` reproduces ``sdot(fused=True)``;
+    ``runtime.run_chunked`` is the restartable twin (streaming/resume.py).
     """
-    outer = _sync_outer_body(operand, w, table, q_true, node_mask,
-                             mode=mode, t_max=t_max, trace_err=trace_err)
-    return jax.lax.scan(outer, q0_nodes, sched)
+    prep = _prepare_sdot(covs=covs, data=data, engine=engine, r=r,
+                         t_outer=t_outer, schedule=schedule, t_c=t_c,
+                         q_init=q_init, q_true=q_true, seed=seed)
+    n, d = prep["n"], prep["d"]
+    t_max, trace_err, q_arg = prep["t_max"], prep["trace_err"], prep["q_arg"]
+    sched_np = prep["sched_np"]
+    is_async = prep["is_async"]
+    mode = prep["mode"]
+    op_flat = ((prep["operand"],) if mode == "cov" else
+               tuple(prep["operand"]))
+    if is_async:
+        operands = op_flat + (engine._w, engine._adj,
+                              jnp.asarray(engine.p_awake, jnp.float32),
+                              q_arg)
+        key0, tail = engine._key, (t_max,)
+    else:
+        if not hasattr(engine, "debias_table"):
+            raise ValueError("fused S-DOT needs a fused-capable engine "
+                             "(debias_table) or an async engine")
+        operands = op_flat + (engine._w, engine.debias_table(t_max), q_arg,
+                              jnp.ones((n,), jnp.float32))
+        key0, tail = None, ()
+    payload = d * r
 
+    def finalize(state: runtime.RunState, done: int) -> SDOTResult:
+        if is_async:
+            if done == t_outer:
+                engine._key = state.key   # same stream position as eager
+            ledger = runtime.async_ledger(
+                sched_np[:done], state.sends[:done], state.counts[:done],
+                lambda s: float(s.sum()) * payload,
+                lambda t_c_t: [(slice(None), t_c_t)])
+        else:
+            ledger = CommLedger()
+            ledger.log_gossip_rounds(sched_np[:done],
+                                     engine.graph.adjacency, payload)
+        return SDOTResult(
+            q_nodes=state.q,
+            error_trace=(np.asarray(state.errs[:done]) if trace_err
+                         else None),
+            consensus_trace=sched_np[:done],
+            ledger=ledger,
+        )
 
-@functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
-def _fused_async_sdot(operand, w, adj, p_awake, key0, sched, q0_nodes,
-                      q_true, *, mode: str, t_max: int, trace_err: bool):
-    """One compiled program for a whole *async* S-DOT/SA-DOT run.
-
-    The straggler path's last host loop, closed: the RNG key is carried
-    through the outer scan; each iteration splits it, draws a (t_max, N)
-    awake-mask block, and runs t_c realized-matrix gossip rounds with the
-    realized-product debias (masked_async_rounds). Returns
-    (q_nodes, key_final, (T_o,) errs, (T_o, t_max) sends, (T_o, t_max)
-    awake counts) — masked rounds contribute zero sends/counts, so the
-    ledger is recovered exactly from the stacked outputs.
-    """
-    outer = _async_outer_body(operand, w, adj, p_awake, q_true,
-                              mode=mode, t_max=t_max, trace_err=trace_err)
-    (q_nodes, key), (errs, sends, counts) = jax.lax.scan(
-        outer, (q0_nodes, key0), sched)
-    return q_nodes, key, errs, sends, counts
+    return runtime.Program(
+        build_body=_sdot_build_body,
+        operands=operands,
+        statics=(("mode", mode), ("t_max", t_max), ("trace_err", trace_err),
+                 ("is_async", is_async)),
+        xs=sched_np,
+        q0=prep["q_nodes"],
+        key0=key0,
+        tail=tail,
+        finalize=finalize,
+    )
 
 
 def _prepare_sdot(*, covs, data, engine, r, t_outer, schedule, t_c, q_init,
@@ -256,66 +316,43 @@ def sdot(
     Exactly one of ``covs`` (N, d, d) or ``data`` (list of (d, n_i)) must be
     given. ``schedule`` overrides ``t_c`` (constant) and makes this SA-DOT.
     ``fused=True`` (default) executes the whole run as a single compiled
-    scan; ``fused=False`` is the eager per-iteration oracle.
+    scan (a thin shim over ``runtime.run_monolithic``); ``fused=False`` is
+    the eager per-iteration oracle.
     """
+    # async engines get their own whole-run scan (the RNG key rides in the
+    # carry); any other engine without the scan interface runs eagerly
+    if fused and (hasattr(engine, "sample_awake")
+                  or hasattr(engine, "debias_table")):
+        return runtime.run_monolithic(sdot_program(
+            covs=covs, data=data, engine=engine, r=r, t_outer=t_outer,
+            schedule=schedule, t_c=t_c, q_init=q_init, q_true=q_true,
+            seed=seed))
+
     prep = _prepare_sdot(covs=covs, data=data, engine=engine, r=r,
                          t_outer=t_outer, schedule=schedule, t_c=t_c,
                          q_init=q_init, q_true=q_true, seed=seed)
-    n, d = prep["n"], prep["d"]
     operand, mode = prep["operand"], prep["mode"]
     q_nodes, schedule = prep["q_nodes"], prep["schedule"]
-    sched_np, sched_dev = prep["sched_np"], prep["sched_dev"]
-    t_max, trace_err, q_arg = prep["t_max"], prep["trace_err"], prep["q_arg"]
+    t_max = prep["t_max"]
     is_async = prep["is_async"]
 
     ledger = CommLedger()
-    payload = d * r
-
-    # async engines get their own whole-run scan (the RNG key rides in the
-    # carry); any other engine without the scan interface runs eagerly
-    if fused and not (is_async or hasattr(engine, "debias_table")):
-        fused = False
-
-    if fused and is_async:
-        q_nodes, key_final, errs, sends, counts = _fused_async_sdot(
-            operand, engine._w, engine._adj,
-            jnp.asarray(engine.p_awake, jnp.float32), engine._key,
-            sched_dev, q_nodes, q_arg, mode=mode, t_max=t_max,
-            trace_err=trace_err)
-        engine._key = key_final   # same stream position as t_outer eager draws
-        total = float(np.asarray(sends, np.float64).sum())
-        ledger.p2p += total
-        ledger.matrices += total
-        ledger.scalars += total * payload
-        counts_np = np.asarray(counts)
-        for t in range(t_outer):
-            ledger.log_awake_rounds(counts_np[t, :int(sched_np[t])])
-        error_trace = np.asarray(errs) if trace_err else None
-    elif fused:
-        table = engine.debias_table(t_max)
-        q_nodes, errs = _fused_run(
-            operand, engine._w, table, sched_dev, q_nodes, q_arg,
-            jnp.ones((n,), jnp.float32), mode=mode, t_max=t_max,
-            trace_err=trace_err)
-        ledger.log_gossip_rounds(sched_np, engine.graph.adjacency, payload)
-        error_trace = np.asarray(errs) if trace_err else None
-    else:
-        errs = [] if q_true is not None else None
-        for t in range(t_outer):
-            z0 = _apply_operand(operand, mode, q_nodes)           # (N, d, r)
-            if is_async:
-                # draw with the fused executor's padded shape so a seeded
-                # eager run replays the fused scan round for round
-                awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
-                v = engine.run_debiased(z0, int(schedule[t]), ledger,
-                                        awake=awake)
-            else:
-                v = engine.run_debiased(z0, int(schedule[t]), ledger)
-            q_nodes = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
-            if errs is not None:
-                e = jax.vmap(lambda qq: subspace_error(q_true, qq))(q_nodes)
-                errs.append(float(e.mean()))
-        error_trace = np.asarray(errs) if errs is not None else None
+    errs = [] if q_true is not None else None
+    for t in range(t_outer):
+        z0 = _apply_operand(operand, mode, q_nodes)               # (N, d, r)
+        if is_async:
+            # draw with the fused executor's padded shape so a seeded
+            # eager run replays the fused scan round for round
+            awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
+            v = engine.run_debiased(z0, int(schedule[t]), ledger,
+                                    awake=awake)
+        else:
+            v = engine.run_debiased(z0, int(schedule[t]), ledger)
+        q_nodes = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+        if errs is not None:
+            e = jax.vmap(lambda qq: subspace_error(q_true, qq))(q_nodes)
+            errs.append(float(e.mean()))
+    error_trace = np.asarray(errs) if errs is not None else None
 
     return SDOTResult(
         q_nodes=q_nodes,

@@ -1,54 +1,55 @@
-"""Vmapped Monte-Carlo sweep engine over the fused algorithm zoo.
+"""Monte-Carlo sweep engine over the unified executor runtime.
 
 The paper's Figs. 4-6 are Monte-Carlo averages over random initializations
-(and the tables sweep topologies and consensus schedules). With the fused
-whole-run executors (sdot.py, fdot.py, baselines.py) a full sweep collapses
-into a single compiled program and ONE device call:
+(and the tables sweep topologies and consensus schedules). Each sweep here
+is ONE ``runtime.Program`` with a stacked case axis (topology x schedule)
+on its operands and (case, seed) lane axes on its carry —
+``runtime.run_sweep`` vmaps the family's OWN scan body over the grid, so a
+full sweep compiles once and runs in one device call:
 
-* the **seed axis** is a ``jax.vmap`` over per-seed orthonormal inits;
-* the **case axis** (topology x schedule) is a second ``vmap`` over the
-  stacked weight matrices, debias tables, and schedule arrays — all dense
-  (N, N) / (t_max+1, N) / (T_o,) arrays, so heterogeneous graphs stack as
-  long as they share the node count;
+* the **seed axis** vmaps per-seed orthonormal inits;
+* the **case axis** vmaps the stacked weight matrices, debias tables, and
+  schedule arrays — all dense (N, N) / (t_max+1, N) / (T_o,) arrays, so
+  heterogeneous graphs stack as long as they share the node count;
 * **ragged node counts** (the Table-II connectivity axis: ER N=10 next to
-  ring N=20) stack too (shared helpers: ``sweep_utils``):
-  - ``sdot_sweep`` / ``baseline_sweep`` (dsa / dpgd / deepca), covs mode:
-    pass one cov stack per case and every case is padded to N_max with
-    *isolated identity nodes* — W becomes block-diag(W, I) (the padding
-    rows are identity, so padded nodes never mix with real ones), the
-    padded covs are identity (keeping the padded iterates finite), the
-    debias table is built from the padded W, and a node mask keeps the
-    padded estimates out of the error trace. Padded-vs-unpadded traces are
-    bit-comparable because a real node's gossip row has exact zeros
-    against every padded node.
-  - ``fdot_sweep``: pass one slab *list* per case and every case is padded
-    to N_max with *all-zero slabs* (plus zero rows up to the sweep-wide
-    d_max).  Zero slabs are self-masking — they contribute exactly nothing
-    to any product in Alg. 2, including the error cross term — so the
-    feature-partitioned path needs no node mask at all.
+  ring N=20) stack too: ``sdot_sweep`` / ``baseline_sweep`` (dsa / dpgd /
+  deepca) pad each per-case cov stack to N_max with *isolated identity
+  nodes* (block-diag(W, I) weights, identity covs, node-masked error
+  trace); ``fdot_sweep`` pads per-case slab lists with *all-zero slabs*,
+  exact no-ops in every product of Alg. 2, so no mask is needed. See
+  ``sweep_utils`` for why the padding is exact; padded traces match the
+  unpadded per-case runs bit-comparably.
 
-Compare: the eager zoo runs seeds x cases x t_outer Python iterations with a
-host sync each — the sweep engine runs one dispatch total, and the whole
-(C, S, T_o) error-trace tensor comes back in a single transfer
-(benchmarks/sweep_bench.py measures the win; tests/test_fused_zoo.py pins
-sweep == per-seed fused runs).
+Because sweeps are ordinary runtime Programs they inherit the chunked
+driver for free: pass ``manager``/``chunk_size`` and the sweep-RunState
+checkpoints at chunk boundaries — a killed multi-day sweep worker resumes
+MID-GRID, bitwise equal to the uninterrupted sweep
+(``streaming/worker.py`` runs exactly this path).
+
+Compare: the eager zoo runs seeds x cases x t_outer Python iterations with
+a host sync each — the sweep engine runs one dispatch total and the whole
+(C, S, T_o) error tensor comes back in one transfer (benchmarks/
+sweep_bench.py measures the win; tests/test_fused_zoo.py pins sweep ==
+per-seed fused runs).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Union
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .baselines import (_fused_d_pm, _fused_deepca, _fused_dpgd, _fused_dsa,
-                        _fused_seq_dist_pm)
+from . import runtime
+from .baselines import (_d_pm_build_body, _deepca_build_body,
+                        _dpgd_build_body, _dsa_build_body,
+                        _seq_dist_pm_build_body)
 from .consensus import DenseConsensus, consensus_schedule, debias_table
-from .fdot import pad_feature_slabs, split_pad_rows
+from .fdot import _fdot_build_body, pad_feature_slabs, split_pad_rows
 from .linalg import orthonormal_init
 from .metrics import CommLedger
-from .sdot import _fused_run, _stack_data, local_cov_apply
+from .sdot import _sdot_build_body, _stack_data
 from .sweep_utils import (broadcast_per_case, case_node_masks,
                           pad_covs_identity, pad_weights_identity,
                           pad_zero_nodes)
@@ -66,6 +67,12 @@ class SweepResult:
     ``node_counts`` is set by ragged-N sweeps: ``q[c]`` then has node axis
     N_max and only the first ``node_counts[c]`` entries are real (the rest
     are the isolated identity-padding nodes).
+
+    ``steps_done`` counts completed outer iterations (< t_outer only for a
+    chunked sweep killed mid-grid; traces cover the completed prefix) and
+    ``resumed_step`` is the outer step the restored sweep-RunState carried
+    (0 = fresh). ``resume_report`` is filled by the multi-host launcher
+    when resuming a workdir: reused shards + per-worker resumed steps.
     """
 
     q: jnp.ndarray                 # (C?, S, ...) final estimates
@@ -73,6 +80,9 @@ class SweepResult:
     ledger: CommLedger             # aggregate communication over all runs
     seeds: np.ndarray
     node_counts: Optional[np.ndarray] = None
+    steps_done: Optional[int] = None
+    resumed_step: int = 0
+    resume_report: Optional[dict] = None
 
     def _traces(self) -> np.ndarray:
         if self.error_traces is None:
@@ -124,20 +134,67 @@ def _broadcast_cases(engines, schedules, t_outer, t_c, allow_ragged=False):
     return engines, [s[:t_outer] for s in schedules]
 
 
-# retained names for callers that grew up with the in-module helpers
-_pad_weights_identity = pad_weights_identity
-_pad_covs_identity = pad_covs_identity
-
-
-def _case_stacks(engines, schedules, t_max):
+def _case_stacks(engines, t_max):
     ws = jnp.stack([e._w for e in engines])
     tables = jnp.stack([e.debias_table(t_max) for e in engines])
-    scheds = jnp.asarray(np.stack(schedules), jnp.int32)
-    return ws, tables, scheds
+    return ws, tables
+
+
+def _ragged_stacks(engines, t_max):
+    """Identity-padded (C, N_max, N_max) weights + debias tables + masks for
+    a mixed-node-count case axis."""
+    n_list = [e.graph.n_nodes for e in engines]
+    n_max = max(n_list)
+    ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
+                    for e in engines])
+    tables = jnp.stack([debias_table(w, t_max) for w in ws])
+    masks = case_node_masks(n_list, n_max)                   # (C, N_max)
+    return ws, tables, masks, n_list, n_max
+
+
+def _check_case_covs(case_covs, engines):
+    for c, e in zip(case_covs, engines):
+        if c.shape[0] != e.graph.n_nodes:
+            raise ValueError("per-case covs must match each engine's node "
+                             f"count: got {c.shape[0]} covs for an "
+                             f"{e.graph.n_nodes}-node graph")
 
 
 def _squeeze_case(arr, single_case: bool):
     return arr[0] if single_case else arr
+
+
+def _lane_q0(q0, n_cases: int):
+    """Broadcast (S, ...) per-seed carry leaves to (C, S, ...) lanes."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_cases,) + a.shape), q0)
+
+
+def _sweep_result(state, done, *, q_map, trace_err, single_case, ledger,
+                  seeds, node_counts=None):
+    errs = state.errs[..., :done]
+    return SweepResult(
+        q=_squeeze_case(q_map(state.q), single_case),
+        error_traces=(np.asarray(_squeeze_case(errs, single_case))
+                      if trace_err else None),
+        ledger=ledger,
+        seeds=np.asarray(list(seeds)),
+        node_counts=node_counts,
+        steps_done=done,
+    )
+
+
+def _run_sweep(build, operands, statics, xs, q0, case_axes, n_cases,
+               n_seeds, finalize, manager, chunk_size, max_chunks):
+    """Assemble the sweep Program and hand it to the runtime driver."""
+    program = runtime.Program(
+        build_body=build, operands=operands, statics=statics, xs=xs, q0=q0,
+        case_axes=case_axes, n_cases=n_cases, n_seeds=n_seeds,
+        finalize=finalize)
+    result = runtime.run_sweep(program, manager=manager,
+                               chunk_size=chunk_size, max_chunks=max_chunks)
+    result.resumed_step = program.restored_step
+    return result
 
 
 def sdot_sweep(
@@ -151,6 +208,9 @@ def sdot_sweep(
     t_c: int = 50,
     seeds: Sequence[int] = (0,),
     q_true: Optional[jnp.ndarray] = None,
+    manager=None,
+    chunk_size: Optional[int] = None,
+    max_chunks: Optional[int] = None,
 ) -> SweepResult:
     """Monte-Carlo S-DOT/SA-DOT sweep: seeds x (topology, schedule) cases in
     one compile + one device call.
@@ -158,14 +218,13 @@ def sdot_sweep(
     ``engines`` / ``schedules`` zip-broadcast into the case axis (pass one
     engine and k schedules, k engines and one schedule, or aligned lists).
     Each seed gets its own orthonormal init (the paper's Monte-Carlo axis).
-
-    ``covs`` is either one (N, d, d) stack shared by every case, or a
-    list/tuple with one (N_c, d, d) stack per case — the per-case form may
-    mix node counts (the Table-II connectivity axis): every case is padded
-    to N_max with isolated identity nodes (see the module docstring) and
-    the result carries ``node_counts`` so callers can slice the padding
-    off ``q``. Error traces are masked to the real nodes and match the
-    unpadded per-case runs exactly.
+    ``covs`` is one (N, d, d) stack shared by every case, or a list with
+    one (N_c, d, d) stack per case (mixed node counts pad with isolated
+    identity nodes — see the module docstring — and the result carries
+    ``node_counts``). ``manager``/``chunk_size`` run the sweep through the
+    chunked driver: the sweep-RunState checkpoints at chunk boundaries and
+    a killed sweep (``max_chunks``) resumes mid-grid, bitwise equal to the
+    uninterrupted sweep.
     """
     if (covs is None) == (data is None):
         raise ValueError("provide exactly one of covs / data")
@@ -173,75 +232,62 @@ def sdot_sweep(
     engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c,
                                           allow_ragged=per_case_covs)
     single_case = len(engines) == 1
-    n_list = [e.graph.n_nodes for e in engines]
     t_max = int(max(int(s.max()) for s in schedules)) if t_outer else 0
     trace_err = q_true is not None
 
     if per_case_covs:
         case_covs = broadcast_per_case([jnp.asarray(c) for c in covs],
                                        len(engines), "covs")
-        for c, e in zip(case_covs, engines):
-            if c.shape[0] != e.graph.n_nodes:
-                raise ValueError("per-case covs must match each engine's "
-                                 f"node count: got {c.shape[0]} covs for an "
-                                 f"{e.graph.n_nodes}-node graph")
+        _check_case_covs(case_covs, engines)
         d = int(case_covs[0].shape[1])
-        n_max = max(n_list)
-        ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
-                        for e in engines])
-        tables = jnp.stack([debias_table(w, t_max) for w in ws])
+        ws, tables, masks, n_list, n_max = _ragged_stacks(engines, t_max)
         covs_pad = jnp.stack([pad_covs_identity(c, n_max)
-                              for c in case_covs])              # (C,N_max,d,d)
-        masks = case_node_masks(n_list, n_max)                  # (C, N_max)
-        scheds = jnp.asarray(np.stack(schedules), jnp.int32)
+                              for c in case_covs])           # (C, N_max, d, d)
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-        q0 = _seed_inits(seeds, d, r)                           # (S, d, r)
-        q0_nodes = jnp.broadcast_to(q0[:, None],
-                                    (len(seeds), n_max, d, r))
-
-        run = lambda w, table, sched, covp, mask, q0n: _fused_run(
-            covp, w, table, sched, q0n, q_arg, mask,
-            mode="cov", t_max=t_max, trace_err=trace_err)
-        over_seeds = jax.vmap(run, in_axes=(None, None, None, None, None, 0))
-        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, None))
-        q_nodes, errs = over_cases(ws, tables, scheds, covs_pad, masks,
-                                   q0_nodes)
+        operands = (covs_pad, ws, tables, q_arg, masks)
+        case_axes = (0, 0, 0, None, 0)
+        mode, n = "cov", n_max
         node_counts = np.asarray(n_list)
     else:
-        n = n_list[0]
+        n = engines[0].graph.n_nodes
         d = covs.shape[1] if covs is not None else data[0].shape[0]
-        ws, tables, scheds = _case_stacks(engines, schedules, t_max)
-
-        if covs is not None:
-            operand, mode = covs, "cov"
-        else:
-            operand, mode = _stack_data(data), "data"
+        ws, tables = _case_stacks(engines, t_max)
+        masks = jnp.ones((len(engines), n), jnp.float32)
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-
-        q0 = _seed_inits(seeds, d, r)                           # (S, d, r)
-        q0_nodes = jnp.broadcast_to(q0[:, None], (len(seeds), n, d, r))
-        ones = jnp.ones((n,), jnp.float32)
-
-        run = lambda w, table, sched, q0n: _fused_run(
-            operand, w, table, sched, q0n, q_arg, ones,
-            mode=mode, t_max=t_max, trace_err=trace_err)
-        over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
-        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
-        q_nodes, errs = over_cases(ws, tables, scheds, q0_nodes)
+        if covs is not None:
+            operands = (covs, ws, tables, q_arg, masks)
+            case_axes = (None, 0, 0, None, 0)
+            mode = "cov"
+        else:
+            x_stack, n_true = _stack_data(data)
+            operands = (x_stack, n_true, ws, tables, q_arg, masks)
+            case_axes = (None, None, 0, 0, None, 0)
+            mode = "data"
         node_counts = None
 
+    q0 = _seed_inits(seeds, d, r)                            # (S, d, r)
+    q0_nodes = jnp.broadcast_to(q0[:, None], (len(seeds), n, d, r))
+
     ledger = CommLedger()
-    for eng, sched in zip(engines, schedules):
-        for _ in seeds:
-            ledger.log_gossip_rounds(sched, eng.graph.adjacency, d * r)
-    return SweepResult(
-        q=_squeeze_case(q_nodes, single_case),
-        error_traces=(np.asarray(_squeeze_case(errs, single_case))
-                      if trace_err else None),
-        ledger=ledger,
-        seeds=np.asarray(list(seeds)),
-        node_counts=node_counts,
-    )
+    payload = d * r
+
+    def finalize(state, done):
+        for eng, sched in zip(engines, schedules):
+            for _ in seeds:
+                ledger.log_gossip_rounds(sched[:done], eng.graph.adjacency,
+                                         payload)
+        return _sweep_result(state, done, q_map=lambda q: q,
+                             trace_err=trace_err, single_case=single_case,
+                             ledger=ledger, seeds=seeds,
+                             node_counts=node_counts)
+
+    return _run_sweep(
+        _sdot_build_body, operands,
+        (("mode", mode), ("t_max", t_max), ("trace_err", trace_err),
+         ("is_async", False)),
+        np.stack(schedules).astype(np.int64), _lane_q0(q0_nodes, len(engines)),
+        case_axes, len(engines), len(list(seeds)), finalize,
+        manager, chunk_size, max_chunks)
 
 
 def fdot_sweep(
@@ -255,19 +301,19 @@ def fdot_sweep(
     t_c_qr: Optional[int] = None,
     seeds: Sequence[int] = (0,),
     q_true: Optional[jnp.ndarray] = None,
+    manager=None,
+    chunk_size: Optional[int] = None,
+    max_chunks: Optional[int] = None,
 ) -> SweepResult:
     """Monte-Carlo F-DOT sweep over padded feature slabs (Fig. 6 axis).
 
-    ``data_blocks`` is either one slab list shared by every case, or a
-    list/tuple of slab *lists* with one per case — the per-case form may mix
-    node counts (different partitionings of the same d features): every case
-    is padded to N_max with all-zero slabs, which are exact no-ops in every
-    product of Alg. 2 (see the module docstring), so the traces match the
-    unpadded per-case runs and no node mask is needed. The result carries
-    ``node_counts`` so callers can slice the padding off ``q``.
+    ``data_blocks`` is one slab list shared by every case, or a list of
+    slab *lists* with one per case (mixed node counts — different
+    partitionings of the same d features — pad with all-zero slabs, exact
+    no-ops in every product of Alg. 2, and the result carries
+    ``node_counts``). ``manager``/``chunk_size`` enable the
+    chunked-resumable driver, as in ``sdot_sweep``.
     """
-    from .fdot import _fused_fdot_run
-
     per_case = (len(data_blocks) > 0
                 and isinstance(data_blocks[0], (list, tuple)))
     engines, schedules = _broadcast_cases(engines, schedules, t_outer, t_c,
@@ -294,33 +340,23 @@ def fdot_sweep(
         if any(sum(dims) != d for dims in case_dims):
             raise ValueError("every case must partition the same d features")
         n_samples = int(case_blocks[0][0].shape[1])
-        n_max = max(n_list)
+        ws, tables, _, _, n_max = _ragged_stacks(engines, t_max)
         d_slab = max(max(dims) for dims in case_dims)
         pad_case = lambda stack: pad_zero_nodes(
             jnp.pad(stack, ((0, 0), (0, d_slab - stack.shape[1]), (0, 0))),
             n_max)
-        x_pads = jnp.stack([pad_case(pad_feature_slabs(blocks))
-                            for blocks in case_blocks])  # (C,N_max,d_slab,n)
-        ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
-                        for e in engines])
-        tables = jnp.stack([debias_table(w, t_max) for w in ws])
-        scheds = jnp.asarray(np.stack(schedules), jnp.int32)
+        x_pad = jnp.stack([pad_case(pad_feature_slabs(blocks))
+                           for blocks in case_blocks])  # (C, N_max, d_slab, n)
         q_seeds = _seed_inits(seeds, d, r)
-        q0_pads = jnp.stack([
+        q0_pad = jnp.stack([
             jnp.stack([pad_case(split_pad_rows(q, dims)) for q in q_seeds])
-            for dims in case_dims])                      # (C,S,N_max,d_slab,r)
-        qtrue_pads = jnp.stack([
+            for dims in case_dims])                      # (C, S, N_max, ..)
+        qtrue_pad = jnp.stack([
             (pad_case(split_pad_rows(q_true, dims)) if trace_err
              else jnp.zeros((n_max, d_slab, r), jnp.float32))
-            for dims in case_dims])                      # (C,N_max,d_slab,r)
-
-        run = lambda w, table, sched, xp, qt, q0p: _fused_fdot_run(
-            xp, w, table, sched, q0p, qt,
-            t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
-        over_seeds = jax.vmap(run, in_axes=(None, None, None, None, None, 0))
-        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, 0, 0, 0))
-        q_pad, errs = over_cases(ws, tables, scheds, x_pads, qtrue_pads,
-                                 q0_pads)
+            for dims in case_dims])                      # (C, N_max, d_slab, r)
+        operands = (x_pad, ws, tables, qtrue_pad)
+        case_axes = (0, 0, 0, 0)
         node_counts = np.asarray(n_list)
     else:
         n_nodes = engines[0].graph.n_nodes
@@ -329,80 +365,39 @@ def fdot_sweep(
         dims = [int(x.shape[0]) for x in data_blocks]
         d = sum(dims)
         n_samples = int(data_blocks[0].shape[1])
-        ws, tables, scheds = _case_stacks(engines, schedules, t_max)
+        ws, tables = _case_stacks(engines, t_max)
 
         x_pad = pad_feature_slabs(data_blocks)
-        q0_pad = jnp.stack([split_pad_rows(q, dims)
-                            for q in _seed_inits(seeds, d, r)])
+        q0_seed = jnp.stack([split_pad_rows(q, dims)
+                             for q in _seed_inits(seeds, d, r)])
         qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                     else jnp.zeros_like(q0_pad[0]))
-
-        run = lambda w, table, sched, q0p: _fused_fdot_run(
-            x_pad, w, table, sched, q0p, qtrue_pad,
-            t_max=t_max, t_c_qr=t_c_qr, passes=passes, trace_err=trace_err)
-        over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
-        over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
-        q_pad, errs = over_cases(ws, tables, scheds, q0_pad)
+                     else jnp.zeros_like(q0_seed[0]))
+        q0_pad = _lane_q0(q0_seed, len(engines))
+        operands = (x_pad, ws, tables, qtrue_pad)
+        case_axes = (None, 0, 0, None)
         node_counts = None
 
     ledger = CommLedger()
-    for eng, sched in zip(engines, schedules):
-        for _ in seeds:
-            ledger.log_gossip_rounds(sched, eng.graph.adjacency,
-                                     n_samples * r)
-            ledger.log_gossip_rounds(
-                np.full(t_outer, passes * t_c_qr), eng.graph.adjacency, r * r)
-    return SweepResult(
-        q=_squeeze_case(q_pad, single_case),
-        error_traces=(np.asarray(_squeeze_case(errs, single_case))
-                      if trace_err else None),
-        ledger=ledger,
-        seeds=np.asarray(list(seeds)),
-        node_counts=node_counts,
-    )
 
+    def finalize(state, done):
+        for eng, sched in zip(engines, schedules):
+            for _ in seeds:
+                ledger.log_gossip_rounds(sched[:done], eng.graph.adjacency,
+                                         n_samples * r)
+                ledger.log_gossip_rounds(np.full(done, passes * t_c_qr),
+                                         eng.graph.adjacency, r * r)
+        return _sweep_result(state, done, q_map=lambda q: q,
+                             trace_err=trace_err, single_case=single_case,
+                             ledger=ledger, seeds=seeds,
+                             node_counts=node_counts)
 
-def _baseline_case_sweep(name, case_covs, engines, r, seeds, q_true, t_outer,
-                         lr, t_mix, ledger):
-    """Case x seed grid for the cov-based baselines (dsa / dpgd / deepca)
-    with ragged node counts: identity-padded covs + block-diag(W, I) weights
-    (sweep_utils), and the node mask keeps the isolated padding nodes out of
-    the consensus-mean estimate the error trace scores."""
-    trace_err = q_true is not None
-    s_count = len(list(seeds))
-    n_list = [e.graph.n_nodes for e in engines]
-    n_max = max(n_list)
-    d = int(case_covs[0].shape[1])
-    ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
-                    for e in engines])
-    covs_pad = jnp.stack([pad_covs_identity(c, n_max) for c in case_covs])
-    masks = case_node_masks(n_list, n_max)                   # (C, N_max)
-    q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-    q0 = _seed_inits(seeds, d, r)
-    q0_nodes = jnp.broadcast_to(q0[:, None], (s_count, n_max, d, r))
-
-    if name == "dsa":
-        run = lambda w, covp, mask, q0n: _fused_dsa(
-            covp, w, q0n, jnp.float32(lr), q_arg, mask,
-            t_outer=t_outer, trace_err=trace_err)
-        rounds = np.ones(t_outer)
-    elif name == "dpgd":
-        run = lambda w, covp, mask, q0n: _fused_dpgd(
-            covp, w, q0n, jnp.float32(lr), q_arg, mask,
-            t_outer=t_outer, trace_err=trace_err)
-        rounds = np.ones(t_outer)
-    else:
-        run = lambda w, covp, mask, q0n: _fused_deepca(
-            covp, w, q0n, local_cov_apply(covp, q0n), q_arg, mask,
-            t_outer=t_outer, t_mix=t_mix, trace_err=trace_err)
-        rounds = np.full(t_outer, t_mix)
-    over_seeds = jax.vmap(run, in_axes=(None, None, None, 0))
-    over_cases = jax.vmap(over_seeds, in_axes=(0, 0, 0, None))
-    q, errs = over_cases(ws, covs_pad, masks, q0_nodes)
-    for eng in engines:
-        for _ in range(s_count):
-            ledger.log_gossip_rounds(rounds, eng.graph.adjacency, d * r)
-    return q, errs, np.asarray(n_list)
+    return _run_sweep(
+        _fdot_build_body, operands,
+        (("t_max", t_max), ("t_c_qr", t_c_qr), ("passes", passes),
+         ("trace_err", trace_err), ("is_async", False)),
+        np.stack(schedules).astype(np.int64), q0_pad,
+        case_axes, len(engines), len(list(seeds)), finalize,
+        manager, chunk_size, max_chunks)
 
 
 def baseline_sweep(
@@ -420,6 +415,9 @@ def baseline_sweep(
     lr: float = 0.1,
     t_mix: int = 3,
     t_c: int = 50,
+    manager=None,
+    chunk_size: Optional[int] = None,
+    max_chunks: Optional[int] = None,
 ) -> SweepResult:
     """Monte-Carlo sweep of one fused baseline over seeds (one device call).
 
@@ -432,6 +430,8 @@ def baseline_sweep(
     same ragged-N identity-padding contract as ``sdot_sweep``; the result
     then carries a case axis and ``node_counts``. The sequential-deflation
     baselines (seq_dist_pm, d_pm) are single-case only.
+    ``manager``/``chunk_size`` enable the chunked-resumable driver, as in
+    ``sdot_sweep``.
     """
     if engines is not None and engine is not None:
         raise ValueError("pass engine or engines, not both")
@@ -445,9 +445,9 @@ def baseline_sweep(
         raise ValueError("baseline_sweep needs an engine")
 
     trace_err = q_true is not None
-    ledger = CommLedger()
     s_count = len(list(seeds))
     node_counts = None
+    squeeze_node_counts = False
 
     if engine_list is not None:
         if name not in ("dsa", "dpgd", "deepca"):
@@ -460,99 +460,101 @@ def baseline_sweep(
             covs = [covs]
         case_covs = broadcast_per_case([jnp.asarray(c) for c in covs],
                                        len(engine_list), "covs")
-        for c, e in zip(case_covs, engine_list):
-            if c.shape[0] != e.graph.n_nodes:
-                raise ValueError("per-case covs must match each engine's "
-                                 f"node count: got {c.shape[0]} covs for an "
-                                 f"{e.graph.n_nodes}-node graph")
-        q, errs, node_counts = _baseline_case_sweep(
-            name, case_covs, engine_list, r, seeds, q_true, t_outer, lr,
-            t_mix, ledger)
-        if len(engine_list) == 1:
-            q, errs, node_counts = q[0], errs[0], None
-        return SweepResult(
-            q=q,
-            error_traces=np.asarray(errs) if trace_err else None,
-            ledger=ledger,
-            seeds=np.asarray(list(seeds)),
-            node_counts=node_counts,
-        )
+        _check_case_covs(case_covs, engine_list)
+        ws, _, masks, n_list, n_max = _ragged_stacks(engine_list, 0)
+        case_covs = jnp.stack([pad_covs_identity(c, n_max)
+                               for c in case_covs])      # (C, N_max, d, d)
+        node_counts = np.asarray(n_list)
+        squeeze_node_counts = len(engine_list) == 1
+    else:
+        engine_list = [engine]
+        if name in ("dsa", "dpgd", "deepca"):
+            if covs is None or t_outer is None:
+                raise ValueError(f"{name} sweep needs covs and t_outer")
+        ws = jnp.stack([engine._w])
+        n_max = engine.graph.n_nodes
+        masks = jnp.ones((1, n_max), jnp.float32)
+        if covs is not None:
+            case_covs = jnp.stack([jnp.asarray(covs)])   # (1, N, d, d)
 
-    adj = engine.graph.adjacency
+    n_cases = len(engine_list)
+    single_case = n_cases == 1
+    ledger = CommLedger()
 
     if name in ("dsa", "dpgd", "deepca"):
-        if covs is None or t_outer is None:
-            raise ValueError(f"{name} sweep needs covs and t_outer")
-        n, d, _ = covs.shape
-        ones = jnp.ones((n,), jnp.float32)
+        d = int(case_covs.shape[2])
         q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
         q0 = _seed_inits(seeds, d, r)
-        q0_nodes = jnp.broadcast_to(q0[:, None], (s_count, n, d, r))
-        if name == "dsa":
-            run = lambda q0n: _fused_dsa(covs, engine._w, q0n,
-                                         jnp.float32(lr), q_arg, ones,
-                                         t_outer=t_outer, trace_err=trace_err)
-            rounds = np.ones(t_outer)
-        elif name == "dpgd":
-            run = lambda q0n: _fused_dpgd(covs, engine._w, q0n,
-                                          jnp.float32(lr), q_arg, ones,
-                                          t_outer=t_outer, trace_err=trace_err)
-            rounds = np.ones(t_outer)
+        q0_nodes = jnp.broadcast_to(q0[:, None], (s_count, n_max, d, r))
+        q0_lane = _lane_q0(q0_nodes, n_cases)            # (C, S, N_max, d, r)
+        xs = np.zeros((n_cases, t_outer), np.int64)
+        if name == "deepca":
+            build = _deepca_build_body
+            statics = (("t_mix", t_mix), ("trace_err", trace_err))
+            # s0 = M_i Q_i per (case, seed) lane, over the padded cov stacks
+            s0 = jnp.einsum("cnde,csner->csndr", case_covs, q0_lane)
+            q0_lane = (q0_lane, s0, s0)
+            operands = (case_covs, ws, q_arg, masks)
+            case_axes = (0, 0, None, 0)
+            rounds = lambda done: np.full(done, t_mix)
         else:
-            run = lambda q0n: _fused_deepca(
-                covs, engine._w, q0n, local_cov_apply(covs, q0n), q_arg,
-                ones, t_outer=t_outer, t_mix=t_mix, trace_err=trace_err)
-            rounds = np.full(t_outer, t_mix)
-        q, errs = jax.vmap(run)(q0_nodes)
-        for _ in range(s_count):
-            ledger.log_gossip_rounds(rounds, adj, d * r)
-    elif name == "seq_dist_pm":
-        if covs is None or iters_per_vec is None:
-            raise ValueError("seq_dist_pm sweep needs covs and iters_per_vec")
-        n, d, _ = covs.shape
-        q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
-        q0 = _seed_inits(seeds, d, r)
-        cols0 = jnp.broadcast_to(
-            jnp.swapaxes(q0, 1, 2)[:, :, None, :], (s_count, r, n, d))
-        table = engine.debias_table(t_c)
-        run = lambda c0: _fused_seq_dist_pm(
-            covs, engine._w, table, c0, q_arg, r=r,
-            iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
-            trace_err=trace_err)
-        cols, errs = jax.vmap(run)(cols0)
-        q = jnp.transpose(cols, (0, 2, 3, 1))
-        for _ in range(s_count):
-            ledger.log_gossip_rounds(np.full(r * iters_per_vec, t_c), adj, d)
-    elif name == "d_pm":
-        if data_blocks is None or iters_per_vec is None:
-            raise ValueError("d_pm sweep needs data_blocks and iters_per_vec")
-        dims = [int(x.shape[0]) for x in data_blocks]
-        d = sum(dims)
-        n_samples = int(data_blocks[0].shape[1])
-        x_pad = pad_feature_slabs(data_blocks)
-        q0_pad = jnp.stack([split_pad_rows(q, dims)
-                            for q in _seed_inits(seeds, d, r)])
-        blocks0 = jnp.transpose(q0_pad, (0, 3, 1, 2))           # (S, r, N, d_max)
-        qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
-                     else jnp.zeros_like(q0_pad[0]))
-        table = engine.debias_table(t_c)
-        run = lambda b0: _fused_d_pm(
-            x_pad, engine._w, table, b0, qtrue_pad, r=r,
-            iters_per_vec=iters_per_vec, t_c=t_c, t_max=t_c,
-            trace_err=trace_err)
-        blocks, errs = jax.vmap(run)(blocks0)
-        q = jnp.concatenate(
-            [jnp.swapaxes(blocks[:, :, i, :di], 1, 2)
-             for i, di in enumerate(dims)], axis=1)             # (S, d, r)
-        for _ in range(s_count):
-            ledger.log_gossip_rounds(np.full(r * iters_per_vec, t_c), adj,
-                                     n_samples)
+            build = _dsa_build_body if name == "dsa" else _dpgd_build_body
+            statics = (("trace_err", trace_err),)
+            operands = (case_covs, ws, jnp.float32(lr), q_arg, masks)
+            case_axes = (0, 0, None, None, 0)
+            rounds = lambda done: np.ones(done)
+        q_map = (lambda c: c[0]) if name == "deepca" else (lambda q: q)
+        payload = d * r
+    elif name in ("seq_dist_pm", "d_pm"):
+        if iters_per_vec is None or (covs is None) == (data_blocks is None):
+            raise ValueError(f"{name} sweep needs iters_per_vec and "
+                             "covs (seq_dist_pm) / data_blocks (d_pm)")
+        statics = (("r", r), ("iters_per_vec", iters_per_vec),
+                   ("t_c", t_c), ("t_max", t_c), ("trace_err", trace_err))
+        case_axes = (None, 0, 0, None)
+        xs = np.arange(r * iters_per_vec, dtype=np.int64)[None]
+        rounds = lambda done: np.full(done, t_c)
+        tables = jnp.stack([engine.debias_table(t_c)])
+        if name == "seq_dist_pm":
+            n, d, _ = covs.shape
+            q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+            cols0 = jnp.broadcast_to(
+                jnp.swapaxes(_seed_inits(seeds, d, r), 1, 2)[:, :, None, :],
+                (s_count, r, n, d))
+            q0_lane = _lane_q0(cols0, 1)
+            build = _seq_dist_pm_build_body
+            operands = (covs, ws, tables, q_arg)
+            q_map = lambda cols: jnp.transpose(cols, (0, 1, 3, 4, 2))
+            payload = d
+        else:
+            dims = [int(x.shape[0]) for x in data_blocks]
+            d = sum(dims)
+            x_pad = pad_feature_slabs(data_blocks)
+            q0_pad = jnp.stack([split_pad_rows(q, dims)
+                                for q in _seed_inits(seeds, d, r)])
+            q0_lane = _lane_q0(jnp.transpose(q0_pad, (0, 3, 1, 2)), 1)
+            qtrue_pad = (split_pad_rows(q_true, dims) if trace_err
+                         else jnp.zeros_like(q0_pad[0]))
+            build = _d_pm_build_body
+            operands = (x_pad, ws, tables, qtrue_pad)
+            # blocks: (C, S, r, N, d_max) -> concatenated (C, S, d, r)
+            q_map = lambda blocks: jnp.concatenate(
+                [jnp.swapaxes(blocks[:, :, :, i, :di], 2, 3)
+                 for i, di in enumerate(dims)], axis=2)
+            payload = int(data_blocks[0].shape[1])       # n_samples
     else:
         raise ValueError(f"unknown baseline: {name}")
 
-    return SweepResult(
-        q=q,
-        error_traces=np.asarray(errs) if trace_err else None,
-        ledger=ledger,
-        seeds=np.asarray(list(seeds)),
-    )
+    def finalize(state, done):
+        for eng in engine_list:
+            for _ in range(s_count):
+                ledger.log_gossip_rounds(rounds(done), eng.graph.adjacency,
+                                         payload)
+        return _sweep_result(
+            state, done, q_map=q_map, trace_err=trace_err,
+            single_case=single_case, ledger=ledger, seeds=seeds,
+            node_counts=(None if squeeze_node_counts else node_counts))
+
+    return _run_sweep(build, operands, statics, xs, q0_lane, case_axes,
+                      n_cases, s_count, finalize, manager, chunk_size,
+                      max_chunks)

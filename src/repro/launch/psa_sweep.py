@@ -11,7 +11,13 @@ then shard the Monte-Carlo seed grid over subprocess workers
         --workdir /tmp/psa_sweep
 
 A killed launcher rerun with the same --workdir resumes: published worker
-shards are never recomputed.
+shards are never recomputed. ``--resume`` goes further — workers run their
+shards through the unified runtime's chunked driver, checkpointing the
+sweep-RunState into per-worker ckpt dirs every ``--sweep-chunk`` outer
+iterations, so a killed *worker* resumes mid-grid (bitwise equal to the
+uninterrupted sweep); the summary then reports how many grid points were
+skipped via reused shards and how far each restored sweep-RunState
+carried its worker.
 """
 from __future__ import annotations
 
@@ -43,6 +49,13 @@ def main(argv=None) -> int:
                     help="Monte-Carlo seed count")
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--workdir", required=True)
+    ap.add_argument("--resume", action="store_true",
+                    help="chunk-checkpoint each worker's sweep-RunState "
+                         "into its ckpt dir and resume killed workers "
+                         "mid-grid; report skipped grid points")
+    ap.add_argument("--sweep-chunk", type=int, default=None,
+                    help="outer iterations per sweep checkpoint chunk "
+                         "(default: t_outer // 5, implies --resume)")
     args = ap.parse_args(argv)
 
     import jax.numpy as jnp
@@ -67,12 +80,17 @@ def main(argv=None) -> int:
     topo = {"kind": args.topology, "n": args.nodes, "p": args.p,
             "seed": args.graph_seed}
     sched = {"kind": args.schedule, "t_max": args.t_c, "cap": args.cap}
+    resume = args.resume or args.sweep_chunk is not None
+    sweep_chunk = None
+    if resume:
+        sweep_chunk = args.sweep_chunk or max(1, args.t_outer // 5)
     t0 = time.perf_counter()
     sw = launch_sweep(covs=covs, cases=[{"topology": topo,
                                          "schedule": sched}],
                       r=args.r, t_outer=args.t_outer, t_c=args.t_c,
                       seeds=list(range(args.seeds)), q_true=q_true,
-                      workdir=args.workdir, n_workers=args.workers)
+                      workdir=args.workdir, n_workers=args.workers,
+                      sweep_chunk=sweep_chunk)
     sweep_s = time.perf_counter() - t0
 
     summary = {
@@ -84,6 +102,14 @@ def main(argv=None) -> int:
         "final_err_mean": float(np.asarray(sw.mean_trace)[-1]),
         "p2p_per_node_k": round(sw.ledger.per_node_p2p(args.nodes) / 1e3, 2),
     }
+    if resume:
+        rep = sw.resume_report
+        summary["resume"] = {
+            "sweep_chunk": sweep_chunk,
+            "skipped_grid_points": rep["skipped_grid_points"],
+            "reused_shards": rep["reused_shards"],
+            "worker_resumed_steps": rep["worker_resumed_steps"],
+        }
     print(json.dumps(summary, indent=2))
     return 0
 

@@ -98,15 +98,21 @@ def spec_fingerprint(spec: dict) -> int:
     Stamped into every worker's published result and checked before a
     shard is reused, so rerunning a workdir with a *changed* spec (more
     seeds, different cases/t_outer) relaunches instead of silently merging
-    stale shards."""
-    blob = json.dumps(spec, sort_keys=True).encode()
+    stale shards. ``sweep_chunk`` is excluded: chunking is bit-exact by
+    construction, so a resume may change the chunk size without
+    invalidating published shards."""
+    blob = json.dumps({k: v for k, v in spec.items() if k != "sweep_chunk"},
+                      sort_keys=True).encode()
     return int.from_bytes(hashlib.sha256(blob).digest()[:4], "big") >> 1
 
 
-def _result_like(spec: dict):
+def _result_like(spec: dict, with_resumed: bool = True):
     """Structure template for restore_tree (values are ignored)."""
     like = {"q": jnp.zeros(()), "seeds": jnp.zeros(()),
-            "ledger": CommLedger(), "spec_fp": jnp.zeros((), jnp.int32)}
+            "ledger": CommLedger(),
+            "spec_fp": jnp.zeros((), jnp.int32)}
+    if with_resumed:
+        like["resumed_steps"] = jnp.zeros((), jnp.int32)
     if spec["has_q_true"]:
         like["error_traces"] = jnp.zeros(())
     if spec["ragged"]:
@@ -119,16 +125,24 @@ def _load_result(workdir: str, spec: dict, shard: int):
 
     A result published under a different spec (stale workdir reuse) fails
     either the tree-structure check or the fingerprint comparison and is
-    discarded so the launcher recomputes it."""
+    discarded so the launcher recomputes it. Results published before the
+    ``resumed_steps`` leaf existed still restore (never recompute a valid
+    shard over a reporting field) and report 0."""
     path = _result_dir(workdir, shard)
     if not os.path.exists(os.path.join(path, "manifest.json")):
         return None
-    try:
-        tree = restore_tree(path, _result_like(spec))
-    except Exception:
+    tree = None
+    for with_resumed in (True, False):
+        try:
+            tree = restore_tree(path, _result_like(spec, with_resumed))
+            break
+        except Exception:
+            continue
+    if tree is None:
         return None
     if int(tree["spec_fp"]) != spec_fingerprint(spec):
         return None
+    tree.setdefault("resumed_steps", 0)
     return tree
 
 
@@ -152,6 +166,7 @@ def launch_sweep(
     n_workers: int = 2,
     retries: int = 1,
     timeout: float = 900.0,
+    sweep_chunk: Optional[int] = None,
 ) -> SweepResult:
     """Shard a ``sdot_sweep`` case x seed grid over subprocess workers.
 
@@ -163,6 +178,15 @@ def launch_sweep(
     contiguously into ``n_workers`` shards (one vmap lane-slice each), so
     the merged result preserves seed order and equals the single-process
     sweep exactly.
+
+    ``sweep_chunk`` turns on MID-GRID fault tolerance: each worker runs its
+    shard through the runtime's chunked driver, checkpointing the
+    sweep-RunState into its own ``worker_<i>/ckpt`` dir every
+    ``sweep_chunk`` outer iterations — a killed worker resumes from the
+    checkpoint (bitwise equal to the uninterrupted sweep) instead of
+    recomputing its shard. The returned ``SweepResult.resume_report``
+    records the reused shards (grid points skipped wholesale) and each
+    relaunched worker's restored outer step.
     """
     os.makedirs(workdir, exist_ok=True)
     seeds = [int(s) for s in seeds]
@@ -189,10 +213,26 @@ def launch_sweep(
         "ragged": ragged,
         "n_cov_stacks": len(covs) if ragged else 1,
         "has_q_true": q_true is not None,
+        "sweep_chunk": int(sweep_chunk) if sweep_chunk else None,
     }
     spec_path = os.path.join(workdir, _SPEC)
     with open(spec_path, "w") as f:
         json.dump(spec, f, indent=2)
+
+    # a changed spec invalidates the workers' intermediate sweep
+    # checkpoints (published results carry their own fingerprint stamp;
+    # the ckpt dirs don't, so they are guarded here at the workdir level)
+    fp = str(spec_fingerprint(spec))
+    fp_path = os.path.join(workdir, "spec_fp")
+    if os.path.exists(fp_path):
+        with open(fp_path) as f:
+            if f.read().strip() != fp:
+                for name in os.listdir(workdir):
+                    ckpt = os.path.join(workdir, name, "ckpt")
+                    if name.startswith("worker_") and os.path.isdir(ckpt):
+                        shutil.rmtree(ckpt, ignore_errors=True)
+    with open(fp_path, "w") as f:
+        f.write(fp)
 
     arrays = {}
     if ragged:
@@ -213,6 +253,7 @@ def launch_sweep(
     # matches; stale/corrupt ones are cleared and recomputed
     results = {i: _load_result(workdir, spec, i) for i in range(n_workers)}
     pending = [i for i, t in results.items() if t is None]
+    reused = sorted(i for i, t in results.items() if t is not None)
     for i in pending:
         shutil.rmtree(_result_dir(workdir, i), ignore_errors=True)
     for attempt in range(retries + 1):
@@ -240,15 +281,27 @@ def launch_sweep(
     qs, errs, counts, node_counts = [], [], [], None
     ledger = CommLedger()
     seed_axis = 1 if len(cases) > 1 else 0
+    resumed_steps = {}
     for i in range(n_workers):
         tree = results[i]
         qs.append(np.asarray(tree["q"]))
         counts.append(np.asarray(tree["seeds"]))
         ledger = ledger.merged(tree["ledger"])
+        resumed_steps[i] = int(tree["resumed_steps"])
         if spec["has_q_true"]:
             errs.append(np.asarray(tree["error_traces"]))
         if spec["ragged"]:
             node_counts = np.asarray(tree["node_counts"])
+    report = {
+        # shards whose published result was reused wholesale — their whole
+        # case x seed sub-grid was skipped
+        "reused_shards": reused,
+        "skipped_grid_points": sum(len(shards[i]) for i in reused)
+        * len(cases),
+        # outer step each worker's restored sweep-RunState already carried
+        # (0 = computed from scratch)
+        "worker_resumed_steps": resumed_steps,
+    }
     return SweepResult(
         q=jnp.asarray(np.concatenate(qs, axis=seed_axis)),
         error_traces=(np.concatenate(errs, axis=seed_axis)
@@ -256,4 +309,5 @@ def launch_sweep(
         ledger=ledger,
         seeds=np.concatenate(counts),
         node_counts=node_counts,
+        resume_report=report,
     )

@@ -1,19 +1,25 @@
 """Chunked-resumable fused runs: whole-run scans that outlast a job.
 
-PRs 1-3 fused entire S-DOT/F-DOT runs into one ``lax.scan`` — maximal
-throughput, but a run killed at iteration 900/1000 restarts from zero.
-This module refactors the whole-run scan into an outer loop over
-*chunks* of outer iterations, carrying a ``RunState`` pytree that
-round-trips through ``checkpoint/manager.py``:
+PRs 1-3 fused entire runs into one ``lax.scan`` — maximal throughput, but a
+run killed at iteration 900/1000 restarted from zero. PR 4 made S-DOT and
+F-DOT restartable with four hand-written chunk drivers; the unified
+executor runtime (``core/runtime.py``) replaced those with ONE generic
+chunked driver, so this module is now a set of thin entry points:
 
-    prep (core/sdot._prepare_sdot / core/fdot._prepare_fdot)
-      -> restore latest valid RunState (or init fresh)
-      -> per chunk: one jitted scan over sched[step : step+chunk] built from
-         the SAME outer-iteration body as the monolithic executor
-         (core/sdot._sync_outer_body etc.), trace buffers updated in place
-         via dynamic_update_slice
-      -> checkpoint (atomic, async) at every chunk boundary
-      -> final SDOTResult / FDOTResult assembled from the completed buffers
+    <family>_program (core/sdot|fdot|bdot|baselines)
+      -> runtime.run_chunked(program, manager, chunk_size)
+         - restore latest valid RunState (or init fresh)
+         - per chunk: one jitted scan over xs[step : step+chunk] built from
+           the SAME outer-iteration body as the monolithic executor,
+           trace buffers updated in place via dynamic_update_slice
+         - checkpoint (atomic, async) at every chunk boundary
+      -> the family's finalize() assembles the usual result object
+
+Because the driver is generic, chunked-resume now covers the WHOLE
+algorithm zoo: ``bdot_chunked`` and ``baseline_chunked`` (all five
+baselines) exist with zero family-specific chunking code, and the sweep
+engines accept ``manager``/``chunk_size`` directly (``core/sweep.py``) for
+mid-grid resumable sweeps.
 
 **Resume invariant** (pinned in tests/test_streaming.py): a run killed at
 any chunk boundary, restored, and continued produces the *bit-identical*
@@ -30,211 +36,25 @@ things make this exact rather than approximate:
   ``RunState``, not from host accumulation, so it survives the crash too.
 
 A corrupt or half-written latest checkpoint (crashed writer) is skipped:
-``_restore_any`` walks the manager's steps newest-first and falls back to
-the newest restorable snapshot, or a fresh start.
+the runtime walks the manager's steps newest-first and falls back to the
+newest restorable snapshot, or a fresh start.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import warnings
 from typing import Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
-from ..core.fdot import (FDOTResult, _fdot_async_outer_body, _fdot_outer_body,
-                         _prepare_fdot, unpad_feature_slabs)
-from ..core.metrics import CommLedger
-from ..core.sdot import (SDOTResult, _async_outer_body, _prepare_sdot,
-                         _sync_outer_body)
+from ..core.baselines import BaselineResult, baseline_program
+from ..core.bdot import BDOTResult, bdot_program
+from ..core.fdot import FDOTResult, fdot_program
+from ..core.runtime import RunState, run_chunked
+from ..core.sdot import SDOTResult, sdot_program
 
-__all__ = ["RunState", "sdot_chunked", "fdot_chunked"]
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class RunState:
-    """Everything a fused run needs to continue from a chunk boundary.
-
-    Registered pytree: checkpoints through ``checkpoint/manager.py`` with no
-    ad-hoc field plucking, and flows through the jitted chunk programs as a
-    native container. Sync runs carry zero-size send/count buffers; async
-    runs carry the full (T_o, ...) stacked outputs so the realized ledger
-    survives a crash.
-    """
-
-    q: jnp.ndarray            # (N, d, r) iterate (padded slabs for F-DOT)
-    key: jnp.ndarray          # async RNG carry (zeros for sync runs)
-    step: jnp.ndarray         # () int32 — outer iterations completed
-    errs: jnp.ndarray         # (T_o,) error-trace buffer, filled up to step
-    sends: jnp.ndarray        # async (T_o, ...) per-round sends, else (T_o, 0)
-    counts: jnp.ndarray       # async (T_o, ...) awake counts, else (T_o, 0)
-
-    def tree_flatten(self):
-        return ((self.q, self.key, self.step, self.errs, self.sends,
-                 self.counts), None)
-
-    @classmethod
-    def tree_unflatten(cls, _aux, children):
-        return cls(*children)
-
-
-def _init_state(q0, key, t_outer: int, tail_shape=()) -> RunState:
-    return RunState(
-        q=q0,
-        key=(key if key is not None else jnp.zeros((), jnp.uint32)),
-        step=jnp.int32(0),
-        errs=jnp.zeros((t_outer,), jnp.float32),
-        sends=jnp.zeros((t_outer,) + tail_shape, jnp.float32),
-        counts=jnp.zeros((t_outer,) + tail_shape, jnp.float32),
-    )
-
-
-# ---------------------------------------------------------------------------
-# jitted chunk programs (one compile per distinct chunk length)
-# ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
-def _sdot_sync_chunk(state, operand, w, table, sched_chunk, q_true, node_mask,
-                     *, mode: str, t_max: int, trace_err: bool):
-    outer = _sync_outer_body(operand, w, table, q_true, node_mask,
-                             mode=mode, t_max=t_max, trace_err=trace_err)
-    q, errs_c = jax.lax.scan(outer, state.q, sched_chunk)
-    return dataclasses.replace(
-        state, q=q,
-        step=state.step + sched_chunk.shape[0],
-        errs=jax.lax.dynamic_update_slice(state.errs, errs_c, (state.step,)))
-
-
-@functools.partial(jax.jit, static_argnames=("mode", "t_max", "trace_err"))
-def _sdot_async_chunk(state, operand, w, adj, p_awake, sched_chunk, q_true,
-                      *, mode: str, t_max: int, trace_err: bool):
-    outer = _async_outer_body(operand, w, adj, p_awake, q_true,
-                              mode=mode, t_max=t_max, trace_err=trace_err)
-    (q, key), (errs_c, sends_c, counts_c) = jax.lax.scan(
-        outer, (state.q, state.key), sched_chunk)
-    at = (state.step,) + (0,) * (state.sends.ndim - 1)
-    return RunState(
-        q=q, key=key, step=state.step + sched_chunk.shape[0],
-        errs=jax.lax.dynamic_update_slice(state.errs, errs_c, (state.step,)),
-        sends=jax.lax.dynamic_update_slice(state.sends, sends_c, at),
-        counts=jax.lax.dynamic_update_slice(state.counts, counts_c, at))
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fdot_sync_chunk(state, x_pad, w, table, sched_chunk, qtrue_pad,
-                     *, t_max: int, t_c_qr: int, passes: int,
-                     trace_err: bool):
-    outer = _fdot_outer_body(x_pad, w, table, qtrue_pad, t_max=t_max,
-                             t_c_qr=t_c_qr, passes=passes,
-                             trace_err=trace_err)
-    q, errs_c = jax.lax.scan(outer, state.q, sched_chunk)
-    return dataclasses.replace(
-        state, q=q,
-        step=state.step + sched_chunk.shape[0],
-        errs=jax.lax.dynamic_update_slice(state.errs, errs_c, (state.step,)))
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("t_max", "t_c_qr", "passes", "trace_err"))
-def _fdot_async_chunk(state, x_pad, w, adj, p_awake, sched_chunk, qtrue_pad,
-                      *, t_max: int, t_c_qr: int, passes: int,
-                      trace_err: bool):
-    outer = _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad,
-                                   t_max=t_max, t_c_qr=t_c_qr, passes=passes,
-                                   trace_err=trace_err)
-    (q, key), (errs_c, sends_c, counts_c) = jax.lax.scan(
-        outer, (state.q, state.key), sched_chunk)
-    at = (state.step,) + (0,) * (state.sends.ndim - 1)
-    return RunState(
-        q=q, key=key, step=state.step + sched_chunk.shape[0],
-        errs=jax.lax.dynamic_update_slice(state.errs, errs_c, (state.step,)),
-        sends=jax.lax.dynamic_update_slice(state.sends, sends_c, at),
-        counts=jax.lax.dynamic_update_slice(state.counts, counts_c, at))
-
-
-# ---------------------------------------------------------------------------
-# restore / drive helpers
-# ---------------------------------------------------------------------------
-def _restore_any(manager: Optional[CheckpointManager], like: RunState):
-    """Newest restorable snapshot, skipping corrupt/half-written steps.
-
-    A crashed writer can leave the latest step directory unreadable (the
-    manager's atomic rename protects against *partial* publishes, but a
-    torn disk or an operator cp can still corrupt shards). Walk the steps
-    newest-first; the first one that restores wins; none -> fresh start."""
-    if manager is None:
-        return None
-    steps = manager.all_steps()
-    for step in reversed(steps):
-        try:
-            state, _ = manager.restore(like, step=step)
-        except Exception:
-            continue
-        # restore_tree checks tree structure, not shapes — a snapshot from
-        # a run with a different t_outer (or engine size) unflattens fine
-        # but its buffers are the wrong length; reject it here so stale
-        # directories can't silently produce truncated/overwritten traces
-        shapes_ok = all(jax.tree.leaves(jax.tree.map(
-            lambda a, b: np.shape(a) == np.shape(b), state, like)))
-        if shapes_ok:
-            return state
-    if steps:
-        # every snapshot rejected — distinguish "fresh directory" from a
-        # probable operator error (e.g. resuming with a different t_outer
-        # or engine shape, which changes the RunState buffer shapes)
-        warnings.warn(
-            f"{len(steps)} checkpoint step(s) in {manager.root} exist but "
-            "none restored against this run's RunState shapes — starting "
-            "from iteration 0 (wrong t_outer / engine for this directory?)")
-    return None
-
-
-def _drive_chunks(state: RunState, t_outer: int, chunk_size: int,
-                  run_chunk, manager: Optional[CheckpointManager],
-                  max_chunks: Optional[int]) -> RunState:
-    """The outer chunk loop: scan a chunk, checkpoint, repeat.
-
-    The completed-step counter is mirrored on the host (read from the
-    device exactly once, at restore) so chunk programs enqueue back-to-back
-    with NO per-chunk device sync — without checkpointing, a chunked run is
-    pure dispatch pipelining over the monolithic scan. Saves are async
-    (``blocking=False``) so serialization overlaps the next chunk's
-    compute; the manager's atomic rename guarantees a kill mid-save leaves
-    the previous step intact. ``max_chunks`` lets tests and benchmarks
-    simulate a job killed at a chunk boundary."""
-    step = int(state.step)                   # the one host sync (restore)
-    done = 0
-    while step < t_outer:
-        if max_chunks is not None and done >= max_chunks:
-            break
-        length = min(chunk_size, t_outer - step)
-        state = run_chunk(state, step, length)
-        step += length
-        if manager is not None:
-            manager.save(step, state, blocking=False)
-        done += 1
-    if manager is not None:
-        manager.wait()
-    return state
-
-
-def _async_ledger(sched_np, sends, counts, payload_fn, slices) -> CommLedger:
-    """Rebuild the realized async ledger from the RunState buffers."""
-    ledger = CommLedger()
-    sends_np = np.asarray(sends, np.float64)
-    counts_np = np.asarray(counts)
-    total = float(sends_np.sum())
-    ledger.p2p += total
-    ledger.matrices += total
-    ledger.scalars += payload_fn(sends_np)
-    for t in range(len(sched_np)):
-        for sl, rounds in slices(int(sched_np[t])):
-            ledger.log_awake_rounds(counts_np[t][sl][:rounds])
-    return ledger
+__all__ = ["RunState", "sdot_chunked", "fdot_chunked", "bdot_chunked",
+           "baseline_chunked"]
 
 
 def sdot_chunked(
@@ -264,61 +84,11 @@ def sdot_chunked(
     ``max_chunks`` stops after that many chunks (simulating a killed job)
     — the return value then covers only the completed prefix.
     """
-    prep = _prepare_sdot(covs=covs, data=data, engine=engine, r=r,
-                         t_outer=t_outer, schedule=schedule, t_c=t_c,
-                         q_init=q_init, q_true=q_true, seed=seed)
-    operand, mode = prep["operand"], prep["mode"]
-    t_max, trace_err, q_arg = prep["t_max"], prep["trace_err"], prep["q_arg"]
-    sched_np = prep["sched_np"]
-    is_async = prep["is_async"]
-    n = prep["n"]
-
-    if is_async:
-        like = _init_state(prep["q_nodes"], engine._key, t_outer, (t_max,))
-        p_awake = jnp.asarray(engine.p_awake, jnp.float32)
-
-        def run_chunk(state, k0, length):
-            return _sdot_async_chunk(
-                state, operand, engine._w, engine._adj, p_awake,
-                jnp.asarray(sched_np[k0:k0 + length], jnp.int32), q_arg,
-                mode=mode, t_max=t_max, trace_err=trace_err)
-    else:
-        if not hasattr(engine, "debias_table"):
-            raise ValueError("sdot_chunked needs a fused-capable engine "
-                             "(debias_table) or an async engine")
-        like = _init_state(prep["q_nodes"], None, t_outer)
-        table = engine.debias_table(t_max)
-        ones = jnp.ones((n,), jnp.float32)
-
-        def run_chunk(state, k0, length):
-            return _sdot_sync_chunk(
-                state, operand, engine._w, table,
-                jnp.asarray(sched_np[k0:k0 + length], jnp.int32), q_arg,
-                ones, mode=mode, t_max=t_max, trace_err=trace_err)
-
-    state = _restore_any(manager, like) or like
-    state = _drive_chunks(state, t_outer, chunk_size, run_chunk, manager,
-                          max_chunks)
-    done = int(state.step)
-
-    ledger = CommLedger()
-    payload = prep["d"] * r
-    if is_async:
-        if done == t_outer:
-            engine._key = state.key   # same stream position as the fused run
-        ledger = _async_ledger(
-            sched_np[:done], state.sends[:done], state.counts[:done],
-            lambda s: float(s.sum()) * payload,
-            lambda t_c_t: [(slice(None), t_c_t)])
-    else:
-        ledger.log_gossip_rounds(sched_np[:done], engine.graph.adjacency,
-                                 payload)
-    return SDOTResult(
-        q_nodes=state.q,
-        error_trace=(np.asarray(state.errs[:done]) if trace_err else None),
-        consensus_trace=sched_np[:done],
-        ledger=ledger,
-    )
+    return run_chunked(
+        sdot_program(covs=covs, data=data, engine=engine, r=r,
+                     t_outer=t_outer, schedule=schedule, t_c=t_c,
+                     q_init=q_init, q_true=q_true, seed=seed),
+        manager, chunk_size=chunk_size, max_chunks=max_chunks)
 
 
 def fdot_chunked(
@@ -343,62 +113,73 @@ def fdot_chunked(
     ledger across kill-and-restore at chunk boundaries), including async
     engines — the three-per-iteration RNG splits ride in the checkpointed
     key."""
-    prep = _prepare_fdot(data_blocks=data_blocks, engine=engine, r=r,
-                         t_outer=t_outer, t_c=t_c, t_c_qr=t_c_qr,
-                         schedule=schedule, q_init=q_init, q_true=q_true,
-                         seed=seed)
-    x_pad, q0_pad, qtrue_pad = prep["pads"]()
-    t_max, t_c_qr, passes = prep["t_max"], prep["t_c_qr"], prep["passes"]
-    trace_err, is_async = prep["trace_err"], prep["is_async"]
-    sched_np = prep["schedule"]
+    return run_chunked(
+        fdot_program(data_blocks=data_blocks, engine=engine, r=r,
+                     t_outer=t_outer, t_c=t_c, t_c_qr=t_c_qr,
+                     schedule=schedule, q_init=q_init, q_true=q_true,
+                     seed=seed),
+        manager, chunk_size=chunk_size, max_chunks=max_chunks)
 
-    if is_async:
-        like = _init_state(q0_pad, engine._key, t_outer,
-                           (1 + passes, t_max))
-        p_awake = jnp.asarray(engine.p_awake, jnp.float32)
 
-        def run_chunk(state, k0, length):
-            return _fdot_async_chunk(
-                state, x_pad, engine._w, engine._adj, p_awake,
-                jnp.asarray(sched_np[k0:k0 + length], jnp.int32), qtrue_pad,
-                t_max=t_max, t_c_qr=t_c_qr, passes=passes,
-                trace_err=trace_err)
-    else:
-        if not hasattr(engine, "debias_table"):
-            raise ValueError("fdot_chunked needs a fused-capable engine "
-                             "(debias_table) or an async engine")
-        like = _init_state(q0_pad, None, t_outer)
-        table = engine.debias_table(t_max)
+def bdot_chunked(
+    *,
+    blocks: Sequence[Sequence[jnp.ndarray]],
+    col_engines,
+    row_engines,
+    r: int,
+    t_outer: int,
+    t_c: int = 50,
+    t_c_qr: Optional[int] = None,
+    schedule: Optional[np.ndarray] = None,
+    q_init: Optional[jnp.ndarray] = None,
+    q_true: Optional[jnp.ndarray] = None,
+    seed: int = 0,
+    chunk_size: int = 10,
+    manager: Optional[CheckpointManager] = None,
+    max_chunks: Optional[int] = None,
+) -> BDOTResult:
+    """Chunked-resumable B-DOT: ``core.bdot.bdot(fused=True)``, restartable.
 
-        def run_chunk(state, k0, length):
-            return _fdot_sync_chunk(
-                state, x_pad, engine._w, table,
-                jnp.asarray(sched_np[k0:k0 + length], jnp.int32), qtrue_pad,
-                t_max=t_max, t_c_qr=t_c_qr, passes=passes,
-                trace_err=trace_err)
+    New with the unified runtime — the block-partitioned executor gains
+    kill-at-any-chunk-boundary bit-identical resume from the generic
+    driver, with zero B-DOT-specific chunking code."""
+    return run_chunked(
+        bdot_program(blocks=blocks, col_engines=col_engines,
+                     row_engines=row_engines, r=r, t_outer=t_outer, t_c=t_c,
+                     t_c_qr=t_c_qr, schedule=schedule, q_init=q_init,
+                     q_true=q_true, seed=seed),
+        manager, chunk_size=chunk_size, max_chunks=max_chunks)
 
-    state = _restore_any(manager, like) or like
-    state = _drive_chunks(state, t_outer, chunk_size, run_chunk, manager,
-                          max_chunks)
-    done = int(state.step)
 
-    n_samples, d = prep["n_samples"], prep["d"]
-    adj = engine.graph.adjacency
-    ledger = CommLedger()
-    if is_async:
-        if done == t_outer:
-            engine._key = state.key
-        ledger = _async_ledger(
-            sched_np[:done], state.sends[:done], state.counts[:done],
-            lambda s: (float(s[:, 0].sum()) * n_samples * r
-                       + float(s[:, 1:].sum()) * r * r),
-            lambda t_c_t: [((0,), t_c_t)] + [((1 + p,), t_c_qr)
-                                             for p in range(passes)])
-    else:
-        ledger.log_gossip_rounds(sched_np[:done], adj, n_samples * r)
-        ledger.log_gossip_rounds(np.full(done, passes * t_c_qr), adj, r * r)
-    return FDOTResult(
-        q_blocks=unpad_feature_slabs(state.q, prep["dims"]),
-        error_trace=(np.asarray(state.errs[:done]) if trace_err else None),
-        ledger=ledger,
-    )
+def baseline_chunked(
+    name: str,
+    *,
+    covs=None,
+    data_blocks: Optional[Sequence[jnp.ndarray]] = None,
+    engine,
+    r: int,
+    t_outer: Optional[int] = None,
+    iters_per_vec: Optional[int] = None,
+    lr: float = 0.1,
+    t_mix: int = 3,
+    t_c: int = 50,
+    q_true=None,
+    seed: int = 0,
+    chunk_size: int = 10,
+    manager: Optional[CheckpointManager] = None,
+    max_chunks: Optional[int] = None,
+) -> BaselineResult:
+    """Chunked-resumable fused baseline (any of the five distributed ones).
+
+    ``name``: dsa | dpgd | deepca | seq_dist_pm | d_pm, with the same
+    problem arguments as ``core.baselines.baseline_program``. The
+    sequential-deflation methods chunk over the flattened (vector,
+    inner-iteration) index, so a kill mid-deflation resumes exactly where
+    the Gram-Schmidt order left off. Returns a ``BaselineResult`` whose
+    ledger covers the completed prefix."""
+    return run_chunked(
+        baseline_program(name, covs=covs, data_blocks=data_blocks,
+                         engine=engine, r=r, t_outer=t_outer,
+                         iters_per_vec=iters_per_vec, lr=lr, t_mix=t_mix,
+                         t_c=t_c, q_true=q_true, seed=seed),
+        manager, chunk_size=chunk_size, max_chunks=max_chunks)

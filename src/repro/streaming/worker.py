@@ -12,6 +12,16 @@ its own checkpoint dir ``<workdir>/worker_<shard>/result`` via
 ``checkpoint/manager.save_tree`` — the CommLedger travels as a registered
 pytree.  If a valid result is already published the worker exits
 immediately (idempotent relaunch).
+
+With ``spec["sweep_chunk"]`` set, the shard's sweep runs through the
+unified runtime's CHUNKED driver: the sweep-RunState (case x seed lane
+axes riding on every buffer) checkpoints into
+``<workdir>/worker_<shard>/ckpt`` every ``sweep_chunk`` outer iterations,
+so a worker killed mid-sweep resumes MID-GRID from its checkpointed state
+— bitwise equal to the uninterrupted sweep — instead of recomputing the
+shard from scratch. The published result records ``resumed_steps`` (how
+many outer iterations the restored state already carried) for the
+launcher's resume report.
 """
 from __future__ import annotations
 
@@ -36,7 +46,7 @@ def main(argv=None) -> int:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.checkpoint.manager import save_tree
+    from repro.checkpoint.manager import CheckpointManager, save_tree
     from repro.core.sweep import sdot_sweep
     from repro.streaming.launcher import (_load_result, build_engine,
                                           build_schedule, spec_fingerprint)
@@ -65,21 +75,39 @@ def main(argv=None) -> int:
     q_true = (jnp.asarray(problem["q_true"]) if spec["has_q_true"]
               else None)
 
+    sweep_chunk = spec.get("sweep_chunk")
+    manager = None
+    if sweep_chunk:
+        # chunked-resumable shard: the sweep-RunState checkpoints at every
+        # chunk boundary, and a restarted worker continues mid-grid
+        manager = CheckpointManager(
+            os.path.join(workdir, f"worker_{shard}", "ckpt"))
+
     sw = sdot_sweep(covs=covs, engines=engines, schedules=schedules,
                     r=spec["r"], t_outer=spec["t_outer"], t_c=spec["t_c"],
-                    seeds=seeds, q_true=q_true)
+                    seeds=seeds, q_true=q_true,
+                    manager=manager, chunk_size=sweep_chunk)
+    # the step the runtime ACTUALLY restored (a corrupt/stale newest
+    # checkpoint falls back, so this can be less than the dir's latest step)
+    resumed_steps = sw.resumed_step
 
     # the stamped fingerprint lets the launcher reject this result if the
     # workdir is later reused with a different spec
     tree = {"q": sw.q, "seeds": jnp.asarray(np.asarray(seeds)),
             "ledger": sw.ledger,
+            "resumed_steps": jnp.asarray(resumed_steps, jnp.int32),
             "spec_fp": jnp.asarray(spec_fingerprint(spec), jnp.int32)}
     if spec["has_q_true"]:
         tree["error_traces"] = jnp.asarray(sw.error_traces)
     if spec["ragged"]:
         tree["node_counts"] = jnp.asarray(sw.node_counts)
     save_tree(out_dir, tree, step=shard)
-    print(f"worker {shard}: published {len(seeds)} seed lanes -> {out_dir}")
+    if manager is not None:
+        # the published result supersedes the intermediate sweep state
+        shutil.rmtree(manager.root, ignore_errors=True)
+    print(f"worker {shard}: published {len(seeds)} seed lanes -> {out_dir}"
+          + (f" (resumed from outer step {resumed_steps})"
+             if resumed_steps else ""))
     return 0
 
 

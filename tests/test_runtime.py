@@ -1,0 +1,177 @@
+"""Unified executor runtime: the Program protocol and its three drivers.
+
+The family-level guarantees (fused == eager, chunked resume bitwise,
+sweep == per-seed runs) are pinned in test_sdot_fused / test_fused_zoo /
+test_streaming; this module pins the driver-level properties that make
+them compose: one shared jitted chunk program, chunk-size invariance
+across families, and the Program plumbing itself.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import runtime
+from repro.core.bdot import bdot, bdot_program
+from repro.core.consensus import DenseConsensus
+from repro.core.linalg import eigh_topr
+from repro.core.sdot import sdot, sdot_program
+from repro.core.sweep import baseline_sweep, fdot_sweep, sdot_sweep
+from repro.core.topology import complete, erdos_renyi, ring
+from repro.data.pipeline import partition_features, partition_samples
+from repro.streaming.resume import baseline_chunked, bdot_chunked
+
+D, R, N = 12, 3, 6
+T_OUTER, T_C = 9, 10
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((D, 360)), jnp.float32)
+    covs = jnp.stack([b @ b.T / b.shape[1]
+                      for b in partition_samples(x, N)])
+    _, q_true = eigh_topr(covs.sum(0), R)
+    d_rows, n_cols = [7, 5], [160, 120, 80]
+    blocks, o = [], 0
+    for di in d_rows:
+        row, c = [], 0
+        for nj in n_cols:
+            row.append(x[o:o + di, c:c + nj])
+            c += nj
+        blocks.append(row)
+        o += di
+    return dict(x=x, covs=covs, q_true=q_true, grid=blocks,
+                engine=DenseConsensus(erdos_renyi(N, 0.5, seed=1)),
+                col_engines=[DenseConsensus(complete(2)) for _ in n_cols],
+                row_engines=[DenseConsensus(ring(3)) for _ in d_rows])
+
+
+def test_program_basics(problem):
+    p = problem
+    prog = sdot_program(covs=p["covs"], engine=p["engine"], r=R,
+                        t_outer=T_OUTER, t_c=T_C, q_true=p["q_true"])
+    assert prog.t_outer == T_OUTER
+    assert prog.lane_shape == ()
+    assert prog.key0 is None and prog.tail == ()
+    res = runtime.run_monolithic(prog)
+    ref = sdot(covs=p["covs"], engine=p["engine"], r=R, t_outer=T_OUTER,
+               t_c=T_C, q_true=p["q_true"])
+    np.testing.assert_array_equal(res.error_trace, ref.error_trace)
+
+
+def test_run_sweep_requires_lane_axes(problem):
+    p = problem
+    prog = sdot_program(covs=p["covs"], engine=p["engine"], r=R,
+                        t_outer=T_OUTER, t_c=T_C)
+    with pytest.raises(ValueError, match="case and seed axes"):
+        runtime.run_sweep(prog)
+
+
+def test_sync_body_threads_key_and_zero_tails():
+    inner = lambda carry, x: (carry + x, jnp.float32(0.5))
+    body = runtime.sync_body(inner)
+    key = jnp.asarray([3, 4], jnp.uint32)
+    (carry, key_out), (err, sends, counts) = body(
+        (jnp.float32(1.0), key), jnp.float32(2.0))
+    assert float(carry) == 3.0 and float(err) == 0.5
+    np.testing.assert_array_equal(np.asarray(key_out), np.asarray(key))
+    assert sends.shape == () and counts.shape == ()
+
+
+def test_monolithic_and_chunked_share_compiled_programs(problem):
+    """A chunked run whose chunk covers the whole schedule hits the SAME
+    jit-cache entry as the monolithic driver — there is only one chunk
+    program, keyed on (build_body, statics, shapes)."""
+    p = problem
+    kw = dict(covs=p["covs"], engine=p["engine"], r=R, t_outer=T_OUTER,
+              t_c=T_C, q_true=p["q_true"])
+    sdot(**kw)                                   # compiles length-T chunk
+    base = runtime._chunk_program._cache_size()
+    from repro.streaming.resume import sdot_chunked
+    sdot_chunked(chunk_size=T_OUTER, **kw)       # same length, same statics
+    assert runtime._chunk_program._cache_size() == base
+
+
+def test_bdot_chunk_size_invariance(problem):
+    p = problem
+    kw = dict(blocks=p["grid"], col_engines=p["col_engines"],
+              row_engines=p["row_engines"], r=R, t_outer=T_OUTER, t_c=T_C,
+              q_true=p["q_true"])
+    mono = bdot(**kw)
+    for chunk in (1, 4, T_OUTER + 5):
+        res = bdot_chunked(chunk_size=chunk, **kw)
+        np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+        np.testing.assert_array_equal(np.asarray(res.q_full),
+                                      np.asarray(mono.q_full))
+
+
+def test_bdot_program_rejects_eager_only_engines(problem):
+    p = problem
+
+    class Bare:
+        pass
+
+    with pytest.raises(ValueError, match="debias_table"):
+        bdot_program(blocks=p["grid"], col_engines=[Bare()] * 3,
+                     row_engines=p["row_engines"], r=R, t_outer=3)
+
+
+def test_baseline_chunk_size_invariance(problem):
+    p = problem
+    from repro.core.baselines import deepca
+    q_m, e_m = deepca(p["covs"], p["engine"], R, T_OUTER,
+                      q_true=p["q_true"])
+    for chunk in (1, 4, T_OUTER + 5):
+        res = baseline_chunked("deepca", covs=p["covs"], engine=p["engine"],
+                               r=R, t_outer=T_OUTER, q_true=p["q_true"],
+                               chunk_size=chunk)
+        np.testing.assert_array_equal(res.error_trace, e_m)
+        np.testing.assert_array_equal(np.asarray(res.q), np.asarray(q_m))
+
+
+def test_sweep_chunk_size_invariance(problem):
+    """The sweep driver is the same chunk program vmapped over the lanes —
+    chunking must not move a single bit of any lane's trace."""
+    p = problem
+    kw = dict(covs=p["covs"],
+              engines=[p["engine"], DenseConsensus(ring(N))], r=R,
+              t_outer=T_OUTER, t_c=T_C, seeds=[0, 1], q_true=p["q_true"])
+    mono = sdot_sweep(**kw)
+    for chunk in (2, 4):
+        res = sdot_sweep(chunk_size=chunk, **kw)
+        np.testing.assert_array_equal(res.error_traces, mono.error_traces)
+        np.testing.assert_array_equal(np.asarray(res.q), np.asarray(mono.q))
+
+
+def test_fdot_sweep_chunked_matches_monolithic(problem):
+    p = problem
+    blocks = partition_features(p["x"], 4)
+    eng = DenseConsensus(erdos_renyi(4, 0.9, seed=1))
+    kw = dict(data_blocks=blocks, engines=eng, r=R, t_outer=6, t_c=T_C,
+              seeds=[0, 1], q_true=p["q_true"])
+    mono = fdot_sweep(**kw)
+    res = fdot_sweep(chunk_size=2, **kw)
+    np.testing.assert_array_equal(res.error_traces, mono.error_traces)
+
+
+def test_baseline_sweep_chunked_matches_monolithic(problem):
+    p = problem
+    kw = dict(covs=p["covs"], engine=p["engine"], r=R, t_outer=T_OUTER,
+              seeds=[0, 1], q_true=p["q_true"])
+    mono = baseline_sweep("dsa", **kw)
+    res = baseline_sweep("dsa", chunk_size=3, **kw)
+    np.testing.assert_array_equal(res.error_traces, mono.error_traces)
+
+
+def test_killed_sweep_returns_prefix(problem):
+    p = problem
+    res = sdot_sweep(covs=p["covs"], engines=p["engine"], r=R,
+                     t_outer=T_OUTER, t_c=T_C, seeds=[0, 1],
+                     q_true=p["q_true"], chunk_size=4, max_chunks=1)
+    assert res.steps_done == 4
+    assert res.error_traces.shape == (2, 4)
+    full = sdot_sweep(covs=p["covs"], engines=p["engine"], r=R,
+                      t_outer=T_OUTER, t_c=T_C, seeds=[0, 1],
+                      q_true=p["q_true"])
+    np.testing.assert_array_equal(res.error_traces,
+                                  full.error_traces[:, :4])

@@ -178,11 +178,13 @@ def test_run_debiased_scan_rejects_tc_over_tmax(topologies):
 
 def test_fused_is_single_compile_across_schedules(psa_problem, topologies):
     """Two SA-DOT runs with the same shapes/t_max reuse one compiled program
-    (the schedule is an operand, not a static); changing t_max recompiles."""
-    from repro.core.sdot import _fused_run
+    (the schedule is an operand, not a static); changing t_max recompiles.
+    The program is the unified runtime's generic chunk driver — its cache
+    keys on (build_body, statics, shapes), not on per-run closures."""
+    from repro.core.runtime import _chunk_program
     p = psa_problem
     eng = topologies["er"]
-    base = _fused_run._cache_size()
+    base = _chunk_program._cache_size()
     # t_outer=11 keeps this signature unique across the suite (the sweep
     # tests compile t_outer=10/t_max=30 first), so the count is exact
     s1 = consensus_schedule("lin1", 11, cap=30)
@@ -193,4 +195,4 @@ def test_fused_is_single_compile_across_schedules(psa_problem, topologies):
     for s in (s1, s2):
         sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=11, schedule=s,
              q_true=p["q_true"])
-    assert _fused_run._cache_size() == base + 1
+    assert _chunk_program._cache_size() == base + 1

@@ -15,21 +15,24 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.core import baselines as B
 from repro.core.async_gossip import AsyncConsensus
+from repro.core.bdot import bdot
 from repro.core.consensus import DenseConsensus
 from repro.core.fdot import fdot
 from repro.core.linalg import eigh_topr
 from repro.core.metrics import CommLedger
 from repro.core.sdot import sdot
 from repro.core.sweep import sdot_sweep
-from repro.core.topology import erdos_renyi
+from repro.core.topology import complete, erdos_renyi, ring
 from repro.data.pipeline import (eigengap_stream, partition_features,
                                  partition_samples)
 from repro.streaming.ingest import (CovSketch, FrequentDirections,
                                     StreamingIngestor)
 from repro.streaming.launcher import (build_engine, build_schedule,
                                       launch_sweep)
-from repro.streaming.resume import RunState, fdot_chunked, sdot_chunked
+from repro.streaming.resume import (RunState, baseline_chunked, bdot_chunked,
+                                    fdot_chunked, sdot_chunked)
 
 D, R, N = 14, 3, 6
 T_OUTER, T_C, CHUNK = 12, 15, 5
@@ -320,6 +323,206 @@ def test_chunk_size_invariance(stream_problem):
 
 
 # ---------------------------------------------------------------------------
+# generic run_chunked over the rest of the zoo: B-DOT + the baselines
+# (no family-specific chunking code exists for these — the coverage below
+# pins the unified runtime's generic driver)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def grid_problem():
+    """A 2 x 3 B-DOT grid over a ragged feature/sample partition."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((12, 120)), jnp.float32)
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], R)
+    d_rows, n_cols = [7, 5], [50, 40, 30]
+    blocks, o = [], 0
+    for di in d_rows:
+        row, c = [], 0
+        for nj in n_cols:
+            row.append(x[o:o + di, c:c + nj])
+            c += nj
+        blocks.append(row)
+        o += di
+    return dict(
+        blocks=blocks, q_true=q_true,
+        col_engines=[DenseConsensus(complete(2)) for _ in n_cols],
+        row_engines=[DenseConsensus(ring(3)) for _ in d_rows])
+
+
+def _bdot_kw(g):
+    return dict(blocks=g["blocks"], col_engines=g["col_engines"],
+                row_engines=g["row_engines"], r=R, t_outer=9, t_c=10,
+                q_true=g["q_true"])
+
+
+@pytest.mark.parametrize("kill_at", [1, 2])
+def test_bdot_crash_resume_bitwise(tmp_path, grid_problem, kill_at):
+    """B-DOT could not checkpoint at all before the unified runtime; the
+    generic chunked driver gives it kill-at-any-chunk-boundary resume that
+    is bit-identical to the monolithic fused run."""
+    g = grid_problem
+    mono = bdot(**_bdot_kw(g))
+    mgr = CheckpointManager(str(tmp_path / f"k{kill_at}"))
+    part = bdot_chunked(chunk_size=4, manager=mgr, max_chunks=kill_at,
+                        **_bdot_kw(g))
+    assert len(part.error_trace) == min(kill_at * 4, 9)
+    res = bdot_chunked(chunk_size=4, manager=mgr, **_bdot_kw(g))
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    np.testing.assert_array_equal(np.asarray(res.q_full),
+                                  np.asarray(mono.q_full))
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+
+
+def test_bdot_corrupt_latest_checkpoint_recovery(tmp_path, grid_problem):
+    """The corrupt-latest fallback is driver-level, so B-DOT inherits it:
+    a torn newest snapshot falls back to the previous restorable step."""
+    g = grid_problem
+    mono = bdot(**_bdot_kw(g))
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    bdot_chunked(chunk_size=4, manager=mgr, max_chunks=2, **_bdot_kw(g))
+    steps = mgr.all_steps()
+    assert len(steps) == 2
+    shard = os.path.join(tmp_path, f"step_{steps[-1]:08d}", "shards.npz")
+    with open(shard, "wb") as f:
+        f.write(b"not an npz")
+    res = bdot_chunked(chunk_size=4, manager=mgr, **_bdot_kw(g))
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+
+
+@pytest.mark.parametrize("name", ["deepca", "dsa", "seq_dist_pm"])
+def test_baseline_chunked_crash_resume_bitwise(tmp_path, stream_problem,
+                                               name):
+    """Chunked baselines resume bit-identically: DeEPCA's pytree carry
+    (q, s, mq_prev) and the sequential-deflation flattened index both ride
+    the generic RunState."""
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    led = CommLedger()
+    if name == "seq_dist_pm":
+        kw = dict(covs=p["covs"], iters_per_vec=4, t_c=T_C)
+        q_m, e_m = B.seq_dist_pm(p["covs"], eng, R, 4, t_c=T_C,
+                                 q_true=p["q_true"], ledger=led)
+    else:
+        kw = dict(covs=p["covs"], t_outer=T_OUTER)
+        q_m, e_m = getattr(B, name)(p["covs"], eng, R, T_OUTER,
+                                    q_true=p["q_true"], ledger=led)
+    mgr = CheckpointManager(str(tmp_path))
+    part = baseline_chunked(name, engine=eng, r=R, q_true=p["q_true"],
+                            chunk_size=5, manager=mgr, max_chunks=1, **kw)
+    assert len(part.error_trace) == 5
+    res = baseline_chunked(name, engine=eng, r=R, q_true=p["q_true"],
+                           chunk_size=5, manager=mgr, **kw)
+    np.testing.assert_array_equal(res.error_trace, e_m)
+    np.testing.assert_array_equal(np.asarray(res.q), np.asarray(q_m))
+    _assert_ledgers_equal(res.ledger, led)
+
+
+def test_baseline_chunked_dpm_crash_resume_bitwise(tmp_path):
+    """The feature-partitioned sequential baseline chunks over the
+    flattened (vector, inner-iteration) index too."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((16, 240)), jnp.float32)
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], R)
+    blocks = partition_features(x, 4)
+    eng = DenseConsensus(erdos_renyi(4, 0.9, seed=1))
+    led = CommLedger()
+    q_m, e_m = B.d_pm(blocks, eng, R, 4, t_c=T_C, q_true=q_true, ledger=led)
+    mgr = CheckpointManager(str(tmp_path))
+    baseline_chunked("d_pm", data_blocks=blocks, engine=eng, r=R,
+                     iters_per_vec=4, t_c=T_C, q_true=q_true, chunk_size=7,
+                     manager=mgr, max_chunks=1)
+    res = baseline_chunked("d_pm", data_blocks=blocks, engine=eng, r=R,
+                           iters_per_vec=4, t_c=T_C, q_true=q_true,
+                           chunk_size=7, manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, e_m)
+    np.testing.assert_array_equal(np.asarray(res.q), np.asarray(q_m))
+    _assert_ledgers_equal(res.ledger, led)
+
+
+def test_baseline_stale_checkpoint_dir_rejected(tmp_path, stream_problem):
+    """A baseline checkpoint dir from a different t_outer is rejected with
+    the runtime's warning (the buffers have the wrong length) and the run
+    restarts cleanly — same driver-level behaviour the sdot path pins."""
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    mgr = CheckpointManager(str(tmp_path))
+    baseline_chunked("dsa", covs=p["covs"], engine=eng, r=R,
+                     t_outer=T_OUTER, q_true=p["q_true"], chunk_size=5,
+                     manager=mgr, max_chunks=1)
+    longer = T_OUTER + 6
+    _, e_m = B.dsa(p["covs"], eng, R, longer, q_true=p["q_true"])
+    with pytest.warns(UserWarning, match="none restored"):
+        res = baseline_chunked("dsa", covs=p["covs"], engine=eng, r=R,
+                               t_outer=longer, q_true=p["q_true"],
+                               chunk_size=5, manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, e_m)
+
+
+def test_baseline_corrupt_checkpoint_fallback(tmp_path, stream_problem):
+    """Corrupt-latest fallback under the generic driver for a baseline."""
+    p = stream_problem
+    eng = DenseConsensus(p["graph"])
+    _, e_m = B.dsa(p["covs"], eng, R, T_OUTER, q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    baseline_chunked("dsa", covs=p["covs"], engine=eng, r=R,
+                     t_outer=T_OUTER, q_true=p["q_true"], chunk_size=5,
+                     manager=mgr, max_chunks=2)
+    steps = mgr.all_steps()
+    shard = os.path.join(tmp_path, f"step_{steps[-1]:08d}", "shards.npz")
+    with open(shard, "wb") as f:
+        f.write(b"garbage")
+    res = baseline_chunked("dsa", covs=p["covs"], engine=eng, r=R,
+                           t_outer=T_OUTER, q_true=p["q_true"],
+                           chunk_size=5, manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, e_m)
+
+
+# ---------------------------------------------------------------------------
+# chunked-resumable sweeps: the sweep-RunState checkpoints mid-grid
+# ---------------------------------------------------------------------------
+def test_sweep_chunked_resume_bitwise(tmp_path, stream_problem):
+    """A killed chunked sweep resumes mid-grid from its checkpointed
+    sweep-RunState, bitwise equal to the uninterrupted sweep (trace, final
+    estimates, and aggregate ledger)."""
+    p = stream_problem
+    engines = [DenseConsensus(p["graph"]), DenseConsensus(ring(N))]
+    kw = dict(covs=p["covs"], engines=engines, r=R, t_outer=T_OUTER,
+              t_c=T_C, seeds=[0, 1], q_true=p["q_true"])
+    mono = sdot_sweep(**kw)
+    mgr = CheckpointManager(str(tmp_path))
+    part = sdot_sweep(manager=mgr, chunk_size=CHUNK, max_chunks=1, **kw)
+    assert part.steps_done == CHUNK
+    assert part.error_traces.shape == (2, 2, CHUNK)
+    res = sdot_sweep(manager=mgr, chunk_size=CHUNK, **kw)
+    assert res.steps_done == T_OUTER
+    assert part.resumed_step == 0 and res.resumed_step == CHUNK
+    np.testing.assert_array_equal(res.error_traces, mono.error_traces)
+    np.testing.assert_array_equal(np.asarray(res.q), np.asarray(mono.q))
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+
+
+def test_sweep_resumed_step_reflects_corrupt_fallback(tmp_path,
+                                                      stream_problem):
+    """resumed_step reports the step the runtime ACTUALLY restored — a
+    torn newest checkpoint falls back one chunk, and the report must not
+    overstate progress from the directory listing."""
+    p = stream_problem
+    kw = dict(covs=p["covs"], engines=DenseConsensus(p["graph"]), r=R,
+              t_outer=T_OUTER, t_c=T_C, seeds=[0, 1], q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    sdot_sweep(manager=mgr, chunk_size=4, max_chunks=2, **kw)
+    steps = mgr.all_steps()
+    assert steps == [4, 8]
+    shard = os.path.join(tmp_path, f"step_{steps[-1]:08d}", "shards.npz")
+    with open(shard, "wb") as f:
+        f.write(b"torn")
+    res = sdot_sweep(manager=mgr, chunk_size=4, **kw)
+    assert res.resumed_step == 4
+    mono = sdot_sweep(**kw)
+    np.testing.assert_array_equal(res.error_traces, mono.error_traces)
+
+
+# ---------------------------------------------------------------------------
 # multi-process launcher
 # ---------------------------------------------------------------------------
 def test_launcher_matches_single_process(tmp_path, stream_problem):
@@ -390,3 +593,96 @@ def test_launcher_rejects_mismatched_case_covs(tmp_path, stream_problem):
         launch_sweep(covs=[p["covs"], p["covs"]], cases=cases, r=R,
                      t_outer=4, seeds=[0], workdir=str(tmp_path),
                      n_workers=1)
+
+
+def test_launcher_worker_resumes_mid_grid(tmp_path, stream_problem):
+    """A worker killed mid-sweep leaves a checkpointed sweep-RunState in
+    its ckpt dir; the relaunched worker resumes MID-GRID from it (the
+    resume report records the restored outer step) and the merged result
+    is bitwise equal to an uninterrupted chunked launch."""
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1},
+              "schedule": {"kind": "lin2", "cap": T_C}}]
+    seeds = [0, 1, 2, 3]
+    kw = dict(covs=p["covs"], cases=cases, r=R, t_outer=8, t_c=T_C,
+              seeds=seeds, q_true=p["q_true"], n_workers=2, sweep_chunk=3)
+
+    full = launch_sweep(workdir=str(tmp_path / "full"), **kw)
+    assert full.resume_report["worker_resumed_steps"] == {0: 0, 1: 0}
+
+    # simulate worker 0 killed after its first chunk: pre-populate its
+    # ckpt dir with the partial sweep-RunState of its seed shard
+    wd = tmp_path / "killed"
+    engines = [build_engine(c["topology"]) for c in cases]
+    schedules = [build_schedule(c["schedule"], 8, T_C) for c in cases]
+    mgr = CheckpointManager(str(wd / "worker_0" / "ckpt"))
+    sdot_sweep(covs=p["covs"], engines=engines, schedules=schedules, r=R,
+               t_outer=8, t_c=T_C, seeds=seeds[:2], q_true=p["q_true"],
+               manager=mgr, chunk_size=3, max_chunks=1)
+
+    res = launch_sweep(workdir=str(wd), **kw)
+    assert res.resume_report["worker_resumed_steps"][0] == 3
+    assert res.resume_report["worker_resumed_steps"][1] == 0
+    np.testing.assert_array_equal(res.error_traces, full.error_traces)
+    np.testing.assert_array_equal(np.asarray(res.q), np.asarray(full.q))
+    assert res.ledger.p2p == full.ledger.p2p
+
+    # a rerun reuses both published shards: the whole grid is skipped
+    res2 = launch_sweep(workdir=str(wd), **kw)
+    assert res2.resume_report["reused_shards"] == [0, 1]
+    assert res2.resume_report["skipped_grid_points"] == len(seeds)
+    np.testing.assert_array_equal(res2.error_traces, res.error_traces)
+
+
+def test_launcher_reuses_results_published_without_resumed_steps(
+        tmp_path, stream_problem):
+    """Shards published before the resumed_steps leaf existed must still be
+    reused — never recompute a valid multi-day shard over a reporting
+    field."""
+    from repro.checkpoint.manager import save_tree
+    from repro.streaming.launcher import _result_dir, spec_fingerprint
+
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1}}]
+    seeds = [0, 1]
+    kw = dict(covs=p["covs"], cases=cases, r=R, t_outer=5, t_c=T_C,
+              seeds=seeds, q_true=p["q_true"], n_workers=1)
+    ref = launch_sweep(workdir=str(tmp_path / "ref"), **kw)
+
+    # publish worker 0's result in the PRE-resumed_steps format
+    wd = tmp_path / "legacy"
+    wd.mkdir()
+    spec = {"algo": "sdot", "r": R, "t_outer": 5, "t_c": T_C,
+            "cases": cases, "shards": [seeds], "ragged": False,
+            "n_cov_stacks": 1, "has_q_true": True, "sweep_chunk": None}
+    engines = [build_engine(c["topology"]) for c in cases]
+    sw = sdot_sweep(covs=p["covs"], engines=engines, r=R, t_outer=5,
+                    t_c=T_C, seeds=seeds, q_true=p["q_true"])
+    save_tree(_result_dir(str(wd), 0),
+              {"q": sw.q, "seeds": jnp.asarray(np.asarray(seeds)),
+               "ledger": sw.ledger,
+               "spec_fp": jnp.asarray(spec_fingerprint(spec), jnp.int32),
+               "error_traces": jnp.asarray(sw.error_traces)}, step=0)
+    res = launch_sweep(workdir=str(wd), **kw)
+    assert res.resume_report["reused_shards"] == [0]
+    assert res.resume_report["worker_resumed_steps"][0] == 0
+    np.testing.assert_array_equal(res.error_traces, ref.error_traces)
+
+
+def test_launcher_spec_change_invalidates_sweep_checkpoints(
+        tmp_path, stream_problem):
+    """Re-using a workdir with a changed spec must clear the workers'
+    intermediate sweep checkpoints (their shapes/content belong to the old
+    grid) — published results are already fingerprint-guarded."""
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1}}]
+    kw = dict(covs=p["covs"], cases=cases, r=R, t_c=T_C,
+              seeds=[0, 1], q_true=p["q_true"], n_workers=1, sweep_chunk=3)
+    launch_sweep(workdir=str(tmp_path), t_outer=8, **kw)
+    # plant a stale ckpt dir, then relaunch with a different t_outer
+    ckpt = tmp_path / "worker_0" / "ckpt"
+    ckpt.mkdir(parents=True, exist_ok=True)
+    (ckpt / "step_00000003").mkdir()
+    res = launch_sweep(workdir=str(tmp_path), t_outer=6, **kw)
+    assert not ckpt.exists() or not any(ckpt.iterdir())
+    assert res.error_traces.shape == (2, 6)
