@@ -1,0 +1,153 @@
+"""Fleet robustness benchmark: straggler vs heartbeat + work stealing.
+
+The paper's Table-V straggler study shows one slow machine dominating a
+distributed sweep's wall clock. This benchmark applies that adversary to
+our own launcher (a seeded chaos ``slow`` fault pins a per-chunk sleep on
+ONE worker, ~10x its fault-free chunk time) and compares the two
+supervision modes end to end:
+
+* **pinned** — the fixed launcher: every shard is pinned to its worker, so
+  the merged result is gated on the straggler grinding through all of its
+  chunk boundaries. This is the old serial-timeout world: correct, but the
+  sweep's wall clock IS the straggler's wall clock.
+* **elastic** — lease-based fleet: the straggler's per-chunk sleep blows
+  through its lease TTL, a finished worker STEALS the stale lease and
+  resumes the shard from the victim's checkpointed sweep-RunState; the
+  victim observes the foreign fencing token at its next renewal and backs
+  off. The sweep finishes at roughly the fast workers' pace.
+
+Both modes must merge BIT-IDENTICALLY to the per-shard single-process
+reference (asserted every run — robustness never buys approximation), so
+the only thing being compared is wall clock.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--smoke]
+
+Writes BENCH_fleet.json (or .smoke.json) next to the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import sys
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.core.sweep import sdot_sweep, slice_seed_shards
+from repro.streaming.chaos import FaultPlan
+from repro.streaming.launcher import (build_engine, build_schedule,
+                                      launch_sweep)
+
+from .common import sample_problem
+
+N, R = 12, 4
+
+
+def bench_straggler(*, d, t_outer, chunk, n_seeds, sleep, ttl,
+                    assert_stolen):
+    covs, q_true = sample_problem(d=d, r=R, n_nodes=N, n_per=150, gap=0.7,
+                                  seed=0)
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.3, "seed": 1},
+              "schedule": {"kind": "lin2", "cap": 50}}]
+    seeds = list(range(n_seeds))
+    # the straggler model: worker 0 (pinned: shard 0's process; elastic:
+    # fleet worker w0) sleeps ``sleep`` seconds at EVERY chunk boundary —
+    # a persistently slow machine, not a one-shot glitch
+    plan = FaultPlan(seed=0, faults=[
+        {"kind": "slow", "worker": 0, "sleep": sleep}])
+    n_boundaries = -(-t_outer // chunk)
+
+    common = dict(covs=covs, cases=cases, r=R, t_outer=t_outer, t_c=50,
+                  seeds=seeds, q_true=q_true, n_workers=n_seeds,
+                  n_shards=n_seeds, sweep_chunk=chunk, retries=1,
+                  chaos_plan=plan, timeout=600.0)
+
+    # fixed launcher: shards pinned to workers, supervision waits the
+    # straggler out (stall detection off — the straggler heartbeats
+    # between sleeps, it is slow, not dead)
+    wd = tempfile.mkdtemp(prefix="fleet_pinned_")
+    try:
+        t0 = time.perf_counter()
+        pinned = launch_sweep(workdir=wd, stall_timeout=0.0, **common)
+        pinned_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(wd, ignore_errors=True)
+
+    # elastic fleet: the straggler's lease goes stale mid-sleep and a
+    # finished worker steals + resumes the shard from its checkpoint
+    wd = tempfile.mkdtemp(prefix="fleet_elastic_")
+    try:
+        t0 = time.perf_counter()
+        elastic = launch_sweep(workdir=wd, elastic=True, lease_ttl=ttl,
+                               **common)
+        elastic_s = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(wd, ignore_errors=True)
+
+    # bitwise acceptance against the per-shard single-process reference
+    # (matching vmap lane widths, so equality is exact, not epsilon)
+    engines = [build_engine(c["topology"]) for c in cases]
+    schedules = [build_schedule(c["schedule"], t_outer, 50) for c in cases]
+    parts = [sdot_sweep(covs=covs, engines=engines, schedules=schedules,
+                        r=R, t_outer=t_outer, t_c=50, seeds=s,
+                        q_true=q_true)
+             for s in slice_seed_shards(seeds, n_seeds)]
+    ref = np.concatenate([p.error_traces for p in parts], axis=0)
+    np.testing.assert_array_equal(np.asarray(pinned.error_traces), ref)
+    np.testing.assert_array_equal(np.asarray(elastic.error_traces), ref)
+
+    stolen = (elastic.resume_report or {}).get("stolen_shards", [])
+    if assert_stolen and not stolen:
+        raise AssertionError("elastic run finished without a single steal "
+                             "— straggler sleep/ttl did not trigger the "
+                             "stealing path")
+    return {
+        "case": f"straggler/d{d}/To{t_outer}x{n_seeds}seeds/"
+                f"sleep{sleep}s_x{n_boundaries}",
+        "straggler_penalty_s": round(sleep * n_boundaries, 2),
+        "pinned_s": round(pinned_s, 2),
+        "elastic_s": round(elastic_s, 2),
+        "speedup_x": round(pinned_s / elastic_s, 2),
+        "stolen_shards": stolen,
+        "lease_owners": (elastic.resume_report or {}).get("lease_owners"),
+        "bitwise_equal": True,
+    }
+
+
+def run_bench(smoke: bool = False):
+    if smoke:
+        return [bench_straggler(d=24, t_outer=8, chunk=2, n_seeds=4,
+                                sleep=2.0, ttl=0.5, assert_stolen=False)]
+    return [bench_straggler(d=48, t_outer=20, chunk=2, n_seeds=4,
+                            sleep=1.5, ttl=0.5, assert_stolen=True)]
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "fleet",
+        "scale": {"n_nodes": N, "r": R},
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    print(json.dumps(out, indent=2))
+    name = "BENCH_fleet.smoke.json" if smoke else "BENCH_fleet.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    if not smoke:
+        worst = min(r["speedup_x"] for r in results)
+        if worst <= 1.0:
+            print(f"# WARNING: elastic stealing did not beat the pinned "
+                  f"launcher (speedup {worst}x)")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -60,8 +60,13 @@ def _flatten_with_names(tree):
 
 
 def save_tree(path: str, tree: Any, step: int) -> None:
-    """Atomic write of a pytree snapshot into ``path`` (a step directory)."""
-    tmp = path + ".tmp"
+    """Atomic write of a pytree snapshot into ``path`` (a step directory).
+
+    The tmp dir is writer-unique (pid-suffixed) so two fenced writers — a
+    lease victim and the worker that stole its shard — never collide on the
+    staging dir; shard results are deterministic, so whichever rename lands
+    last publishes the same bits."""
+    tmp = f"{path}.tmp-{os.getpid()}"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
@@ -81,9 +86,18 @@ def save_tree(path: str, tree: Any, step: int) -> None:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
-    if os.path.exists(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)        # atomic publish
+    try:
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)    # atomic publish
+    except OSError:
+        # a concurrent fenced writer won the rename; its snapshot is
+        # byte-equivalent (deterministic recompute), so losing the race IS
+        # a successful publish — drop our staging dir and move on
+        if os.path.exists(os.path.join(path, _MANIFEST)):
+            shutil.rmtree(tmp, ignore_errors=True)
+        else:
+            raise
 
 
 def restore_tree(path: str, like: Any, *, mesh=None, specs=None) -> Any:
@@ -129,11 +143,17 @@ def _put_preserving_dtype(leaf: np.ndarray):
 
 
 class CheckpointManager:
-    """Directory layout: <root>/step_<n>/{shards.npz, manifest.json}."""
+    """Directory layout: <root>/step_<n>/{shards.npz, manifest.json}.
 
-    def __init__(self, root: str, keep_last: int = 3):
+    ``on_save`` (optional) is invoked synchronously with the step number at
+    the top of every ``save`` — the chunk-boundary hook the fleet uses for
+    heartbeat touches, lease renewals, and chaos injection, with no
+    branches in the runtime's chunk driver."""
+
+    def __init__(self, root: str, keep_last: int = 3, on_save=None):
         self.root = root
         self.keep_last = keep_last
+        self.on_save = on_save
         os.makedirs(root, exist_ok=True)
         self._worker: Optional[threading.Thread] = None
 
@@ -144,7 +164,11 @@ class CheckpointManager:
         out = []
         for name in os.listdir(self.root):
             full = os.path.join(self.root, name)
-            if name.startswith("step_") and not name.endswith(".tmp") \
+            # ".tmp" anywhere excludes both legacy "step_N.tmp" staging
+            # dirs and the writer-unique "step_N.tmp-<pid>" form; a torn
+            # dir (no manifest — e.g. chaos deleted it mid-step) is
+            # skipped the same way so latest_step never lands on it
+            if name.startswith("step_") and ".tmp" not in name \
                     and os.path.exists(os.path.join(full, _MANIFEST)):
                 out.append(int(name.split("_")[1]))
         return sorted(out)
@@ -155,6 +179,8 @@ class CheckpointManager:
 
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
         self.wait()  # never two writers
+        if self.on_save is not None:
+            self.on_save(step)
         if blocking:
             self._save(step, tree)
         else:
@@ -181,9 +207,10 @@ class CheckpointManager:
         return restore_tree(self._step_dir(step), like, mesh=mesh, specs=specs), step
 
     def _gc(self) -> None:
-        # remove stale tmp dirs (crashed writers) and old steps
+        # remove stale tmp dirs (crashed writers, any ".tmp"/".tmp-<pid>"
+        # suffix) and old steps
         for name in os.listdir(self.root):
-            if name.endswith(".tmp"):
+            if ".tmp" in name:
                 shutil.rmtree(os.path.join(self.root, name), ignore_errors=True)
         steps = self.all_steps()
         for s in steps[:-self.keep_last] if self.keep_last else []:

@@ -54,7 +54,25 @@ from .sweep_utils import (broadcast_per_case, case_node_masks,
                           pad_covs_identity, pad_weights_identity,
                           pad_zero_nodes)
 
-__all__ = ["SweepResult", "sdot_sweep", "fdot_sweep", "baseline_sweep"]
+__all__ = ["SweepResult", "sdot_sweep", "fdot_sweep", "baseline_sweep",
+           "slice_seed_shards"]
+
+
+def slice_seed_shards(seeds: Sequence[int], n_shards: int) -> list:
+    """Slice the Monte-Carlo seed axis into contiguous lease-granular shards.
+
+    This is the fleet's unit of work (and of fault tolerance): each shard
+    is one vmap lane-slice a worker computes, checkpoints, and publishes
+    independently, so the multi-host launcher can retry, steal, or
+    re-assign shards without touching the others. Contiguity is what makes
+    the merged sweep equal the single-process sweep — concatenating the
+    shard results along the seed axis preserves seed order exactly.
+    ``n_shards`` may exceed the worker count (finer stealing granularity);
+    it is clamped to the seed count so no shard is empty."""
+    seeds = [int(s) for s in seeds]
+    n_shards = max(1, min(int(n_shards), len(seeds)))
+    return [list(map(int, s))
+            for s in np.array_split(np.asarray(seeds), n_shards)]
 
 
 @dataclasses.dataclass
@@ -98,6 +116,39 @@ class SweepResult:
     @property
     def std_trace(self) -> np.ndarray:
         return self._traces().std(axis=-2)
+
+    @classmethod
+    def merge_shards(cls, trees: Sequence[dict], *, n_cases: int,
+                     has_err: bool, ragged: bool,
+                     resume_report: Optional[dict] = None) -> "SweepResult":
+        """Merge per-shard result trees along the seed axis.
+
+        ``trees`` are the published shard payloads (``q``, ``seeds``,
+        ``ledger``, optional ``error_traces`` / ``node_counts``) in shard
+        order — contiguous seed slices from ``slice_seed_shards``, so
+        concatenation reproduces the single-process sweep's seed order
+        exactly and the merged result is arithmetically identical to it
+        (bitwise when the shard lane widths match)."""
+        seed_axis = 1 if n_cases > 1 else 0
+        qs, errs, counts, node_counts = [], [], [], None
+        ledger = CommLedger()
+        for tree in trees:
+            qs.append(np.asarray(tree["q"]))
+            counts.append(np.asarray(tree["seeds"]))
+            ledger = ledger.merged(tree["ledger"])
+            if has_err:
+                errs.append(np.asarray(tree["error_traces"]))
+            if ragged:
+                node_counts = np.asarray(tree["node_counts"])
+        return cls(
+            q=jnp.asarray(np.concatenate(qs, axis=seed_axis)),
+            error_traces=(np.concatenate(errs, axis=seed_axis)
+                          if has_err else None),
+            ledger=ledger,
+            seeds=np.concatenate(counts),
+            node_counts=node_counts,
+            resume_report=resume_report,
+        )
 
 
 def _seed_inits(seeds: Sequence[int], d: int, r: int) -> jnp.ndarray:

@@ -18,6 +18,16 @@ iterations, so a killed *worker* resumes mid-grid (bitwise equal to the
 uninterrupted sweep); the summary then reports how many grid points were
 skipped via reused shards and how far each restored sweep-RunState
 carried its worker.
+
+Fleet robustness knobs (see streaming/launcher.py):
+
+* ``--elastic`` runs un-pinned fleet workers that lease, steal, and resume
+  shards; ``--shards`` sets the steal granularity (default: one per
+  worker) and ``--lease-ttl`` how quickly a silent shard is stolen.
+* ``--stall-timeout`` kills a worker whose heartbeat goes quiet (wedged
+  but alive); ``--heartbeat-interval`` is the supervision poll period.
+* ``--chaos-plan <plan.json>`` injects a seeded FaultPlan into the workers
+  (kill/corrupt/slow/hang/drop — streaming/chaos.py) for fire drills.
 """
 from __future__ import annotations
 
@@ -56,6 +66,28 @@ def main(argv=None) -> int:
     ap.add_argument("--sweep-chunk", type=int, default=None,
                     help="outer iterations per sweep checkpoint chunk "
                          "(default: t_outer // 5, implies --resume)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="leasable seed shards (default: one per worker; "
+                         "more shards = finer work stealing)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="fleet mode: un-pinned workers lease/steal/resume "
+                         "shards; workers may join or leave mid-sweep")
+    ap.add_argument("--retries", type=int, default=1,
+                    help="per-shard (pinned) / per-slot (elastic) retry "
+                         "budget")
+    ap.add_argument("--timeout", type=float, default=900.0,
+                    help="shared wall-clock deadline for the whole launch")
+    ap.add_argument("--stall-timeout", type=float, default=None,
+                    help="kill a worker whose heartbeat is older than this "
+                         "(default: 60s when chunked, 0 = off)")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.2,
+                    help="supervision poll period in seconds")
+    ap.add_argument("--lease-ttl", type=float, default=30.0,
+                    help="elastic mode: seconds before a silent shard "
+                         "lease becomes stealable")
+    ap.add_argument("--chaos-plan", default=None,
+                    help="path to a FaultPlan JSON to inject into workers "
+                         "(fire-drill mode; see streaming/chaos.py)")
     args = ap.parse_args(argv)
 
     import jax.numpy as jnp
@@ -80,7 +112,7 @@ def main(argv=None) -> int:
     topo = {"kind": args.topology, "n": args.nodes, "p": args.p,
             "seed": args.graph_seed}
     sched = {"kind": args.schedule, "t_max": args.t_c, "cap": args.cap}
-    resume = args.resume or args.sweep_chunk is not None
+    resume = args.resume or args.sweep_chunk is not None or args.elastic
     sweep_chunk = None
     if resume:
         sweep_chunk = args.sweep_chunk or max(1, args.t_outer // 5)
@@ -90,7 +122,13 @@ def main(argv=None) -> int:
                       r=args.r, t_outer=args.t_outer, t_c=args.t_c,
                       seeds=list(range(args.seeds)), q_true=q_true,
                       workdir=args.workdir, n_workers=args.workers,
-                      sweep_chunk=sweep_chunk)
+                      n_shards=args.shards, sweep_chunk=sweep_chunk,
+                      elastic=args.elastic, retries=args.retries,
+                      timeout=args.timeout,
+                      stall_timeout=args.stall_timeout,
+                      poll_interval=args.heartbeat_interval,
+                      lease_ttl=args.lease_ttl,
+                      chaos_plan=args.chaos_plan)
     sweep_s = time.perf_counter() - t0
 
     summary = {
@@ -109,7 +147,13 @@ def main(argv=None) -> int:
             "skipped_grid_points": rep["skipped_grid_points"],
             "reused_shards": rep["reused_shards"],
             "worker_resumed_steps": rep["worker_resumed_steps"],
+            "attempts": rep["attempts"],
         }
+        if "load_errors" in rep:
+            summary["resume"]["load_errors"] = rep["load_errors"]
+        if args.elastic:
+            summary["resume"]["stolen_shards"] = rep.get("stolen_shards")
+            summary["resume"]["lease_owners"] = rep.get("lease_owners")
     print(json.dumps(summary, indent=2))
     return 0
 

@@ -1,0 +1,356 @@
+"""Seeded fault-injection harness for the sweep fleet.
+
+The paper's Table-V straggler study shows one slow machine dominating a
+serverless sweep; this module applies the same adversary to our own fleet
+so the launcher's recovery paths (heartbeat supervision, retry budgets,
+lease stealing, checkpoint fallback) are *proven* rather than assumed. A
+``FaultPlan`` is a small, seeded, declarative JSON document:
+
+    {"seed": 0, "faults": [
+        {"kind": "kill",    "shard": 0},                  # SIGKILL at a
+                                                          # seeded chunk
+                                                          # boundary
+        {"kind": "corrupt", "shard": 1, "mode": "truncate"},
+                                                          # tear the newest
+                                                          # ckpt, then die
+        {"kind": "slow",    "worker": 0, "factor": 10.0}, # straggler model
+        {"kind": "slow",    "shard": 2, "sleep": 0.5},    # fixed per-chunk
+        {"kind": "hang",    "shard": 3, "sleep": 600},    # wedge (no exit,
+                                                          # no heartbeat)
+        {"kind": "drop",    "shard": 4},                  # lose the
+                                                          # published result
+    ]}
+
+Injection is wired through ENV VARS so production code carries no chaos
+branches: the worker unconditionally calls ``hooks_from_env(...)`` and the
+returned hooks are no-ops unless ``REPRO_CHAOS_PLAN`` names a plan file.
+One-shot faults (kill / corrupt / hang / drop) record a marker file under
+``<workdir>/chaos_state/`` *before* firing, so a relaunched worker does not
+re-fire them — every chaos run terminates, and the recovered result can be
+asserted bit-identical to the fault-free sweep (tests/test_chaos.py, the
+CI chaos-smoke job, and ``python -m repro.streaming.chaos --smoke``).
+
+Fault semantics:
+
+* ``kill``: at a chunk boundary chosen by the plan's seeded RNG (or a
+  pinned ``"boundary"``), SIGKILL the worker process. Recovery: the
+  launcher's poll loop sees the death in ~one poll interval and relaunches
+  with backoff; the relaunch resumes from the shard's sweep-RunState
+  checkpoint.
+* ``corrupt``: at a seeded boundary, tear the newest checkpoint step —
+  ``truncate`` halves ``shards.npz``, ``garbage`` overwrites it,
+  ``manifest`` deletes ``manifest.json`` (a torn dir ``latest_step`` must
+  skip) — then SIGKILL. Recovery: restore falls back to the newest
+  restorable step (``runtime._restore_any``).
+* ``slow``: the paper's straggler model applied per worker: every chunk
+  boundary sleeps ``(factor - 1) x`` the measured chunk walltime (or a
+  fixed ``sleep``). Never one-shot. Recovery: lease expiry + work
+  stealing (elastic mode) or simply a slower shard (pinned mode).
+* ``hang``: sleep ``sleep`` seconds at a seeded boundary without exiting —
+  a wedged worker that stays alive but stops heartbeating. Recovery:
+  stale-heartbeat supervision kills and relaunches it.
+* ``drop``: delete the freshly published result directory (a lost
+  publish). The worker still exits 0 — recovery is the launcher treating
+  rc==0 with no valid result as a failure and retrying.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["FaultPlan", "ChaosHooks", "hooks_from_env", "ENV_PLAN"]
+
+ENV_PLAN = "REPRO_CHAOS_PLAN"
+_STATE_DIR = "chaos_state"
+
+_KINDS = ("kill", "corrupt", "slow", "hang", "drop")
+_ONE_SHOT = ("kill", "corrupt", "hang", "drop")
+
+
+class FaultPlan:
+    """Declarative, seeded fault schedule (see module docstring)."""
+
+    def __init__(self, faults: List[dict], seed: int = 0):
+        for i, f in enumerate(faults):
+            if f.get("kind") not in _KINDS:
+                raise ValueError(f"fault {i}: unknown kind {f.get('kind')!r}"
+                                 f" (expected one of {_KINDS})")
+        self.faults = list(faults)
+        self.seed = int(seed)
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as f:
+            doc = json.load(f)
+        return cls(doc.get("faults", []), seed=doc.get("seed", 0))
+
+    def dump(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump({"seed": self.seed, "faults": self.faults}, f,
+                      indent=2)
+        return path
+
+    def boundary_for(self, fault_idx: int, n_boundaries: int) -> int:
+        """The 1-indexed chunk boundary at which fault ``fault_idx`` fires.
+
+        Deterministic in (plan seed, fault index): the same plan replayed
+        against the same grid kills/corrupts at the same boundary, so chaos
+        runs are reproducible end to end."""
+        fault = self.faults[fault_idx]
+        if fault.get("boundary") is not None:
+            return int(fault["boundary"])
+        rng = np.random.default_rng(self.seed * 7919 + fault_idx)
+        return int(rng.integers(1, max(2, n_boundaries + 1)))
+
+
+def _matches(fault: dict, shard: Optional[int], worker: Optional[str]) -> bool:
+    """A fault applies when every target it names matches this process.
+
+    ``shard`` targets the work item (kill/corrupt/drop travel with the
+    shard's state); ``worker`` targets the process identity — ``"w<k>"`` for
+    fleet workers, the shard index for pinned workers — which is the right
+    axis for the straggler model (a slow *machine*, whatever it runs)."""
+    if "shard" in fault and (shard is None or int(fault["shard"]) != shard):
+        return False
+    if "worker" in fault:
+        want = str(fault["worker"])
+        have = "" if worker is None else str(worker)
+        if want != have and f"w{want}" != have:
+            return False
+    return True
+
+
+class ChaosHooks:
+    """Per-process injection hooks; a no-op shell when ``plan`` is None.
+
+    ``at_boundary(step)`` is invoked from the checkpoint manager's
+    ``on_save`` callback (every chunk boundary); ``after_publish(out_dir)``
+    right after the worker publishes its result.
+    """
+
+    def __init__(self, plan: Optional[FaultPlan], *, shard=None, worker=None,
+                 n_boundaries: int = 1, ckpt_root: Optional[str] = None,
+                 state_dir: Optional[str] = None):
+        self.plan = plan
+        self.shard = None if shard is None else int(shard)
+        self.worker = None if worker is None else str(worker)
+        self.n_boundaries = max(1, int(n_boundaries))
+        self.ckpt_root = ckpt_root
+        self.state_dir = state_dir
+        self._boundary = 0
+        self._last_t = time.monotonic()
+        if plan is not None and state_dir:
+            os.makedirs(state_dir, exist_ok=True)
+
+    @property
+    def active(self) -> bool:
+        return self.plan is not None
+
+    # -- one-shot bookkeeping -------------------------------------------
+    def _marker(self, idx: int) -> str:
+        tag = f"fired_{idx}" + ("" if self.shard is None
+                                else f"_s{self.shard}")
+        return os.path.join(self.state_dir or ".", tag)
+
+    def _fired(self, idx: int) -> bool:
+        return os.path.exists(self._marker(idx))
+
+    def _mark(self, idx: int) -> None:
+        # the marker lands BEFORE the fault executes: a SIGKILL mid-fault
+        # must not re-arm it on relaunch
+        with open(self._marker(idx), "w") as f:
+            f.write(str(time.time()))
+            f.flush()
+            os.fsync(f.fileno())
+
+    # -- fault executors -------------------------------------------------
+    def _corrupt_newest(self, mode: str) -> None:
+        root = self.ckpt_root
+        if not root or not os.path.isdir(root):
+            return
+        steps = sorted(n for n in os.listdir(root)
+                       if n.startswith("step_") and ".tmp" not in n)
+        if not steps:
+            return
+        newest = os.path.join(root, steps[-1])
+        shard_file = os.path.join(newest, "shards.npz")
+        if mode == "manifest":
+            os.remove(os.path.join(newest, "manifest.json"))
+        elif mode == "truncate" and os.path.exists(shard_file):
+            size = os.path.getsize(shard_file)
+            with open(shard_file, "r+b") as f:
+                f.truncate(size // 2)
+        else:  # "garbage"
+            with open(shard_file, "wb") as f:
+                f.write(b"chaos: not an npz")
+
+    # -- hook entry points -----------------------------------------------
+    def at_boundary(self, step: int) -> None:
+        if self.plan is None:
+            return
+        self._boundary += 1
+        elapsed = time.monotonic() - self._last_t
+        self._last_t = time.monotonic()
+        for idx, fault in enumerate(self.plan.faults):
+            if not _matches(fault, self.shard, self.worker):
+                continue
+            kind = fault["kind"]
+            if kind == "slow":
+                if "sleep" in fault:
+                    time.sleep(float(fault["sleep"]))
+                else:
+                    time.sleep(max(0.0, (float(fault.get("factor", 2.0))
+                                         - 1.0) * elapsed))
+                continue
+            if kind == "drop":
+                continue  # fires at publish time
+            if self._boundary != self.plan.boundary_for(
+                    idx, self.n_boundaries) or self._fired(idx):
+                continue
+            self._mark(idx)
+            if kind == "hang":
+                time.sleep(float(fault.get("sleep", 600.0)))
+            elif kind == "corrupt":
+                self._corrupt_newest(fault.get("mode", "garbage"))
+                os.kill(os.getpid(), signal.SIGKILL)
+            elif kind == "kill":
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    def after_publish(self, out_dir: str) -> None:
+        if self.plan is None:
+            return
+        for idx, fault in enumerate(self.plan.faults):
+            if (fault["kind"] == "drop"
+                    and _matches(fault, self.shard, self.worker)
+                    and not self._fired(idx)):
+                self._mark(idx)
+                import shutil
+                shutil.rmtree(out_dir, ignore_errors=True)
+
+
+def hooks_from_env(*, shard=None, worker=None, n_boundaries: int = 1,
+                   ckpt_root: Optional[str] = None,
+                   workdir: Optional[str] = None) -> ChaosHooks:
+    """The worker's single chaos entry point.
+
+    Without ``REPRO_CHAOS_PLAN`` in the environment this returns inert
+    hooks — the production path never branches on chaos, it just calls
+    methods that do nothing."""
+    path = os.environ.get(ENV_PLAN)
+    if not path:
+        return ChaosHooks(None)
+    plan = FaultPlan.load(path)
+    state_dir = os.path.join(workdir or os.path.dirname(path), _STATE_DIR)
+    return ChaosHooks(plan, shard=shard, worker=worker,
+                      n_boundaries=n_boundaries, ckpt_root=ckpt_root,
+                      state_dir=state_dir)
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos-smoke scenario (CI entry point)
+# ---------------------------------------------------------------------------
+def run_smoke(workdir: str, *, seed: int = 0, verbose: bool = True) -> dict:
+    """The CI chaos-equivalence scenario: a small pinned grid under a fixed
+    FaultPlan (one SIGKILL at a seeded chunk boundary, one corrupt-newest-
+    checkpoint, one straggler, one dropped result) must complete via
+    retry/backoff and merge bit-identically to the fault-free reference at
+    matching lane widths.  Returns a summary dict; raises on mismatch."""
+    import jax.numpy as jnp
+
+    from ..core.linalg import eigh_topr
+    from ..core.sweep import sdot_sweep, slice_seed_shards
+    from ..data.pipeline import eigengap_stream
+    from ..streaming.ingest import StreamingIngestor
+    from ..streaming.launcher import build_engine, build_schedule, launch_sweep
+
+    d, r, n_nodes, t_outer, t_c = 16, 3, 6, 8, 10
+    seeds = list(range(4))
+    batch_fn, _, _ = eigengap_stream(d, r, 0.7, seed=seed)
+    ing = StreamingIngestor(n_nodes=n_nodes, d=d, batch_fn=batch_fn,
+                            batch_size=30)
+    ing.ingest(10)
+    covs = ing.cov_stack()
+    _, q_true = eigh_topr(covs.sum(0), r)
+    cases = [{"topology": {"kind": "er", "n": n_nodes, "p": 0.5, "seed": 1},
+              "schedule": {"kind": "lin2", "cap": t_c}}]
+
+    # corrupt is pinned to boundary 3 so there IS a newest checkpoint to
+    # tear (steps 2 and 4 are on disk by then): the relaunch must fall
+    # back to step 2, not start fresh
+    plan = FaultPlan(seed=seed, faults=[
+        {"kind": "kill", "shard": 0},
+        {"kind": "corrupt", "shard": 1, "mode": "truncate", "boundary": 3},
+        {"kind": "slow", "shard": 2, "sleep": 0.2},
+        {"kind": "drop", "shard": 3},
+    ])
+    t0 = time.perf_counter()
+    sw = launch_sweep(covs=covs, cases=cases, r=r, t_outer=t_outer, t_c=t_c,
+                      seeds=seeds, q_true=q_true, workdir=workdir,
+                      n_workers=4, n_shards=4, sweep_chunk=2, retries=2,
+                      chaos_plan=plan, timeout=600.0)
+    chaos_s = time.perf_counter() - t0
+
+    # fault-free reference at MATCHING lane widths: run each shard's seed
+    # slice single-process and concatenate, so equality can be bitwise
+    engines = [build_engine(c["topology"]) for c in cases]
+    schedules = [build_schedule(c["schedule"], t_outer, t_c) for c in cases]
+    shard_seeds = slice_seed_shards(seeds, 4)
+    parts = [sdot_sweep(covs=covs, engines=engines, schedules=schedules,
+                        r=r, t_outer=t_outer, t_c=t_c, seeds=s,
+                        q_true=q_true) for s in shard_seeds]
+    ref_err = np.concatenate([p.error_traces for p in parts], axis=0)
+    ref_q = np.concatenate([np.asarray(p.q) for p in parts], axis=0)
+    np.testing.assert_array_equal(np.asarray(sw.error_traces), ref_err)
+    np.testing.assert_array_equal(np.asarray(sw.q), ref_q)
+    assert list(sw.seeds) == seeds
+    ref_ledger = parts[0].ledger
+    for p in parts[1:]:
+        ref_ledger = ref_ledger.merged(p.ledger)
+    assert sw.ledger.p2p == ref_ledger.p2p
+    assert sw.ledger.scalars == ref_ledger.scalars
+
+    rep = sw.resume_report or {}
+    # the recovery PATHS are part of the acceptance, not just the bits:
+    # kill/corrupt/drop each consumed a retry; the torn shard-1 checkpoint
+    # (newest step 4, truncated at boundary 3) fell back to step 2
+    assert rep["attempts"][0] == 2, rep
+    assert rep["attempts"][1] == 2, rep
+    assert rep["attempts"][2] == 1, rep
+    assert rep["attempts"][3] == 2, rep
+    assert rep["worker_resumed_steps"][1] == 2, rep
+    summary = {
+        "chaos_sweep_s": round(chaos_s, 3),
+        "faults": [f["kind"] for f in plan.faults],
+        "attempts": rep.get("attempts"),
+        "worker_resumed_steps": rep.get("worker_resumed_steps"),
+        "bitwise_equal": True,
+    }
+    if verbose:
+        print(json.dumps(summary, indent=2))
+    return summary
+
+
+def main(argv=None) -> int:
+    import argparse
+    import tempfile
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the seeded CI chaos-equivalence scenario")
+    ap.add_argument("--workdir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if not args.smoke:
+        ap.error("nothing to do (pass --smoke)")
+    workdir = args.workdir or tempfile.mkdtemp(prefix="chaos_smoke_")
+    run_smoke(workdir, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,244 @@
+"""Fleet primitives: heartbeats, leasable shards, work stealing.
+
+The sweep grid's unit of fault tolerance is the *shard* (a contiguous seed
+slice of the case x seed grid, see ``core.sweep.slice_seed_shards``).  This
+module makes shards **leasable** so fleet membership can be elastic:
+
+* ``LeaseStore`` keeps one JSON lease per shard under
+  ``<workdir>/leases/``. A lease carries a monotonically increasing
+  **fencing token**, the current owner, renewal timestamps, and the owner
+  history (every acquisition appends — stolen shards are visible in the
+  resume report). Acquisition is write-then-verify: claimants atomically
+  rename a nonce-stamped claim over the lease file and re-read it; the
+  last rename wins and everyone else observes a foreign nonce and backs
+  off. The residual split-brain window (A verifies before B renames) is
+  HARMLESS here by construction: shard results are deterministic, and both
+  checkpoint writes and the result publish are atomic renames of
+  writer-unique tmp dirs — two owners can only duplicate work, never
+  corrupt state or change the merged bits. The fencing token still fences
+  *liveness*: a victim whose lease was stolen discovers the foreign token
+  at its next chunk-boundary renewal and abandons the shard
+  (``LeaseLost``) instead of computing to the end.
+
+* **Heartbeats** are progress beats, not liveness timers: the worker
+  touches ``<workdir>/worker_<shard>/heartbeat`` at every chunk boundary
+  (wired through ``CheckpointManager.on_save``), so a wedged-but-alive
+  worker goes stale and the launcher's supervision loop can kill and
+  relaunch it in seconds — while plain process death is caught even faster
+  by ``Popen.poll``.
+
+* ``fleet_worker_loop`` is the elastic worker body: acquire any available
+  shard (a lease we already hold first, then never-leased, then the
+  STALEST expired lease — the straggler's), run it resuming from the
+  victim's checkpointed
+  sweep-RunState, publish, release, repeat; exit when every shard has a
+  published result. Workers may join mid-sweep (just start another
+  process: it takes leases) and leave mid-sweep (their leases expire and
+  get stolen).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import uuid
+from typing import Dict, List, Optional
+
+__all__ = ["LeaseLost", "LeaseStore", "Lease", "touch_heartbeat",
+           "heartbeat_age", "fleet_worker_loop"]
+
+_LEASE_DIR = "leases"
+
+
+class LeaseLost(RuntimeError):
+    """Raised at a renewal that finds a foreign fencing token: the shard
+    was stolen from us — stop computing it."""
+
+
+def touch_heartbeat(path: str, step: int = 0) -> None:
+    """Atomically (re)write the heartbeat file; staleness is its mtime."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"pid": os.getpid(), "step": int(step),
+                   "t": time.time()}, f)
+    os.replace(tmp, path)
+
+
+def heartbeat_age(path: str, now: Optional[float] = None) -> Optional[float]:
+    """Seconds since the last beat, or None if no heartbeat exists yet."""
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        return None
+    return (time.time() if now is None else now) - mtime
+
+
+class Lease(dict):
+    """A lease document (plain dict with typed accessors)."""
+
+    @property
+    def owner(self) -> str:
+        return self.get("owner", "")
+
+    @property
+    def token(self) -> int:
+        return int(self.get("token", 0))
+
+    @property
+    def renewed_at(self) -> float:
+        return float(self.get("renewed_at", 0.0))
+
+    @property
+    def owners(self) -> List[str]:
+        return list(self.get("owners", []))
+
+    def expired(self, ttl: float, now: Optional[float] = None) -> bool:
+        return ((time.time() if now is None else now)
+                - self.renewed_at) > ttl
+
+
+class LeaseStore:
+    """File-backed lease table, one lease per shard (see module docstring).
+
+    All mutations are atomic renames; reads tolerate concurrent writers by
+    treating an unreadable lease as absent (the writer will re-verify).
+    """
+
+    def __init__(self, workdir: str, ttl: float = 30.0):
+        self.root = os.path.join(workdir, _LEASE_DIR)
+        self.ttl = float(ttl)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, shard: int) -> str:
+        return os.path.join(self.root, f"shard_{int(shard)}.json")
+
+    def read(self, shard: int) -> Optional[Lease]:
+        try:
+            with open(self._path(shard)) as f:
+                return Lease(json.load(f))
+        except (OSError, ValueError):
+            return None
+
+    def _write(self, shard: int, doc: dict) -> None:
+        tmp = self._path(shard) + f".tmp-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._path(shard))
+
+    def try_acquire(self, shard: int, owner: str) -> Optional[Lease]:
+        """Acquire ``shard`` if it is unleased, expired, or already ours.
+
+        Returns the lease we now hold (with a freshly bumped fencing
+        token), or None if a live foreign owner holds it or a concurrent
+        claimant out-renamed us."""
+        now = time.time()
+        cur = self.read(shard)
+        if (cur is not None and cur.owner != owner
+                and not cur.expired(self.ttl, now)):
+            return None
+        nonce = uuid.uuid4().hex
+        doc = Lease({
+            "owner": owner,
+            "token": (cur.token + 1) if cur else 1,
+            "acquired_at": now,
+            "renewed_at": now,
+            "nonce": nonce,
+            "owners": (cur.owners if cur else []) + [owner],
+        })
+        self._write(shard, doc)
+        got = self.read(shard)
+        if got is None or got.get("nonce") != nonce:
+            return None                       # out-renamed by another claimant
+        return got
+
+    def renew(self, shard: int, owner: str, token: int) -> None:
+        """Refresh our renewal stamp; raise ``LeaseLost`` on a foreign
+        token (the shard was stolen — abandon it)."""
+        cur = self.read(shard)
+        if cur is None or cur.owner != owner or cur.token != int(token):
+            raise LeaseLost(f"shard {shard}: lease lost to "
+                            f"{cur.owner if cur else '<gone>'}")
+        cur["renewed_at"] = time.time()
+        self._write(shard, cur)
+
+    def release(self, shard: int, owner: str, token: int,
+                done: bool = False) -> None:
+        cur = self.read(shard)
+        if cur is None or cur.owner != owner or cur.token != int(token):
+            return                            # stolen meanwhile — nothing to do
+        cur["owner"] = ""
+        cur["done"] = bool(done)
+        cur["renewed_at"] = 0.0               # immediately acquirable
+        self._write(shard, cur)
+
+    def pick(self, shards: List[int], owner: str) -> Optional[int]:
+        """The next shard ``owner`` should take: a shard whose lease we
+        ALREADY hold first (reclaiming our own work is always right, and
+        the fencing token still protects it if someone stole it meanwhile),
+        then a never-leased shard, else the STALEST expired lease (the
+        worst straggler's)."""
+        now = time.time()
+        stalest, stalest_age = None, -1.0
+        for s in shards:
+            cur = self.read(s)
+            if cur is not None and cur.owner == owner:
+                return s
+        for s in shards:
+            cur = self.read(s)
+            if cur is None:
+                return s
+            if cur.expired(self.ttl, now):
+                age = now - cur.renewed_at
+                if age > stalest_age:
+                    stalest, stalest_age = s, age
+        return stalest
+
+    def snapshot(self) -> Dict[int, Lease]:
+        out = {}
+        for name in os.listdir(self.root):
+            if name.startswith("shard_") and name.endswith(".json"):
+                shard = int(name[len("shard_"):-len(".json")])
+                lease = self.read(shard)
+                if lease is not None:
+                    out[shard] = lease
+        return out
+
+
+def fleet_worker_loop(spec: dict, workdir: str, worker_id: str, *,
+                      ttl: float, poll: float = 0.2) -> int:
+    """Elastic worker body: steal-and-run shards until all are published.
+
+    Imported lazily by ``streaming.worker`` so the worker module keeps
+    controlling its own jax flags before any heavy import."""
+    from .launcher import _load_result
+    from .worker import run_shard
+
+    store = LeaseStore(workdir, ttl=ttl)
+    shards = list(range(len(spec["shards"])))
+    ran = 0
+    while True:
+        pending = [s for s in shards
+                   if _load_result(workdir, spec, s) is None]
+        if not pending:
+            break
+        shard = store.pick(pending, worker_id)
+        if shard is None:
+            time.sleep(poll)                 # all pending shards live-leased
+            continue
+        lease = store.try_acquire(shard, worker_id)
+        if lease is None:
+            time.sleep(poll)
+            continue
+        try:
+            run_shard(spec, workdir, shard, worker=worker_id,
+                      lease_store=store, lease=lease)
+            ran += 1
+            store.release(shard, worker_id, lease.token, done=True)
+        except LeaseLost:
+            print(f"fleet {worker_id}: shard {shard} stolen, moving on")
+            continue
+    print(f"fleet {worker_id}: all shards published ({ran} run here)")
+    return 0

@@ -1,60 +1,92 @@
-"""Sweep worker: one host's vmap lane-slice of a sharded Monte-Carlo sweep.
+"""Sweep worker: one shard of a sharded Monte-Carlo sweep, fleet-hardened.
 
 Usage (spawned by ``streaming/launcher.py``; runnable by hand for debugs):
 
     python -m repro.streaming.worker <workdir>/spec.json <shard_idx>
+    python -m repro.streaming.worker <workdir>/spec.json --fleet \
+        --worker w0 [--ttl 30]
+
+The pinned form runs exactly one shard. The ``--fleet`` form runs the
+elastic loop (``streaming/fleet.py``): acquire any available shard lease,
+run it — resuming from whatever sweep-RunState checkpoint the previous
+owner published — release, steal the next, and exit once every shard has a
+published result. New fleet workers can join a sweep at any time; leaving
+is just letting the lease expire.
 
 Rebuilds its engines/schedules from the spec (seed-deterministic graph
 constructions — no pickled objects cross the host boundary), loads the cov
 stacks from ``problem.npz``, runs ``sdot_sweep`` over its shard's seed
 slice, and publishes ``{q, error_traces, seeds, ledger}`` atomically into
-its own checkpoint dir ``<workdir>/worker_<shard>/result`` via
-``checkpoint/manager.save_tree`` — the CommLedger travels as a registered
-pytree.  If a valid result is already published the worker exits
-immediately (idempotent relaunch).
+``<workdir>/worker_<shard>/result``. If a valid result is already
+published the worker exits immediately (idempotent relaunch) — and also
+sweeps away any leftover ``ckpt`` dir, closing the crash window between
+result publish and checkpoint cleanup: the published result ALWAYS wins
+over a stale intermediate checkpoint.
 
-With ``spec["sweep_chunk"]`` set, the shard's sweep runs through the
-unified runtime's CHUNKED driver: the sweep-RunState (case x seed lane
-axes riding on every buffer) checkpoints into
-``<workdir>/worker_<shard>/ckpt`` every ``sweep_chunk`` outer iterations,
-so a worker killed mid-sweep resumes MID-GRID from its checkpointed state
-— bitwise equal to the uninterrupted sweep — instead of recomputing the
-shard from scratch. The published result records ``resumed_steps`` (how
-many outer iterations the restored state already carried) for the
-launcher's resume report.
+Robustness wiring (all no-ops outside a supervised launch):
+
+* a **heartbeat** file ``worker_<shard>/heartbeat`` is touched at every
+  chunk boundary (via ``CheckpointManager.on_save``) and just before the
+  result publish, so the launcher's supervision loop can spot a wedged
+  worker by staleness (it is a PROGRESS beat: the launcher only treats a
+  worker as stalled once it has beaten at least once this attempt, so
+  import/compile startup never reads as a stall);
+* **chaos hooks** (``streaming/chaos.py``) are installed from the
+  ``REPRO_CHAOS_PLAN`` env var — production code carries no fault-injection
+  branches;
+* under a **lease** (fleet mode) every chunk boundary renews the lease;
+  a foreign fencing token raises ``LeaseLost`` and the shard is abandoned
+  mid-run instead of wasting compute on stolen work.
+
+With ``spec["sweep_chunk"]`` set, the shard runs through the unified
+runtime's CHUNKED driver: the sweep-RunState (case x seed lane axes riding
+on every buffer) checkpoints into ``<workdir>/worker_<shard>/ckpt`` every
+``sweep_chunk`` outer iterations, so a killed worker — or a stealing
+neighbour — resumes MID-GRID, bitwise equal to the uninterrupted sweep.
+The published result records ``resumed_steps`` for the launcher's resume
+report.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import shutil
 import sys
 
 
-def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 2:
-        print(__doc__, file=sys.stderr)
-        return 2
-    spec_path, shard = argv[0], int(argv[1])
-    workdir = os.path.dirname(os.path.abspath(spec_path))
-    with open(spec_path) as f:
-        spec = json.load(f)
+def run_shard(spec: dict, workdir: str, shard: int, *, worker=None,
+              lease_store=None, lease=None) -> int:
+    """Compute and publish one shard (idempotent; resumes from checkpoints).
 
-    out_dir = os.path.join(workdir, f"worker_{shard}", "result")
-
+    ``worker`` is the process identity for chaos targeting and lease
+    ownership (defaults to the shard index). ``lease_store``/``lease``
+    wire per-chunk-boundary lease renewal in fleet mode."""
     import jax.numpy as jnp
     import numpy as np
 
     from repro.checkpoint.manager import CheckpointManager, save_tree
     from repro.core.sweep import sdot_sweep
-    from repro.streaming.launcher import (_load_result, build_engine,
-                                          build_schedule, spec_fingerprint)
+    from repro.streaming import chaos
+    from repro.streaming.fleet import touch_heartbeat
+    from repro.streaming.launcher import (_load_result, _worker_dir,
+                                          build_engine, build_schedule,
+                                          spec_fingerprint)
+
+    shard = int(shard)
+    shard_dir = _worker_dir(workdir, shard)
+    out_dir = os.path.join(shard_dir, "result")
+    ckpt_dir = os.path.join(shard_dir, "ckpt")
+    hb_path = os.path.join(shard_dir, "heartbeat")
+    worker_id = str(worker) if worker is not None else str(shard)
 
     # idempotent relaunch — but only for a result stamped with THIS spec's
     # fingerprint: a hand-run worker in a reused workdir must not keep a
-    # shard computed under an older spec
+    # shard computed under an older spec. The published result always wins;
+    # any ckpt dir a crash left behind next to it is stale by definition
+    # and is cleaned up here, making the publish->cleanup pair idempotent.
     if _load_result(workdir, spec, shard) is not None:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
         print(f"worker {shard}: result already published, nothing to do")
         return 0
     shutil.rmtree(out_dir, ignore_errors=True)
@@ -76,12 +108,26 @@ def main(argv=None) -> int:
               else None)
 
     sweep_chunk = spec.get("sweep_chunk")
+    n_boundaries = (-(-spec["t_outer"] // sweep_chunk) if sweep_chunk else 1)
+    hooks = chaos.hooks_from_env(shard=shard, worker=worker_id,
+                                 n_boundaries=n_boundaries,
+                                 ckpt_root=ckpt_dir, workdir=workdir)
+
+    def on_boundary(step: int) -> None:
+        # chunk-boundary side effects, in supervision order: inject faults
+        # first (a killed worker must not beat), then beat, then renew the
+        # lease (a stolen lease aborts the run via LeaseLost)
+        hooks.at_boundary(step)
+        touch_heartbeat(hb_path, step=step)
+        if lease_store is not None and lease is not None:
+            lease_store.renew(shard, worker_id, lease.token)
+
     manager = None
     if sweep_chunk:
         # chunked-resumable shard: the sweep-RunState checkpoints at every
-        # chunk boundary, and a restarted worker continues mid-grid
-        manager = CheckpointManager(
-            os.path.join(workdir, f"worker_{shard}", "ckpt"))
+        # chunk boundary, and a restarted (or stealing) worker continues
+        # mid-grid from it
+        manager = CheckpointManager(ckpt_dir, on_save=on_boundary)
 
     sw = sdot_sweep(covs=covs, engines=engines, schedules=schedules,
                     r=spec["r"], t_outer=spec["t_outer"], t_c=spec["t_c"],
@@ -101,14 +147,48 @@ def main(argv=None) -> int:
         tree["error_traces"] = jnp.asarray(sw.error_traces)
     if spec["ragged"]:
         tree["node_counts"] = jnp.asarray(sw.node_counts)
+    touch_heartbeat(hb_path, step=spec["t_outer"])
     save_tree(out_dir, tree, step=shard)
-    if manager is not None:
-        # the published result supersedes the intermediate sweep state
-        shutil.rmtree(manager.root, ignore_errors=True)
+    hooks.after_publish(out_dir)
+    # the published result supersedes the intermediate sweep state; a kill
+    # landing between the publish above and this cleanup is benign — the
+    # relaunch path at the top of this function redoes the cleanup and the
+    # result always wins over the stale checkpoint
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
     print(f"worker {shard}: published {len(seeds)} seed lanes -> {out_dir}"
           + (f" (resumed from outer step {resumed_steps})"
              if resumed_steps else ""))
     return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("spec", help="path to <workdir>/spec.json")
+    ap.add_argument("shard", nargs="?", default=None,
+                    help="shard index (pinned mode)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="elastic mode: lease-and-steal shards until the "
+                         "whole grid is published")
+    ap.add_argument("--worker", default=None,
+                    help="fleet worker identity (e.g. w0)")
+    ap.add_argument("--ttl", type=float, default=30.0,
+                    help="lease time-to-live in seconds (fleet mode)")
+    args = ap.parse_args(argv)
+    if args.fleet == (args.shard is not None):
+        ap.error("pass a shard index (pinned) or --fleet (elastic), not both")
+
+    workdir = os.path.dirname(os.path.abspath(args.spec))
+    with open(args.spec) as f:
+        spec = json.load(f)
+
+    if args.fleet:
+        from repro.streaming.fleet import fleet_worker_loop
+        worker_id = args.worker or f"w{os.getpid()}"
+        return fleet_worker_loop(spec, workdir, worker_id, ttl=args.ttl)
+    return run_shard(spec, workdir, int(args.shard), worker=args.worker)
 
 
 if __name__ == "__main__":

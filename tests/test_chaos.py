@@ -1,0 +1,363 @@
+"""Chaos-hardened fleet runtime: fault injection, leases, supervision.
+
+The load-bearing property everywhere: NO fault changes the merged bits.
+Whatever the chaos plan does — SIGKILL at a chunk boundary, a torn newest
+checkpoint, a straggler, a dropped publish, a stolen lease — the launcher
+must complete via retry/steal/fallback and the merged SweepResult must
+equal the fault-free per-shard single-process reference bit for bit
+(shard lane widths match, so equality is exact, not epsilon).
+"""
+import json
+import os
+import shutil
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.linalg import eigh_topr
+from repro.core.sweep import sdot_sweep, slice_seed_shards
+from repro.streaming import chaos
+from repro.streaming.chaos import ChaosHooks, FaultPlan
+from repro.streaming.fleet import (LeaseLost, LeaseStore, fleet_worker_loop,
+                                   heartbeat_age, touch_heartbeat)
+from repro.streaming.launcher import (_load_result, build_engine,
+                                      build_schedule, launch_sweep,
+                                      spec_fingerprint)
+from repro.streaming.worker import run_shard
+
+D, R, N = 14, 3, 6
+T_C = 10
+
+
+@pytest.fixture(scope="module")
+def prob():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((D, N * 40)).astype(np.float32)
+    covs = jnp.stack([jnp.asarray(b @ b.T / b.shape[1])
+                      for b in np.split(x, N, axis=1)])
+    _, q_true = eigh_topr(covs.sum(0), R)
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1},
+              "schedule": {"kind": "lin2", "cap": T_C}}]
+    return dict(covs=covs, q_true=q_true, cases=cases)
+
+
+def _ref(prob, seeds, n_shards, t_outer):
+    """Fault-free reference at the launcher's shard lane widths."""
+    engines = [build_engine(c["topology"]) for c in prob["cases"]]
+    scheds = [build_schedule(c["schedule"], t_outer, T_C)
+              for c in prob["cases"]]
+    parts = [sdot_sweep(covs=prob["covs"], engines=engines, schedules=scheds,
+                        r=R, t_outer=t_outer, t_c=T_C, seeds=s,
+                        q_true=prob["q_true"])
+             for s in slice_seed_shards(seeds, n_shards)]
+    return (np.concatenate([p.error_traces for p in parts], axis=0),
+            np.concatenate([np.asarray(p.q) for p in parts], axis=0))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan + hooks
+# ---------------------------------------------------------------------------
+def test_faultplan_seeded_boundaries_deterministic(tmp_path):
+    plan = FaultPlan([{"kind": "kill", "shard": 0},
+                      {"kind": "corrupt", "shard": 1},
+                      {"kind": "kill", "shard": 2, "boundary": 3}], seed=7)
+    clone = FaultPlan.load(plan.dump(str(tmp_path / "plan.json")))
+    for idx in range(3):
+        b = plan.boundary_for(idx, 10)
+        assert 1 <= b <= 10
+        assert b == clone.boundary_for(idx, 10)  # replay-stable
+    assert plan.boundary_for(2, 10) == 3         # pinned boundary honored
+    # the seed matters: some fault lands elsewhere under a different seed
+    other = FaultPlan(plan.faults, seed=8)
+    assert any(plan.boundary_for(i, 1000) != other.boundary_for(i, 1000)
+               for i in range(3))
+
+
+def test_faultplan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown kind"):
+        FaultPlan([{"kind": "explode"}])
+
+
+def test_hooks_inert_without_env(monkeypatch, tmp_path):
+    """Production path: no env var -> no chaos branches, no side effects."""
+    monkeypatch.delenv(chaos.ENV_PLAN, raising=False)
+    hooks = chaos.hooks_from_env(shard=0, worker="0", n_boundaries=4,
+                                 ckpt_root=str(tmp_path),
+                                 workdir=str(tmp_path))
+    assert not hooks.active
+    hooks.at_boundary(1)
+    hooks.after_publish(str(tmp_path))
+    assert not (tmp_path / "chaos_state").exists()
+
+
+# ---------------------------------------------------------------------------
+# chaos equivalence: kill + corrupt + straggler + drop in ONE launch
+# ---------------------------------------------------------------------------
+def test_chaos_smoke_bitwise_equivalence(tmp_path):
+    """The CI scenario end to end: SIGKILL at a seeded chunk boundary, a
+    truncated newest checkpoint, a straggler, and a dropped publish — the
+    launch completes via retry/backoff and merges bit-identically to the
+    fault-free sweep (run_smoke asserts the bits AND the recovery paths:
+    per-shard attempts, mid-grid resume, corrupt fallback step)."""
+    summary = chaos.run_smoke(str(tmp_path), verbose=False)
+    assert summary["bitwise_equal"]
+    assert summary["faults"] == ["kill", "corrupt", "slow", "drop"]
+
+
+def test_stall_detection_kills_hung_worker(tmp_path, prob):
+    """A wedged-but-alive worker (hangs at a chunk boundary, stops
+    heartbeating, never exits) is detected by heartbeat staleness within
+    seconds, killed, and retried — the old launcher would have blocked on
+    it for the full timeout."""
+    seeds = [0, 1]
+    plan = FaultPlan([{"kind": "hang", "shard": 0, "sleep": 300.0,
+                       "boundary": 2}])
+    t0 = time.monotonic()
+    sw = launch_sweep(covs=prob["covs"], cases=prob["cases"], r=R,
+                      t_outer=6, t_c=T_C, seeds=seeds,
+                      q_true=prob["q_true"], workdir=str(tmp_path),
+                      n_workers=2, n_shards=2, sweep_chunk=2, retries=1,
+                      stall_timeout=2.0, poll_interval=0.1,
+                      chaos_plan=plan, timeout=300.0)
+    wall = time.monotonic() - t0
+    assert wall < 120.0                      # nowhere near the 300s hang
+    rep = sw.resume_report
+    assert rep["attempts"][0] == 2           # hung attempt + clean retry
+    # the hang fired at boundary 2 (before step 4 was written): the retry
+    # resumed from the step-2 checkpoint, not from scratch
+    assert rep["worker_resumed_steps"][0] == 2
+    err, q = _ref(prob, seeds, 2, 6)
+    np.testing.assert_array_equal(np.asarray(sw.error_traces), err)
+    np.testing.assert_array_equal(np.asarray(sw.q), q)
+
+
+def test_elastic_steal_from_straggler(tmp_path, prob):
+    """Elastic fleet vs the paper's straggler: worker w0's per-boundary
+    sleep blows through the lease TTL, the finished worker steals the
+    stale lease mid-run (the victim backs off via the fencing token), and
+    the merged result is still bit-identical."""
+    seeds = [0, 1, 2, 3]
+    plan = FaultPlan([{"kind": "slow", "worker": 0, "sleep": 4.0}])
+    # Reserve shard 0 for w0 before the launch. Both fleet workers race
+    # through jax import at spawn, and on a loaded box the winner can
+    # otherwise drain BOTH shards before the loser takes its first lease —
+    # no straggler, no steal, a flaky assert. The reservation pins the
+    # roles: w0 reclaims its own lease (pick prefers owned shards) and
+    # stalls on it (4s per boundary >> 0.5s TTL), w1 takes shard 1, wins,
+    # and MUST steal shard 0 to finish. The stamp decays after 30s, so a
+    # w0 that dies at startup only delays the steal, never deadlocks it.
+    store = LeaseStore(str(tmp_path), ttl=0.5)
+    reservation = store.try_acquire(0, "w0")
+    reservation["renewed_at"] = time.time() + 30.0
+    store._write(0, dict(reservation))
+    sw = launch_sweep(covs=prob["covs"], cases=prob["cases"], r=R,
+                      t_outer=8, t_c=T_C, seeds=seeds,
+                      q_true=prob["q_true"], workdir=str(tmp_path),
+                      n_workers=2, n_shards=2, sweep_chunk=2, retries=2,
+                      elastic=True, lease_ttl=0.5, poll_interval=0.1,
+                      chaos_plan=plan, timeout=300.0)
+    rep = sw.resume_report
+    assert rep["stolen_shards"], rep         # at least one steal happened
+    for s in rep["stolen_shards"]:
+        assert len(rep["lease_owners"][s]) >= 2
+    err, q = _ref(prob, seeds, 2, 8)
+    np.testing.assert_array_equal(np.asarray(sw.error_traces), err)
+    np.testing.assert_array_equal(np.asarray(sw.q), q)
+
+
+# ---------------------------------------------------------------------------
+# lease protocol
+# ---------------------------------------------------------------------------
+def test_lease_fencing_tokens(tmp_path):
+    store = LeaseStore(str(tmp_path), ttl=0.3)
+    l1 = store.try_acquire(0, "a")
+    assert l1 is not None and l1.token == 1
+    assert store.try_acquire(0, "b") is None     # live foreign lease
+    store.renew(0, "a", l1.token)
+    time.sleep(0.4)                              # ... "a" goes silent
+    l2 = store.try_acquire(0, "b")
+    assert l2 is not None and l2.token == 2      # stolen, token bumped
+    with pytest.raises(LeaseLost):
+        store.renew(0, "a", l1.token)            # victim must back off
+    store.release(0, "b", l2.token, done=True)
+    l3 = store.try_acquire(0, "c")               # released = acquirable
+    assert l3.token == 3
+    assert l3.owners == ["a", "b", "c"]          # steal history visible
+
+
+def test_lease_pick_prefers_never_leased_then_stalest(tmp_path):
+    store = LeaseStore(str(tmp_path), ttl=0.2)
+    store.try_acquire(0, "a")
+    time.sleep(0.3)
+    store.try_acquire(1, "b")
+    time.sleep(0.25)                             # both expired, 0 staler
+    assert store.pick([0, 1, 2], "b") == 1       # own lease first, even
+    #                                              with 2 never leased
+    assert store.pick([0, 1, 2], "z") == 2       # then never-leased
+    assert store.pick([0, 1], "z") == 0          # else the stalest
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    hb = str(tmp_path / "w" / "heartbeat")
+    assert heartbeat_age(hb) is None
+    touch_heartbeat(hb, step=7)
+    age = heartbeat_age(hb)
+    assert age is not None and age < 5.0
+    with open(hb) as f:
+        assert json.load(f)["step"] == 7
+
+
+# ---------------------------------------------------------------------------
+# elastic membership: join mid-sweep, depart without failing the launch
+# ---------------------------------------------------------------------------
+def test_fleet_joiner_takes_expired_lease_and_merges_identically(
+        monkeypatch, tmp_path, prob):
+    """A worker that LEFT mid-sweep (expired lease + checkpointed partial
+    sweep-RunState) loses its shard to a worker that JOINS mid-sweep: the
+    joiner steals the expired lease (fencing token bumped), resumes the
+    victim's checkpoint mid-grid, and the final merge is bit-identical —
+    membership changes never touch the math."""
+    monkeypatch.delenv(chaos.ENV_PLAN, raising=False)
+    seeds, t_outer = [0, 1, 2, 3], 6
+    shards = slice_seed_shards(seeds, 2)
+    spec = {"algo": "sdot", "r": R, "t_outer": t_outer, "t_c": T_C,
+            "cases": prob["cases"], "shards": shards, "ragged": False,
+            "n_cov_stacks": 1, "has_q_true": True, "sweep_chunk": 2}
+    with open(tmp_path / "spec.json", "w") as f:
+        json.dump(spec, f)
+    np.savez(tmp_path / "problem.npz", covs=np.asarray(prob["covs"]),
+             q_true=np.asarray(prob["q_true"]))
+
+    # the departed worker got one chunk into shard 0, then went silent
+    engines = [build_engine(c["topology"]) for c in prob["cases"]]
+    scheds = [build_schedule(c["schedule"], t_outer, T_C)
+              for c in prob["cases"]]
+    mgr = CheckpointManager(str(tmp_path / "worker_0" / "ckpt"))
+    sdot_sweep(covs=prob["covs"], engines=engines, schedules=scheds, r=R,
+               t_outer=t_outer, t_c=T_C, seeds=shards[0],
+               q_true=prob["q_true"], manager=mgr, chunk_size=2,
+               max_chunks=1)
+    store = LeaseStore(str(tmp_path), ttl=0.3)
+    departed = store.try_acquire(0, "departed")
+    assert departed is not None
+    time.sleep(0.4)                              # ... and its lease expires
+
+    # a joiner enters mid-sweep: steals shard 0, runs shard 1, finishes
+    assert fleet_worker_loop(spec, str(tmp_path), "joiner", ttl=0.3) == 0
+    snap = store.snapshot()
+    assert snap[0].owners == ["departed", "joiner"]
+    assert snap[0].token == departed.token + 1   # fenced steal
+    assert int(_load_result(str(tmp_path), spec, 0)["resumed_steps"]) == 2
+
+    # the launcher over the same workdir reuses both published shards and
+    # the merge equals the fault-free reference exactly
+    sw = launch_sweep(covs=prob["covs"], cases=prob["cases"], r=R,
+                      t_outer=t_outer, t_c=T_C, seeds=seeds,
+                      q_true=prob["q_true"], workdir=str(tmp_path),
+                      n_workers=2, n_shards=2, sweep_chunk=2)
+    assert sw.resume_report["reused_shards"] == [0, 1]
+    err, q = _ref(prob, seeds, 2, t_outer)
+    np.testing.assert_array_equal(np.asarray(sw.error_traces), err)
+    np.testing.assert_array_equal(np.asarray(sw.q), q)
+
+
+# ---------------------------------------------------------------------------
+# torn checkpoints (manager + runtime fallback)
+# ---------------------------------------------------------------------------
+def test_latest_step_skips_torn_and_tmp_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    mgr.save(1, {"x": jnp.arange(3)})
+    mgr.save(2, {"x": jnp.arange(3) + 1})
+    os.remove(tmp_path / "step_00000002" / "manifest.json")   # torn mid-step
+    (tmp_path / "step_00000003.tmp-123").mkdir()              # crashed writer
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    mgr.save(4, {"x": jnp.arange(3) + 2})                     # _gc sweeps tmp
+    assert not (tmp_path / "step_00000003.tmp-123").exists()
+    assert mgr.all_steps() == [1, 4]
+
+
+def test_truncated_newest_checkpoint_falls_back(tmp_path, prob):
+    """chaos's 'corrupt' tearing (truncate shards.npz, manifest intact)
+    against a real sweep checkpoint dir: the resume must fall back one
+    chunk and still finish bit-identically; a manifest-delete tear is then
+    invisible to latest_step."""
+    kw = dict(covs=prob["covs"],
+              engines=[build_engine(c["topology"]) for c in prob["cases"]],
+              schedules=[build_schedule(c["schedule"], 6, T_C)
+                         for c in prob["cases"]],
+              r=R, t_outer=6, t_c=T_C, seeds=[0, 1],
+              q_true=prob["q_true"])
+    mono = sdot_sweep(**kw)
+    mgr = CheckpointManager(str(tmp_path), keep_last=5)
+    sdot_sweep(manager=mgr, chunk_size=2, max_chunks=2, **kw)
+    assert mgr.all_steps() == [2, 4]
+    hooks = ChaosHooks(FaultPlan([]), shard=0, n_boundaries=1,
+                       ckpt_root=str(tmp_path),
+                       state_dir=str(tmp_path / "cs"))
+    hooks._corrupt_newest("truncate")
+    assert mgr.all_steps() == [2, 4]             # manifest intact, npz torn
+    res = sdot_sweep(manager=mgr, chunk_size=2, **kw)
+    assert res.resumed_step == 2                 # fell back past the tear
+    np.testing.assert_array_equal(res.error_traces, mono.error_traces)
+    np.testing.assert_array_equal(np.asarray(res.q), np.asarray(mono.q))
+
+    hooks._corrupt_newest("manifest")            # tear the new newest
+    assert mgr.latest_step() == 4
+
+
+# ---------------------------------------------------------------------------
+# worker crash window + launcher load-error surfacing
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def published(tmp_path_factory, prob):
+    """One published single-shard launch, copied per test that mutates it."""
+    wd = tmp_path_factory.mktemp("published")
+    launch_sweep(covs=prob["covs"], cases=prob["cases"], r=R, t_outer=4,
+                 t_c=T_C, seeds=[0], q_true=prob["q_true"],
+                 workdir=str(wd), n_workers=1, sweep_chunk=2)
+    with open(wd / "spec.json") as f:
+        spec = json.load(f)
+    return str(wd), spec
+
+
+def test_relaunch_cleans_stale_ckpt_next_to_published_result(
+        monkeypatch, tmp_path, prob, published):
+    """The crash window between result publish and ckpt cleanup: a worker
+    relaunched into that state must treat the published result as final —
+    no recompute — and sweep the stale checkpoint away itself."""
+    monkeypatch.delenv(chaos.ENV_PLAN, raising=False)
+    src, spec = published
+    wd = str(tmp_path / "wd")
+    shutil.copytree(src, wd)
+    before = _load_result(wd, spec, 0)
+    ckpt = os.path.join(wd, "worker_0", "ckpt", "step_00000002")
+    os.makedirs(ckpt)                           # the crash left this behind
+    with open(os.path.join(ckpt, "junk"), "w") as f:
+        f.write("stale")
+    assert run_shard(spec, wd, 0) == 0
+    assert not os.path.exists(os.path.dirname(ckpt))   # window closed
+    after = _load_result(wd, spec, 0)
+    np.testing.assert_array_equal(np.asarray(after["q"]),
+                                  np.asarray(before["q"]))
+
+
+def test_load_result_surfaces_unexpected_errors(monkeypatch, published):
+    """Only the EXPECTED restore failure modes may be swallowed; anything
+    else surfaces on the resume report instead of a silent recompute."""
+    import repro.streaming.launcher as L
+
+    wd, spec = published
+    unexpected = {}
+    assert L._load_result(wd, spec, 0, unexpected) is not None
+    assert unexpected == {}
+
+    def boom(*a, **k):
+        raise RuntimeError("disk on fire")
+
+    monkeypatch.setattr(L, "restore_tree", boom)
+    assert L._load_result(wd, spec, 0, unexpected) is None
+    assert "disk on fire" in unexpected[0]
