@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .consensus import realized_round_weights, safe_debias_scale
 from .metrics import CommLedger
 from .topology import Graph, local_degree_weights
 
@@ -58,6 +59,12 @@ def masked_async_rounds(w, adj, awake, t_c, z_stack):
     executors in sdot.py / fdot.py can call this inside their outer scan);
     z_stack: (N, ...). Returns (debiased z, (T,) directed sends per round,
     (T,) awake-node counts per round) — masked rounds report 0.0 for both.
+
+    An all-asleep round renormalizes to the exact identity matrix (every
+    weight returns to the diagonal) with zero sends, and the debias guard
+    (``safe_debias_scale``) divides by 1.0 wherever the realized product
+    carries no mass — an all-degenerate call returns its input bit-for-bit
+    instead of scaling it by 1e6.
     """
     n = w.shape[0]
     off = ~jnp.eye(n, dtype=bool)
@@ -68,9 +75,8 @@ def masked_async_rounds(w, adj, awake, t_c, z_stack):
         a, i = inp
         live = i < t_c
         both = jnp.outer(a, a)
-        w_off = jnp.where(off & both, wz, 0.0)
-        dropped = jnp.where(off & ~both, wz, 0.0).sum(axis=1)
-        w_round = w_off + jnp.diag(jnp.diag(wz) + dropped)
+        w_off, dd = realized_round_weights(wz, both, off)
+        w_round = w_off + jnp.diag(dd)
         z_next = jnp.einsum("ij,j...->i...", w_round, z)
         # only column 0 of the realized product is ever read (the debias
         # weight), so carry the (N,) vector p = Pi W e_1, not the (N, N)
@@ -86,7 +92,7 @@ def masked_async_rounds(w, adj, awake, t_c, z_stack):
     e1 = jnp.zeros((n,), z_stack.dtype).at[0].set(1.0)
     (z, p), (sends, counts) = jax.lax.scan(
         round_, (z_stack, e1), (awake, jnp.arange(awake.shape[0])))
-    scale = jnp.maximum(p, 1e-6)                   # realized [Pi W e_1]_i
+    scale = safe_debias_scale(p)                   # realized [Pi W e_1]_i
     bshape = (-1,) + (1,) * (z_stack.ndim - 1)
     return z / scale.reshape(bshape), sends, counts
 
@@ -144,7 +150,11 @@ class AsyncConsensus:
         off = ~np.eye(n, dtype=bool)
         dropped = np.where(off & ~mask, w, 0.0)
         w = np.where(off & mask, w, 0.0)
-        np.fill_diagonal(w, self.weights.diagonal() + dropped.sum(axis=1))
+        dd = self.weights.diagonal() + dropped.sum(axis=1)
+        # degenerate-row guard (mirrors realized_round_weights): a node with
+        # no surviving link has an exactly-1 diagonal, not a 1 +- ulp sum
+        isolated = ~(off & mask).any(axis=1)
+        np.fill_diagonal(w, np.where(isolated, 1.0, dd))
         return w
 
     def sample_awake(self, t_c: int, t_max: Optional[int] = None) -> jnp.ndarray:
@@ -218,7 +228,8 @@ class AsyncConsensus:
                 ledger.matrices += sends
                 ledger.scalars += sends * np.prod(z_stack.shape[1:])
                 ledger.log_awake_rounds([int(a.sum())])
-        scale = np.maximum(prod[:, 0], 1e-6)       # realized [Pi W e_1]_i
+        p = prod[:, 0]                             # realized [Pi W e_1]_i
+        scale = np.where(p > 1e-6, p, 1.0)         # same guard as the scan
         bshape = (-1,) + (1,) * (z_stack.ndim - 1)
         return jnp.asarray(z / scale.reshape(bshape), jnp.float32)
 

@@ -33,13 +33,71 @@ from .metrics import CommLedger
 
 __all__ = [
     "DenseConsensus",
+    "FaultyConsensus",
     "SpmdConsensus",
     "consensus_schedule",
     "debias_weights",
     "debias_table",
     "debiased_gossip",
     "masked_gossip",
+    "realized_round_weights",
+    "safe_debias_scale",
 ]
+
+
+def __getattr__(name):
+    # FaultyConsensus lives in netfaults.py (which imports this module);
+    # re-export it lazily so `from repro.core.consensus import
+    # FaultyConsensus` works without a circular import.
+    if name == "FaultyConsensus":
+        from .netfaults import FaultyConsensus
+        return FaultyConsensus
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def realized_round_weights(wz, mask, off):
+    """Renormalize the nominal weights over one realized round's surviving
+    edges: the REALIZED-ROUND API shared by every fault model.
+
+    ``wz``: (N, N) nominal doubly-stochastic weights; ``mask``: (N, N) bool,
+    SYMMETRIC — edge (i, j) survived this round; ``off``: (N, N) bool
+    off-diagonal selector. Returns ``(w_off, dd)`` where ``w_off`` keeps the
+    surviving off-diagonal weights and ``dd`` is the per-node diagonal with
+    every dropped weight returned to it. The realized round matrix
+    ``w_off + diag(dd)`` is doubly stochastic for any symmetric mask (row
+    sums are 1 by construction; column sums are 1 because mask symmetry
+    makes the dropped mass per column equal the dropped mass per row), so
+    the network average is conserved and the realized-product debias of
+    Alg. 1 stays exact. ``masked_async_rounds`` uses this with the node
+    outer-product mask; ``netfaults.masked_faulty_rounds`` with general
+    edge masks (link drops, bursts, crashes, rejected payloads).
+
+    Degenerate-row guard: a node whose every link dropped this round has a
+    diagonal that is MATHEMATICALLY exactly 1 (the full nominal row sum),
+    but float-summing the dropped weights yields 1 +- 1 ulp, so a long run
+    of identity rounds would drift the iterate by ~1e-5. Pin fully-isolated
+    rows to exactly 1.0: an all-asleep / all-links-down round becomes the
+    exact identity matrix and a fully degenerate gossip call returns its
+    input bit-for-bit."""
+    w_off = jnp.where(off & mask, wz, 0.0)
+    dropped = jnp.where(off & ~mask, wz, 0.0).sum(axis=1)
+    dd = jnp.diag(wz) + dropped
+    isolated = ~jnp.any(off & mask, axis=1)
+    return w_off, jnp.where(isolated, jnp.ones((), wz.dtype), dd)
+
+
+def safe_debias_scale(p):
+    """Debias divisor from a realized mixing product ``p = [Pi W e_1]``.
+
+    Degenerate-round guard: a round where every node sleeps (or every link
+    is down) is an exact identity round, and an all-degenerate run leaves
+    ``p`` at its e_1 initial value — entries that are EXACTLY zero. The old
+    ``max(p, 1e-6)`` clamp divided by ~0 there, scaling the iterate by 1e6
+    for no informational gain (the direction is all that survives the QR).
+    Divide by 1.0 instead wherever the realized mass is below the clamp:
+    same direction, bounded magnitude, and an all-degenerate gossip call
+    returns its input bit-for-bit."""
+    return jnp.where(p > 1e-6, p, jnp.ones((), p.dtype))
 
 
 @functools.partial(jax.jit, static_argnums=(2,))

@@ -36,8 +36,11 @@ import numpy as np
 
 from . import runtime
 from .async_gossip import masked_async_rounds
-from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
+from .consensus import (DenseConsensus, consensus_schedule, debias_table,
+                        debiased_gossip)
 from .linalg import orthonormal_init
+from .netfaults import (masked_faulty_rounds, realized_debias,
+                        sample_fault_blocks)
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
 from ..kernels import ops as kops
 
@@ -87,6 +90,8 @@ def distributed_cholesky_qr(
     ledger: Optional[CommLedger] = None,
     passes: int = 2,
     awake_pad: Optional[int] = None,
+    faults_pad: Optional[int] = None,
+    node_up=None,
 ) -> List[jnp.ndarray]:
     """Distributed QR of row-partitioned V = [V_1; ...; V_N] via CholeskyQR.
 
@@ -96,13 +101,22 @@ def distributed_cholesky_qr(
     ``awake_pad``: with an async engine, draw each pass's awake masks padded
     to (awake_pad, N) — the layout the fused whole-run executors use — so a
     seeded eager run replays the fused scan's realized rounds exactly.
+    ``faults_pad``/``node_up`` are the network-fault twin: each pass draws
+    its fault blocks padded to (faults_pad, ...) and gossips the Grams under
+    the iteration's crash mask.
     """
     r = v_blocks[0].shape[1]
     blocks = [v.astype(jnp.float32) for v in v_blocks]
     inject = awake_pad is not None and hasattr(engine, "sample_awake")
+    inject_faults = (faults_pad is not None
+                     and hasattr(engine, "sample_faults"))
     for _ in range(passes):
         grams = jnp.stack([b.T @ b for b in blocks])              # (N, r, r)
-        if inject:
+        if inject_faults:
+            faults = engine.sample_faults(t_c, t_max=faults_pad)
+            gsum = engine.run_debiased(grams, t_c, ledger, faults=faults,
+                                       node_up=node_up)
+        elif inject:
             awake = engine.sample_awake(t_c, t_max=awake_pad)
             gsum = engine.run_debiased(grams, t_c, ledger, awake=awake)
         else:
@@ -204,13 +218,75 @@ def _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad, *, t_max: int,
     return outer
 
 
+def _fdot_faulty_outer_body(x_pad, w, adj, params, node_up_sched, table,
+                            qtrue_pad, *, t_max: int, t_c_qr: int,
+                            passes: int, trace_err: bool, debias: str):
+    """Network-fault twin of ``_fdot_async_outer_body``: carry is
+    ``((q_pad, ge, t), key)``.
+
+    Three key splits per outer iteration (partial-product phase, QR pass 1,
+    QR pass 2) in eager-oracle order, each drawing its own padded fault
+    blocks and threading the Gilbert–Elliott state through sequentially.
+    The iteration's crash mask (one ``node_up_sched`` row, selected by the
+    carried counter) holds for all three phases, and a crashed node's slab
+    is frozen at the end of the iteration.
+    """
+    n = w.shape[0]
+
+    def gossip(key, ge, node_up, z, t_c):
+        key, sub = jax.random.split(key)
+        blocks = sample_fault_blocks(sub, n, t_max)
+        out, p, ge, sends, counts = masked_faulty_rounds(
+            w, adj, params, node_up, ge, blocks, t_c, z)
+        if debias == "realized":
+            out = realized_debias(out, p)
+        else:
+            row = jnp.take(table, t_c, axis=0)
+            out = out / row.astype(out.dtype).reshape(
+                (-1,) + (1,) * (out.ndim - 1))
+        return key, ge, out, sends, counts
+
+    def outer(carry, t_c):
+        (q_pad, ge, t), key = carry
+        node_up = jnp.take(node_up_sched, t, axis=0)             # (N,)
+        z0 = kops.batched_slab_tq(x_pad, q_pad)                  # (N, n, r)
+        key, ge, s, sd, cnt = gossip(key, ge, node_up, z0, t_c)
+        v = kops.batched_slab_apply(x_pad, s).astype(jnp.float32)
+        sends, counts = [sd], [cnt]
+        for _ in range(passes):
+            grams = jnp.einsum("idr,ids->irs", v, v)             # (N, r, r)
+            key, ge, gsum, sd, cnt = gossip(key, ge, node_up, grams,
+                                            jnp.int32(t_c_qr))
+            sends.append(sd)
+            counts.append(cnt)
+            v = _solve_from_gram_sum(gsum, v)
+        up = node_up.reshape((-1, 1, 1)) > 0
+        q_new = jnp.where(up, v, q_pad)                          # freeze
+        if trace_err:
+            cross = jnp.einsum("idr,ids->rs", qtrue_pad, q_new)  # Q^T Qhat
+            err = subspace_error_from_cross(cross)
+        else:
+            err = jnp.float32(0.0)
+        return ((q_new, ge, t + 1), key), (err, jnp.stack(sends),
+                                           jnp.stack(counts))
+
+    return outer
+
+
 def _fdot_build_body(operands, *, t_max: int, t_c_qr: int, passes: int,
-                     trace_err: bool, is_async: bool):
+                     trace_err: bool, is_async: bool,
+                     is_faulty: bool = False, debias: str = "realized"):
     """Runtime body builder for F-DOT (the Program protocol's
     ``build_body``) — adapts the same outer-iteration bodies the monolithic
     executor uses, so every driver steps through identical math. Async
     programs make three key splits per outer iteration (partial-product
     phase, QR pass 1, QR pass 2) in eager-oracle order."""
+    if is_faulty:
+        x_pad, w, adj, params, node_up_sched, table, qtrue_pad = operands
+        return _fdot_faulty_outer_body(x_pad, w, adj, params, node_up_sched,
+                                       table, qtrue_pad, t_max=t_max,
+                                       t_c_qr=t_c_qr, passes=passes,
+                                       trace_err=trace_err, debias=debias)
     if is_async:
         x_pad, w, adj, p_awake, qtrue_pad = operands
         return _fdot_async_outer_body(x_pad, w, adj, p_awake, qtrue_pad,
@@ -249,10 +325,22 @@ def fdot_program(
     x_pad, q0_pad, qtrue_pad = prep["pads"]()
     t_max, t_c_qr, passes = prep["t_max"], prep["t_c_qr"], prep["passes"]
     trace_err, is_async = prep["trace_err"], prep["is_async"]
+    is_faulty = prep["is_faulty"]
+    debias = engine.debias if is_faulty else "realized"
     sched_np = prep["schedule"]
     n_samples, dims = prep["n_samples"], prep["dims"]
+    q0 = q0_pad
 
-    if is_async:
+    if is_faulty:
+        n_nodes = prep["n_nodes"]
+        node_up_sched = jnp.asarray(engine.faults.validate(
+            n_nodes, t_outer).node_up(t_outer, n_nodes))
+        operands = (x_pad, engine._w, engine._adj, engine._params,
+                    node_up_sched, debias_table(engine._w, t_max),
+                    qtrue_pad)
+        key0, tail = engine._key, (1 + passes, t_max)
+        q0 = (q0_pad, engine._ge, jnp.int32(0))
+    elif is_async:
         operands = (x_pad, engine._w, engine._adj,
                     jnp.asarray(engine.p_awake, jnp.float32), qtrue_pad)
         key0, tail = engine._key, (1 + passes, t_max)
@@ -265,9 +353,12 @@ def fdot_program(
 
     def finalize(state: runtime.RunState, done: int) -> FDOTResult:
         adj = engine.graph.adjacency
-        if is_async:
+        q_pad = state.q[0] if is_faulty else state.q
+        if is_async or is_faulty:
             if done == t_outer:
                 engine._key = state.key
+                if is_faulty:
+                    engine._ge = state.q[1]
             ledger = runtime.async_ledger(
                 sched_np[:done], state.sends[:done], state.counts[:done],
                 lambda s: (float(s[:, 0].sum()) * n_samples * r
@@ -280,7 +371,7 @@ def fdot_program(
             ledger.log_gossip_rounds(np.full(done, passes * t_c_qr), adj,
                                      r * r)
         return FDOTResult(
-            q_blocks=unpad_feature_slabs(state.q, dims),
+            q_blocks=unpad_feature_slabs(q_pad, dims),
             error_trace=(np.asarray(state.errs[:done]) if trace_err
                          else None),
             ledger=ledger,
@@ -290,9 +381,10 @@ def fdot_program(
         build_body=_fdot_build_body,
         operands=operands,
         statics=(("t_max", t_max), ("t_c_qr", t_c_qr), ("passes", passes),
-                 ("trace_err", trace_err), ("is_async", is_async)),
+                 ("trace_err", trace_err), ("is_async", is_async),
+                 ("is_faulty", is_faulty), ("debias", debias)),
         xs=sched_np,
-        q0=q0_pad,
+        q0=q0,
         key0=key0,
         tail=tail,
         finalize=finalize,
@@ -330,7 +422,8 @@ def _prepare_fdot(*, data_blocks, engine, r, t_outer, t_c, t_c_qr, schedule,
     offs = np.cumsum([0] + dims)
     q_blocks = [q_init[offs[i]:offs[i + 1]] for i in range(n_nodes)]
 
-    is_async = hasattr(engine, "sample_awake")
+    is_faulty = hasattr(engine, "sample_faults")
+    is_async = (not is_faulty) and hasattr(engine, "sample_awake")
     t_max = int(max(schedule.max(), t_c_qr)) if t_outer else 0
     trace_err = q_true is not None
 
@@ -348,7 +441,8 @@ def _prepare_fdot(*, data_blocks, engine, r, t_outer, t_c, t_c_qr, schedule,
         n_nodes=n_nodes, dims=dims, d=d, n_samples=n_samples,
         t_c_qr=int(t_c_qr), passes=passes, schedule=schedule,
         sched_dev=jnp.asarray(schedule, jnp.int32), q_blocks=q_blocks,
-        is_async=is_async, t_max=t_max, trace_err=trace_err, pads=pads,
+        is_async=is_async, is_faulty=is_faulty, t_max=t_max,
+        trace_err=trace_err, pads=pads,
     )
 
 
@@ -375,9 +469,10 @@ def fdot(
     ``runtime.run_monolithic``); ``fused=False`` is the eager
     per-iteration oracle.
     """
-    # async engines get their own whole-run scan; any other engine without
-    # the scan interface runs eagerly
+    # async / faulty engines get their own whole-run scan; any other engine
+    # without the scan interface runs eagerly
     if fused and (hasattr(engine, "sample_awake")
+                  or hasattr(engine, "sample_faults")
                   or hasattr(engine, "debias_table")):
         return runtime.run_monolithic(fdot_program(
             data_blocks=data_blocks, engine=engine, r=r, t_outer=t_outer,
@@ -391,13 +486,23 @@ def fdot(
     t_c_qr, passes = prep["t_c_qr"], prep["passes"]
     schedule, q_blocks = prep["schedule"], prep["q_blocks"]
     is_async, t_max = prep["is_async"], prep["t_max"]
+    is_faulty = prep["is_faulty"]
+    if is_faulty:
+        n_nodes = prep["n_nodes"]
+        node_up_sched = engine.faults.validate(n_nodes, t_outer).node_up(
+            t_outer, n_nodes)
 
     ledger = CommLedger()
     errs = [] if q_true is not None else None
     for t in range(t_outer):
         # step 1-2: consensus over the (n x r) partial products
         z0 = jnp.stack([x.T @ q for x, q in zip(data_blocks, q_blocks)])
-        if is_async:
+        if is_faulty:
+            node_up = node_up_sched[t]
+            faults = engine.sample_faults(int(schedule[t]), t_max=t_max)
+            s = engine.run_debiased(z0, int(schedule[t]), ledger,
+                                    faults=faults, node_up=node_up)
+        elif is_async:
             awake = engine.sample_awake(int(schedule[t]), t_max=t_max)
             s = engine.run_debiased(z0, int(schedule[t]), ledger,
                                     awake=awake)
@@ -406,9 +511,18 @@ def fdot(
         # step 3: local expansion
         v_blocks = [x @ s[i] for i, x in enumerate(data_blocks)]
         # step 4: distributed orthonormalization
-        q_blocks = distributed_cholesky_qr(
+        new_blocks = distributed_cholesky_qr(
             v_blocks, engine, t_c_qr, ledger, passes=passes,
-            awake_pad=t_max if is_async else None)
+            awake_pad=t_max if is_async else None,
+            faults_pad=t_max if is_faulty else None,
+            node_up=node_up if is_faulty else None)
+        if is_faulty:
+            # crashed nodes freeze their slab for the iteration
+            q_blocks = [nb if node_up[i] > 0 else qb
+                        for i, (nb, qb) in enumerate(zip(new_blocks,
+                                                         q_blocks))]
+        else:
+            q_blocks = new_blocks
         if errs is not None:
             q_full = jnp.concatenate(q_blocks, axis=0)
             errs.append(float(subspace_error(q_true, q_full)))

@@ -17,7 +17,10 @@ shared shape of all of those executors into one protocol:
   their realized per-round send/awake counts. ``carry`` is an arbitrary
   pytree (a (N, d, r) iterate for S-DOT, padded slabs for F-DOT/B-DOT, a
   (q, s, mq_prev) triple for DeEPCA, stacked column estimates for the
-  sequential-deflation baselines).
+  sequential-deflation baselines, an (iterate, Gilbert–Elliott edge
+  state, step) triple for the net-fault families) — because the carry is
+  opaque to the drivers, new families like ``core/netfaults.py``'s
+  edge-mask fault programs get chunked resume and sweeping for free.
 * ``operands`` is a flat tuple of device arrays closed over by the body —
   weight matrices, debias tables, data stacks, ground truth.
 * ``statics`` is a hashable tuple of (name, value) pairs — the static

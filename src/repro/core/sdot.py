@@ -48,7 +48,10 @@ from jax.sharding import PartitionSpec as P
 from . import runtime
 from .async_gossip import masked_async_rounds
 from .compat import shard_map
-from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
+from .consensus import (DenseConsensus, consensus_schedule, debias_table,
+                        debiased_gossip)
+from .netfaults import (masked_faulty_rounds, realized_debias,
+                        sample_fault_blocks)
 from .linalg import cholesky_qr2, orthonormal_init
 from .metrics import CommLedger, mean_subspace_error, subspace_error
 from ..kernels import ops as kops
@@ -149,8 +152,52 @@ def _async_outer_body(operand, w, adj, p_awake, q_true, *, mode: str,
     return outer
 
 
+def _faulty_outer_body(operand, w, adj, params, node_up_sched, table,
+                       q_true, *, mode: str, t_max: int, trace_err: bool,
+                       debias: str):
+    """Network-fault twin of ``_async_outer_body``: the carry is
+    ``((q_nodes, ge, t), key)``.
+
+    Each outer iteration splits the key, pre-samples its (t_max, N, N) /
+    (t_max, N) fault blocks (the edge-mask twin of the awake-mask draw),
+    reads the iteration's crash mask from the (T, N) ``node_up_sched``
+    operand via the carried iteration counter ``t``, and runs realized
+    edge-mask gossip. The Gilbert–Elliott state ``ge`` and the counter ride
+    in the carry, so chunked resume replays bursts and crash windows
+    exactly. Crashed nodes contribute no edges and their iterate is FROZEN
+    (the QR update is masked), so on rejoin they re-sync from neighbors
+    through ordinary gossip. ``debias``: "realized" divides by the carried
+    realized mixing product (self-healing); "nominal" divides by the
+    fault-free W^t e_1 table row (the uncorrected benchmark arm).
+    """
+    n = w.shape[0]
+
+    def outer(carry, t_c):
+        (q_nodes, ge, t), key = carry
+        key, sub = jax.random.split(key)
+        blocks = sample_fault_blocks(sub, n, t_max)
+        node_up = jnp.take(node_up_sched, t, axis=0)             # (N,)
+        z0 = _apply_operand(operand, mode, q_nodes)              # (N, d, r)
+        z, p, ge_new, sends, counts = masked_faulty_rounds(
+            w, adj, params, node_up, ge, blocks, t_c, z0)
+        if debias == "realized":
+            v = realized_debias(z, p)
+        else:
+            row = jnp.take(table, t_c, axis=0)
+            v = z / row.astype(z.dtype).reshape((-1,) + (1,) * (z.ndim - 1))
+        q_qr = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+        up = node_up.reshape((-1,) + (1,) * (q_nodes.ndim - 1)) > 0
+        q_new = jnp.where(up, q_qr, q_nodes)                     # freeze
+        err = (mean_subspace_error(q_true, q_new) if trace_err
+               else jnp.float32(0.0))
+        return ((q_new, ge_new, t + 1), key), (err, sends, counts)
+
+    return outer
+
+
 def _sdot_build_body(operands, *, mode: str, t_max: int, trace_err: bool,
-                     is_async: bool):
+                     is_async: bool, is_faulty: bool = False,
+                     debias: str = "realized"):
     """Runtime body builder for S-DOT/SA-DOT (the Program protocol's
     ``build_body``) — a thin adapter over the SAME outer-iteration bodies
     the executors have always used, so every driver (monolithic, chunked,
@@ -159,6 +206,11 @@ def _sdot_build_body(operands, *, mode: str, t_max: int, trace_err: bool,
         op, rest = operands[0], operands[1:]
     else:
         op, rest = (operands[0], operands[1]), operands[2:]
+    if is_faulty:
+        w, adj, params, node_up_sched, table, q_true = rest
+        return _faulty_outer_body(op, w, adj, params, node_up_sched, table,
+                                  q_true, mode=mode, t_max=t_max,
+                                  trace_err=trace_err, debias=debias)
     if is_async:
         w, adj, p_awake, q_true = rest
         return _async_outer_body(op, w, adj, p_awake, q_true, mode=mode,
@@ -196,10 +248,21 @@ def sdot_program(
     t_max, trace_err, q_arg = prep["t_max"], prep["trace_err"], prep["q_arg"]
     sched_np = prep["sched_np"]
     is_async = prep["is_async"]
+    is_faulty = prep["is_faulty"]
     mode = prep["mode"]
+    debias = engine.debias if is_faulty else "realized"
+    q0 = prep["q_nodes"]
     op_flat = ((prep["operand"],) if mode == "cov" else
                tuple(prep["operand"]))
-    if is_async:
+    if is_faulty:
+        node_up_sched = jnp.asarray(
+            engine.faults.validate(n, t_outer).node_up(t_outer, n))
+        operands = op_flat + (engine._w, engine._adj, engine._params,
+                              node_up_sched, debias_table(engine._w, t_max),
+                              q_arg)
+        key0, tail = engine._key, (t_max,)
+        q0 = (q0, engine._ge, jnp.int32(0))
+    elif is_async:
         operands = op_flat + (engine._w, engine._adj,
                               jnp.asarray(engine.p_awake, jnp.float32),
                               q_arg)
@@ -214,9 +277,12 @@ def sdot_program(
     payload = d * r
 
     def finalize(state: runtime.RunState, done: int) -> SDOTResult:
-        if is_async:
+        q_nodes = state.q[0] if is_faulty else state.q
+        if is_async or is_faulty:
             if done == t_outer:
                 engine._key = state.key   # same stream position as eager
+                if is_faulty:
+                    engine._ge = state.q[1]   # burst state carries over too
             ledger = runtime.async_ledger(
                 sched_np[:done], state.sends[:done], state.counts[:done],
                 lambda s: float(s.sum()) * payload,
@@ -226,7 +292,7 @@ def sdot_program(
             ledger.log_gossip_rounds(sched_np[:done],
                                      engine.graph.adjacency, payload)
         return SDOTResult(
-            q_nodes=state.q,
+            q_nodes=q_nodes,
             error_trace=(np.asarray(state.errs[:done]) if trace_err
                          else None),
             consensus_trace=sched_np[:done],
@@ -237,9 +303,10 @@ def sdot_program(
         build_body=_sdot_build_body,
         operands=operands,
         statics=(("mode", mode), ("t_max", t_max), ("trace_err", trace_err),
-                 ("is_async", is_async)),
+                 ("is_async", is_async), ("is_faulty", is_faulty),
+                 ("debias", debias)),
         xs=sched_np,
-        q0=prep["q_nodes"],
+        q0=q0,
         key0=key0,
         tail=tail,
         finalize=finalize,
@@ -280,7 +347,8 @@ def _prepare_sdot(*, covs, data, engine, r, t_outer, schedule, t_c, q_init,
     # all nodes start from the same Q_init (Theorem 1 requires it)
     q_nodes = jnp.broadcast_to(q_init[None], (n, d, r))
 
-    is_async = hasattr(engine, "sample_awake")
+    is_faulty = hasattr(engine, "sample_faults")
+    is_async = (not is_faulty) and hasattr(engine, "sample_awake")
     sched_np = np.asarray(schedule[:t_outer])
     t_max = int(sched_np.max()) if t_outer else 0
     trace_err = q_true is not None
@@ -294,6 +362,7 @@ def _prepare_sdot(*, covs, data, engine, r, t_outer, schedule, t_c, q_init,
         schedule=schedule, sched_np=sched_np,
         sched_dev=jnp.asarray(sched_np, jnp.int32), t_max=t_max,
         trace_err=trace_err, q_arg=q_arg, is_async=is_async,
+        is_faulty=is_faulty,
     )
 
 
@@ -319,9 +388,11 @@ def sdot(
     scan (a thin shim over ``runtime.run_monolithic``); ``fused=False`` is
     the eager per-iteration oracle.
     """
-    # async engines get their own whole-run scan (the RNG key rides in the
-    # carry); any other engine without the scan interface runs eagerly
+    # async / faulty engines get their own whole-run scan (the RNG key —
+    # and for faults the Gilbert–Elliott state — rides in the carry); any
+    # other engine without the scan interface runs eagerly
     if fused and (hasattr(engine, "sample_awake")
+                  or hasattr(engine, "sample_faults")
                   or hasattr(engine, "debias_table")):
         return runtime.run_monolithic(sdot_program(
             covs=covs, data=data, engine=engine, r=r, t_outer=t_outer,
@@ -335,11 +406,30 @@ def sdot(
     q_nodes, schedule = prep["q_nodes"], prep["schedule"]
     t_max = prep["t_max"]
     is_async = prep["is_async"]
+    is_faulty = prep["is_faulty"]
+    if is_faulty:
+        n = engine.graph.n_nodes
+        node_up_sched = engine.faults.validate(n, t_outer).node_up(
+            t_outer, n)
 
     ledger = CommLedger()
     errs = [] if q_true is not None else None
     for t in range(t_outer):
         z0 = _apply_operand(operand, mode, q_nodes)               # (N, d, r)
+        if is_faulty:
+            # draw with the fused executor's padded shape so a seeded
+            # eager run replays the fused scan fault for fault
+            blocks = engine.sample_faults(int(schedule[t]), t_max=t_max)
+            node_up = node_up_sched[t]
+            v = engine.run_debiased(z0, int(schedule[t]), ledger,
+                                    faults=blocks, node_up=node_up)
+            q_qr = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
+            up = node_up.reshape((-1,) + (1,) * (q_nodes.ndim - 1)) > 0
+            q_nodes = jnp.where(up, q_qr, q_nodes)   # crashed nodes freeze
+            if errs is not None:
+                e = jax.vmap(lambda qq: subspace_error(q_true, qq))(q_nodes)
+                errs.append(float(e.mean()))
+            continue
         if is_async:
             # draw with the fused executor's padded shape so a seeded
             # eager run replays the fused scan round for round

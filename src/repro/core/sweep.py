@@ -55,7 +55,7 @@ from .sweep_utils import (broadcast_per_case, case_node_masks,
                           pad_zero_nodes)
 
 __all__ = ["SweepResult", "sdot_sweep", "fdot_sweep", "baseline_sweep",
-           "slice_seed_shards"]
+           "netfault_sweep", "slice_seed_shards"]
 
 
 def slice_seed_shards(seeds: Sequence[int], n_shards: int) -> list:
@@ -128,7 +128,32 @@ class SweepResult:
         order — contiguous seed slices from ``slice_seed_shards``, so
         concatenation reproduces the single-process sweep's seed order
         exactly and the merged result is arithmetically identical to it
-        (bitwise when the shard lane widths match)."""
+        (bitwise when the shard lane widths match).
+
+        Two classes of operator error are rejected instead of silently
+        concatenated: shards published under DIFFERENT spec fingerprints
+        (e.g. a workdir reused across sweep configurations), and shards
+        whose seed slices OVERLAP (e.g. mixing shard files from two
+        different ``n_shards`` partitionings of the same seed list) —
+        either would yield a merged result that matches no single-process
+        sweep."""
+        fps = sorted({int(np.asarray(tree["spec_fp"])) for tree in trees
+                      if "spec_fp" in tree})
+        if len(fps) > 1:
+            raise ValueError(
+                "merge_shards: shards come from different sweep specs "
+                f"(spec fingerprints {fps}) — refusing to merge results "
+                "of different configurations")
+        seen = {}
+        for i, tree in enumerate(trees):
+            for s in np.asarray(tree["seeds"]).reshape(-1).tolist():
+                s = int(s)
+                if s in seen:
+                    raise ValueError(
+                        f"merge_shards: seed {s} appears in shard "
+                        f"{seen[s]} and shard {i} — overlapping seed "
+                        "slices (mixed shard partitionings?)")
+                seen[s] = i
         seed_axis = 1 if n_cases > 1 else 0
         qs, errs, counts, node_counts = [], [], [], None
         ledger = CommLedger()
@@ -236,12 +261,13 @@ def _sweep_result(state, done, *, q_map, trace_err, single_case, ledger,
 
 
 def _run_sweep(build, operands, statics, xs, q0, case_axes, n_cases,
-               n_seeds, finalize, manager, chunk_size, max_chunks):
+               n_seeds, finalize, manager, chunk_size, max_chunks,
+               key0=None, tail=()):
     """Assemble the sweep Program and hand it to the runtime driver."""
     program = runtime.Program(
         build_body=build, operands=operands, statics=statics, xs=xs, q0=q0,
-        case_axes=case_axes, n_cases=n_cases, n_seeds=n_seeds,
-        finalize=finalize)
+        key0=key0, tail=tail, case_axes=case_axes, n_cases=n_cases,
+        n_seeds=n_seeds, finalize=finalize)
     result = runtime.run_sweep(program, manager=manager,
                                chunk_size=chunk_size, max_chunks=max_chunks)
     result.resumed_step = program.restored_step
@@ -339,6 +365,110 @@ def sdot_sweep(
         np.stack(schedules).astype(np.int64), _lane_q0(q0_nodes, len(engines)),
         case_axes, len(engines), len(list(seeds)), finalize,
         manager, chunk_size, max_chunks)
+
+
+def netfault_sweep(
+    *,
+    covs,
+    engines,
+    r: int,
+    t_outer: int,
+    schedules=None,
+    t_c: int = 50,
+    seeds: Sequence[int] = (0,),
+    q_true: Optional[jnp.ndarray] = None,
+    manager=None,
+    chunk_size: Optional[int] = None,
+    max_chunks: Optional[int] = None,
+) -> SweepResult:
+    """Monte-Carlo S-DOT/SA-DOT sweep under network faults: seeds x
+    (FaultyConsensus, schedule) cases in one compile + one device call.
+
+    The case axis is a FAULT grid: each case is a ``FaultyConsensus``
+    engine whose scalar fault knobs stack as (C, 6) lane data and whose
+    crash windows lower to a (C, T, N) node-up stack — sweeping link-drop
+    rate, burst length, or crash fraction recompiles NOTHING (one body, C
+    lanes), which is what makes the degradation curves of
+    ``benchmarks/netfaults_bench.py`` cheap. Per-lane RNG keys are derived
+    by folding each seed VALUE into each case engine's key, so a sweep
+    shard computes bitwise the same lanes whether it runs alone or inside
+    the full grid (shard-merge independence, the fleet's requirement).
+    All case engines must share the node count and the ``debias`` mode
+    (``debias`` is a compile-time static of the shared body).
+
+    ``manager``/``chunk_size`` run the sweep through the chunked driver —
+    the Gilbert–Elliott state and iteration counter ride in the
+    checkpointed carry, so a killed faulty sweep resumes mid-grid bitwise
+    equal to the uninterrupted one.
+    """
+    if not isinstance(engines, (list, tuple)):
+        engines = [engines]
+    for e in engines:
+        if not hasattr(e, "sample_faults"):
+            raise ValueError("netfault_sweep needs FaultyConsensus engines")
+    engines, schedules = _broadcast_cases(list(engines), schedules, t_outer,
+                                          t_c)
+    debias = engines[0].debias
+    if any(e.debias != debias for e in engines):
+        raise ValueError("all netfault_sweep engines must share the debias "
+                         "mode (it is a compile-time static)")
+    single_case = len(engines) == 1
+    n = engines[0].graph.n_nodes
+    d = covs.shape[1]
+    t_max = int(max(int(s.max()) for s in schedules)) if t_outer else 0
+    trace_err = q_true is not None
+    s_list = [int(s) for s in seeds]
+
+    ws = jnp.stack([e._w for e in engines])
+    adjs = jnp.stack([e._adj for e in engines])
+    params = jnp.stack([e._params for e in engines])          # (C, 6)
+    node_up = jnp.stack([
+        jnp.asarray(e.faults.validate(n, t_outer).node_up(t_outer, n))
+        for e in engines])                                    # (C, T, N)
+    tables = jnp.stack([debias_table(e._w, t_max) for e in engines])
+    q_arg = q_true if trace_err else jnp.zeros((d, r), jnp.float32)
+    operands = (covs, ws, adjs, params, node_up, tables, q_arg)
+    case_axes = (None, 0, 0, 0, 0, 0, None)
+
+    q0 = _seed_inits(s_list, d, r)                            # (S, d, r)
+    q0_nodes = jnp.broadcast_to(q0[:, None], (len(s_list), n, d, r))
+    ge0 = jnp.zeros((len(s_list), n, n), bool)
+    t0 = jnp.zeros((len(s_list),), jnp.int32)
+    q0_lane = _lane_q0((q0_nodes, ge0, t0), len(engines))
+    # per-lane keys: fold the seed VALUE (not its grid position) into each
+    # case engine's key — a shard covering seeds [2, 3] derives exactly the
+    # lanes the full grid derives at those seeds
+    key0 = jnp.stack([
+        jnp.stack([jax.random.fold_in(e._key, s) for s in s_list])
+        for e in engines])                                    # (C, S, 2)
+
+    payload = d * r
+    sched_stack = np.stack(schedules)
+
+    def finalize(state, done):
+        ledger = CommLedger()
+        sends = np.asarray(state.sends[..., :done, :], np.float64)
+        counts = np.asarray(state.counts[..., :done, :])
+        total = float(sends.sum())
+        ledger.p2p += total
+        ledger.matrices += total
+        ledger.scalars += total * payload
+        for c in range(len(engines)):
+            for s_i in range(len(s_list)):
+                for t in range(done):
+                    ledger.log_awake_rounds(
+                        counts[c, s_i, t][:int(sched_stack[c][t])])
+        return _sweep_result(state, done, q_map=lambda q: q[0],
+                             trace_err=trace_err, single_case=single_case,
+                             ledger=ledger, seeds=s_list)
+
+    return _run_sweep(
+        _sdot_build_body, operands,
+        (("mode", "cov"), ("t_max", t_max), ("trace_err", trace_err),
+         ("is_async", False), ("is_faulty", True), ("debias", debias)),
+        sched_stack.astype(np.int64), q0_lane,
+        case_axes, len(engines), len(s_list), finalize,
+        manager, chunk_size, max_chunks, key0=key0, tail=(t_max,))
 
 
 def fdot_sweep(

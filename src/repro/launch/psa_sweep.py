@@ -28,6 +28,9 @@ Fleet robustness knobs (see streaming/launcher.py):
   but alive); ``--heartbeat-interval`` is the supervision poll period.
 * ``--chaos-plan <plan.json>`` injects a seeded FaultPlan into the workers
   (kill/corrupt/slow/hang/drop — streaming/chaos.py) for fire drills.
+* ``--net-faults <doc.json>`` runs the gossip itself under seeded network
+  faults (link drops, bursty outages, node crash/rejoin, payload
+  corruption) with realized-mixing debias — core/netfaults.py.
 """
 from __future__ import annotations
 
@@ -88,6 +91,12 @@ def main(argv=None) -> int:
     ap.add_argument("--chaos-plan", default=None,
                     help="path to a FaultPlan JSON to inject into workers "
                          "(fire-drill mode; see streaming/chaos.py)")
+    ap.add_argument("--net-faults", default=None,
+                    help="path to a net-fault JSON document (or inline "
+                         "JSON): run the sweep's gossip under seeded link "
+                         "drops / bursts / crash-rejoin / corruption with "
+                         "realized-mixing debias (core/netfaults.py); "
+                         "defaults from $REPRO_NET_FAULTS")
     args = ap.parse_args(argv)
 
     import jax.numpy as jnp
@@ -128,7 +137,8 @@ def main(argv=None) -> int:
                       stall_timeout=args.stall_timeout,
                       poll_interval=args.heartbeat_interval,
                       lease_ttl=args.lease_ttl,
-                      chaos_plan=args.chaos_plan)
+                      chaos_plan=args.chaos_plan,
+                      net_faults=args.net_faults)
     sweep_s = time.perf_counter() - t0
 
     summary = {

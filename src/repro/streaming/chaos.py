@@ -63,9 +63,12 @@ from typing import List, Optional
 
 import numpy as np
 
-__all__ = ["FaultPlan", "ChaosHooks", "hooks_from_env", "ENV_PLAN"]
+__all__ = ["FaultPlan", "ChaosHooks", "hooks_from_env", "ENV_PLAN",
+           "ENV_NET", "validate_net_fault_doc", "net_fault_model_from_dict",
+           "net_faults_from_env"]
 
 ENV_PLAN = "REPRO_CHAOS_PLAN"
+ENV_NET = "REPRO_NET_FAULTS"
 _STATE_DIR = "chaos_state"
 
 _KINDS = ("kill", "corrupt", "slow", "hang", "drop")
@@ -252,6 +255,172 @@ def hooks_from_env(*, shard=None, worker=None, n_boundaries: int = 1,
 
 
 # ---------------------------------------------------------------------------
+# network-fault plans (the gossip-layer twin of FaultPlan)
+# ---------------------------------------------------------------------------
+# FaultPlan injects PROCESS faults (kill/corrupt/slow/hang/drop);
+# REPRO_NET_FAULTS injects NETWORK faults into the gossip itself — link
+# drops, Gilbert–Elliott bursts, node crash/rejoin, payload corruption —
+# via core.netfaults.FaultyConsensus. Same conventions: a small seeded
+# declarative JSON document, wired through an env var so production code
+# carries no fault branches:
+#
+#     {"seed": 0, "p_drop": 0.2,
+#      "burst": {"p_bad": 0.05, "p_good": 0.5},
+#      "corrupt": {"p": 0.01, "mode": "scale", "scale": 1e9, "guard": 1e6},
+#      "crash": [{"node": 0, "start": 2, "len": 3}],
+#      "debias": "realized"}
+#
+# Every field is optional (an empty document is the fault-free model).
+
+def _num_field(doc, key, lo=None, hi=None, path=""):
+    v = doc[key]
+    label = f"{path}{key}"
+    if not isinstance(v, (int, float)) or isinstance(v, bool):
+        raise ValueError(f"{label}: expected a number, got {v!r}")
+    v = float(v)
+    if lo is not None and v < lo or hi is not None and v > hi:
+        rng = (f"[{lo}, {hi}]" if hi is not None else f">= {lo}")
+        raise ValueError(f"{label}: must be in {rng}, got {v}")
+    return v
+
+
+def validate_net_fault_doc(doc: dict) -> dict:
+    """Validate a net-fault JSON document, raising ``ValueError`` with a
+    field-path diagnostic (``crash[1].len: must be a positive integer``)
+    on the first malformed field. Returns the parsed document unchanged."""
+    if not isinstance(doc, dict):
+        raise ValueError(f"net-fault plan: expected a JSON object, got "
+                         f"{type(doc).__name__}")
+    known = {"seed", "p_drop", "burst", "corrupt", "crash", "debias"}
+    for k in doc:
+        if k not in known:
+            raise ValueError(f"{k}: unknown field (expected one of "
+                             f"{sorted(known)})")
+    if "seed" in doc and not isinstance(doc["seed"], int):
+        raise ValueError(f"seed: expected an integer, got {doc['seed']!r}")
+    if "p_drop" in doc:
+        _num_field(doc, "p_drop", 0.0, 1.0)
+    if "burst" in doc:
+        burst = doc["burst"]
+        if not isinstance(burst, dict):
+            raise ValueError(f"burst: expected an object, got {burst!r}")
+        for k in burst:
+            if k not in ("p_bad", "p_good"):
+                raise ValueError(f"burst.{k}: unknown field")
+            _num_field(burst, k, 0.0, 1.0, path="burst.")
+        if burst.get("p_bad", 0.0) > 0.0 and burst.get("p_good", 1.0) <= 0.0:
+            raise ValueError("burst.p_good: must be > 0 when burst.p_bad "
+                             "> 0 (a burst must be able to end)")
+    if "corrupt" in doc:
+        cor = doc["corrupt"]
+        if not isinstance(cor, dict):
+            raise ValueError(f"corrupt: expected an object, got {cor!r}")
+        for k in cor:
+            if k not in ("p", "mode", "scale", "guard"):
+                raise ValueError(f"corrupt.{k}: unknown field")
+        if "p" in cor:
+            _num_field(cor, "p", 0.0, 1.0, path="corrupt.")
+        if cor.get("mode", "scale") not in ("scale", "nan"):
+            raise ValueError(f"corrupt.mode: expected 'scale' or 'nan', "
+                             f"got {cor.get('mode')!r}")
+        for k in ("scale", "guard"):
+            if k in cor and _num_field(cor, k, path="corrupt.") <= 0.0:
+                raise ValueError(f"corrupt.{k}: must be > 0")
+    if "crash" in doc:
+        crash = doc["crash"]
+        if not isinstance(crash, list):
+            raise ValueError(f"crash: expected a list, got {crash!r}")
+        for i, win in enumerate(crash):
+            if not isinstance(win, dict):
+                raise ValueError(f"crash[{i}]: expected an object")
+            for k in ("node", "start", "len"):
+                if k not in win:
+                    raise ValueError(f"crash[{i}].{k}: missing")
+                if not isinstance(win[k], int) or isinstance(win[k], bool):
+                    raise ValueError(f"crash[{i}].{k}: expected an integer,"
+                                     f" got {win[k]!r}")
+            if win["node"] < 0:
+                raise ValueError(f"crash[{i}].node: must be >= 0")
+            if win["start"] < 0:
+                raise ValueError(f"crash[{i}].start: must be >= 0")
+            if win["len"] <= 0:
+                raise ValueError(f"crash[{i}].len: must be a positive "
+                                 "integer")
+    if doc.get("debias", "realized") not in ("realized", "nominal"):
+        raise ValueError(f"debias: expected 'realized' or 'nominal', got "
+                         f"{doc.get('debias')!r}")
+    return doc
+
+
+def net_fault_model_from_dict(doc: dict):
+    """Build the ``core.netfaults.NetFaultModel`` a validated document
+    describes. Returns ``(model, seed, debias)`` — the pieces a worker
+    needs to wrap each case engine in a ``FaultyConsensus``. Imported
+    lazily so plan validation stays jax-free."""
+    from ..core.netfaults import NetFaultModel
+
+    validate_net_fault_doc(doc)
+    burst = doc.get("burst", {})
+    cor = doc.get("corrupt", {})
+    model = NetFaultModel(
+        p_drop=float(doc.get("p_drop", 0.0)),
+        p_bad=float(burst.get("p_bad", 0.0)),
+        p_good=float(burst.get("p_good", 1.0)),
+        p_corrupt=float(cor.get("p", 0.0)),
+        corrupt_mode=cor.get("mode", "scale"),
+        corrupt_scale=float(cor.get("scale", 1e9)),
+        guard_norm=float(cor.get("guard", 1e6)),
+        crash_windows=tuple((int(w["node"]), int(w["start"]), int(w["len"]))
+                            for w in doc.get("crash", ())),
+    )
+    return model, int(doc.get("seed", 0)), doc.get("debias", "realized")
+
+
+def net_faults_from_env() -> Optional[dict]:
+    """The launcher's net-fault entry point: ``REPRO_NET_FAULTS`` names a
+    plan file (or holds inline JSON, for one-liners); absent -> None and
+    the production path never branches on faults."""
+    spec = os.environ.get(ENV_NET)
+    if not spec:
+        return None
+    if spec.lstrip().startswith("{"):
+        doc = json.loads(spec)
+    else:
+        with open(spec) as f:
+            doc = json.load(f)
+    return validate_net_fault_doc(doc)
+
+
+def validate_plan_file(path: str, verbose: bool = True) -> int:
+    """``--validate`` mode: check a chaos/net-fault plan file, printing a
+    line/field diagnostic for malformed plans. Auto-detects the plan kind
+    (a ``"faults"`` key -> process FaultPlan, else net-fault document).
+    Returns a process exit code (0 valid, 1 invalid)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"{path}: unreadable: {e}")
+        return 1
+    except json.JSONDecodeError as e:
+        print(f"{path}:{e.lineno}:{e.colno}: invalid JSON: {e.msg}")
+        return 1
+    try:
+        if isinstance(doc, dict) and "faults" in doc:
+            FaultPlan(doc.get("faults", []), seed=doc.get("seed", 0))
+            kind = f"process fault plan ({len(doc.get('faults', []))} faults)"
+        else:
+            validate_net_fault_doc(doc)
+            kind = "net-fault plan"
+    except (ValueError, TypeError) as e:
+        print(f"{path}: invalid: {e}")
+        return 1
+    if verbose:
+        print(f"{path}: valid {kind}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
 # seeded chaos-smoke scenario (CI entry point)
 # ---------------------------------------------------------------------------
 def run_smoke(workdir: str, *, seed: int = 0, verbose: bool = True) -> dict:
@@ -342,11 +511,16 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="run the seeded CI chaos-equivalence scenario")
+    ap.add_argument("--validate", metavar="PLAN",
+                    help="check a chaos/net-fault plan file and exit "
+                         "(prints a line/field diagnostic when malformed)")
     ap.add_argument("--workdir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.validate:
+        return validate_plan_file(args.validate)
     if not args.smoke:
-        ap.error("nothing to do (pass --smoke)")
+        ap.error("nothing to do (pass --smoke or --validate)")
     workdir = args.workdir or tempfile.mkdtemp(prefix="chaos_smoke_")
     run_smoke(workdir, seed=args.seed)
     return 0

@@ -75,7 +75,19 @@ def heartbeat_age(path: str, now: Optional[float] = None) -> Optional[float]:
 
 
 class Lease(dict):
-    """A lease document (plain dict with typed accessors)."""
+    """A lease document (plain dict with typed accessors).
+
+    Leases are stamped with BOTH clocks: ``renewed_at`` (wall) and
+    ``renewed_mono`` (``time.monotonic()``). Expiry is computed from the
+    monotonic pair whenever it is coherent — ``time.monotonic()`` is
+    system-wide per boot, so any process on the same host can age a lease
+    against its own monotonic reading, immune to NTP steps and operator
+    ``date`` jumps that would make a wall-clock age negative (a live lease
+    never expiring) or huge (a live lease instantly stolen). The wall
+    stamp is the fallback for leases written by an older code version,
+    read across a reboot (a monotonic stamp from a previous boot reads as
+    the future — detected and ignored), or read on a different host.
+    """
 
     @property
     def owner(self) -> str:
@@ -90,12 +102,31 @@ class Lease(dict):
         return float(self.get("renewed_at", 0.0))
 
     @property
+    def renewed_mono(self) -> Optional[float]:
+        v = self.get("renewed_mono")
+        return None if v is None else float(v)
+
+    @property
     def owners(self) -> List[str]:
         return list(self.get("owners", []))
 
-    def expired(self, ttl: float, now: Optional[float] = None) -> bool:
-        return ((time.time() if now is None else now)
-                - self.renewed_at) > ttl
+    def age(self, now: Optional[float] = None,
+            now_mono: Optional[float] = None) -> float:
+        """Seconds since the last renewal, from a jump-immune source.
+
+        Prefers the monotonic pair when the stamp is coherent with our
+        reading (not from a different boot/host, tolerating sub-second
+        cross-process skew); falls back to wall-clock age otherwise."""
+        mono = self.renewed_mono
+        if mono is not None:
+            nm = time.monotonic() if now_mono is None else now_mono
+            if nm - mono >= -1.0:              # coherent monotonic pair
+                return nm - mono
+        return (time.time() if now is None else now) - self.renewed_at
+
+    def expired(self, ttl: float, now: Optional[float] = None,
+                now_mono: Optional[float] = None) -> bool:
+        return self.age(now, now_mono) > ttl
 
 
 class LeaseStore:
@@ -135,9 +166,10 @@ class LeaseStore:
         token), or None if a live foreign owner holds it or a concurrent
         claimant out-renamed us."""
         now = time.time()
+        now_mono = time.monotonic()
         cur = self.read(shard)
         if (cur is not None and cur.owner != owner
-                and not cur.expired(self.ttl, now)):
+                and not cur.expired(self.ttl, now, now_mono)):
             return None
         nonce = uuid.uuid4().hex
         doc = Lease({
@@ -145,6 +177,7 @@ class LeaseStore:
             "token": (cur.token + 1) if cur else 1,
             "acquired_at": now,
             "renewed_at": now,
+            "renewed_mono": now_mono,
             "nonce": nonce,
             "owners": (cur.owners if cur else []) + [owner],
         })
@@ -162,6 +195,7 @@ class LeaseStore:
             raise LeaseLost(f"shard {shard}: lease lost to "
                             f"{cur.owner if cur else '<gone>'}")
         cur["renewed_at"] = time.time()
+        cur["renewed_mono"] = time.monotonic()
         self._write(shard, cur)
 
     def release(self, shard: int, owner: str, token: int,
@@ -172,6 +206,7 @@ class LeaseStore:
         cur["owner"] = ""
         cur["done"] = bool(done)
         cur["renewed_at"] = 0.0               # immediately acquirable
+        cur["renewed_mono"] = None            # (from either clock)
         self._write(shard, cur)
 
     def pick(self, shards: List[int], owner: str) -> Optional[int]:
@@ -181,6 +216,7 @@ class LeaseStore:
         then a never-leased shard, else the STALEST expired lease (the
         worst straggler's)."""
         now = time.time()
+        now_mono = time.monotonic()
         stalest, stalest_age = None, -1.0
         for s in shards:
             cur = self.read(s)
@@ -190,8 +226,8 @@ class LeaseStore:
             cur = self.read(s)
             if cur is None:
                 return s
-            if cur.expired(self.ttl, now):
-                age = now - cur.renewed_at
+            if cur.expired(self.ttl, now, now_mono):
+                age = cur.age(now, now_mono)
                 if age > stalest_age:
                     stalest, stalest_age = s, age
         return stalest

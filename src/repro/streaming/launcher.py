@@ -76,7 +76,8 @@ from ..core.consensus import DenseConsensus, consensus_schedule
 from ..core.metrics import CommLedger
 from ..core.sweep import SweepResult, slice_seed_shards
 from ..core.topology import complete, erdos_renyi, ring, star, torus2d
-from .chaos import ENV_PLAN, FaultPlan
+from .chaos import (ENV_PLAN, FaultPlan, net_faults_from_env,
+                    validate_net_fault_doc)
 from .fleet import LeaseStore
 
 __all__ = ["build_engine", "build_schedule", "launch_sweep"]
@@ -402,6 +403,7 @@ def launch_sweep(
     backoff_base: float = 0.5,
     poll_interval: float = 0.2,
     chaos_plan: Union[FaultPlan, dict, str, None] = None,
+    net_faults: Union[dict, str, None] = None,
 ) -> SweepResult:
     """Shard a ``sdot_sweep`` case x seed grid over supervised workers.
 
@@ -434,6 +436,14 @@ def launch_sweep(
 
     ``chaos_plan`` (a ``FaultPlan``, its dict form, or a path to one)
     injects seeded faults into the workers for robustness testing.
+
+    ``net_faults`` (a net-fault document dict, or a path to one) makes
+    every worker run its shard through ``core.netfaults.FaultyConsensus``
+    — seeded link drops / bursty outages / crash-rejoin / payload
+    corruption inside the gossip itself, with realized-mixing debias.
+    Defaults from the ``REPRO_NET_FAULTS`` env var; the document enters
+    the spec (and thus the fingerprint), so changing the fault model
+    invalidates published shards just like changing the grid would.
     """
     os.makedirs(workdir, exist_ok=True)
     seeds = [int(s) for s in seeds]
@@ -450,6 +460,21 @@ def launch_sweep(
         raise ValueError(f"per-case covs must zip-broadcast with the "
                          f"cases: got {len(covs)} cov stacks for "
                          f"{len(cases)} cases")
+    if net_faults is None:
+        net_faults = net_faults_from_env()
+    elif isinstance(net_faults, str):
+        if net_faults.lstrip().startswith("{"):
+            net_faults = json.loads(net_faults)
+        else:
+            with open(net_faults) as f:
+                net_faults = json.load(f)
+    if net_faults is not None:
+        validate_net_fault_doc(net_faults)
+        if ragged:
+            # FaultyConsensus pre-samples (T, N, N) edge masks per case
+            # lane; a ragged grid has no single N to sample against
+            raise ValueError("net_faults requires a uniform node count "
+                             "across cases (ragged per-case covs given)")
     if elastic and sweep_chunk is None:
         # stealing without checkpoints would recompute stolen shards from
         # scratch; default to chunked execution so a steal resumes mid-grid
@@ -466,6 +491,10 @@ def launch_sweep(
         "has_q_true": q_true is not None,
         "sweep_chunk": int(sweep_chunk) if sweep_chunk else None,
     }
+    if net_faults is not None:
+        # inside the spec -> inside spec_fingerprint: a changed fault
+        # model invalidates published shards and intermediate checkpoints
+        spec["net_faults"] = net_faults
     spec_path = os.path.join(workdir, _SPEC)
     with open(spec_path, "w") as f:
         json.dump(spec, f, indent=2)

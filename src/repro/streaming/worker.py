@@ -66,7 +66,7 @@ def run_shard(spec: dict, workdir: str, shard: int, *, worker=None,
     import numpy as np
 
     from repro.checkpoint.manager import CheckpointManager, save_tree
-    from repro.core.sweep import sdot_sweep
+    from repro.core.sweep import netfault_sweep, sdot_sweep
     from repro.streaming import chaos
     from repro.streaming.fleet import touch_heartbeat
     from repro.streaming.launcher import (_load_result, _worker_dir,
@@ -129,10 +129,26 @@ def run_shard(spec: dict, workdir: str, shard: int, *, worker=None,
         # mid-grid from it
         manager = CheckpointManager(ckpt_dir, on_save=on_boundary)
 
-    sw = sdot_sweep(covs=covs, engines=engines, schedules=schedules,
-                    r=spec["r"], t_outer=spec["t_outer"], t_c=spec["t_c"],
-                    seeds=seeds, q_true=q_true,
-                    manager=manager, chunk_size=sweep_chunk)
+    if spec.get("net_faults"):
+        # gossip-layer fault injection: wrap every case engine in a
+        # FaultyConsensus built from the spec's net-fault document — the
+        # document is part of the spec fingerprint, so every worker (and
+        # every resume) runs the identical seeded fault realization
+        from repro.core.netfaults import FaultyConsensus
+        model, fseed, debias = chaos.net_fault_model_from_dict(
+            spec["net_faults"])
+        engines = [FaultyConsensus(graph=e.graph, faults=model, seed=fseed,
+                                   debias=debias) for e in engines]
+        sw = netfault_sweep(covs=covs, engines=engines,
+                            schedules=schedules, r=spec["r"],
+                            t_outer=spec["t_outer"], t_c=spec["t_c"],
+                            seeds=seeds, q_true=q_true,
+                            manager=manager, chunk_size=sweep_chunk)
+    else:
+        sw = sdot_sweep(covs=covs, engines=engines, schedules=schedules,
+                        r=spec["r"], t_outer=spec["t_outer"],
+                        t_c=spec["t_c"], seeds=seeds, q_true=q_true,
+                        manager=manager, chunk_size=sweep_chunk)
     # the step the runtime ACTUALLY restored (a corrupt/stale newest
     # checkpoint falls back, so this can be less than the dir's latest step)
     resumed_steps = sw.resumed_step

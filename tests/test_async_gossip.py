@@ -32,6 +32,21 @@ def test_async_consensus_converges_to_sum():
     assert float(jnp.abs(out - z0.sum(0)[None]).max()) < 1e-4
 
 
+def test_all_asleep_rounds_are_exact_identity():
+    """The degenerate round: nobody awake -> every realized round matrix
+    renormalizes to exact identity, zero sends are logged, and the debias
+    clamp never divides by ~0 — the input comes back BIT-FOR-BIT."""
+    from repro.core.metrics import CommLedger
+    eng = AsyncConsensus(erdos_renyi(10, 0.5, seed=1), p_awake=0.0, seed=0)
+    z0 = _z(seed=6)
+    ledger = CommLedger()
+    out = eng.run_debiased(z0, 25, ledger)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z0))
+    assert np.all(np.isfinite(np.asarray(out)))
+    assert ledger.p2p == 0.0 and ledger.scalars == 0.0
+    assert ledger.awake_counts and max(ledger.awake_counts) == 0.0
+
+
 def test_async_slower_than_sync_in_rounds():
     """Dropped rounds cost contraction: async error at equal round count is
     no better than synchronous."""

@@ -21,8 +21,9 @@ from repro.core.linalg import eigh_topr
 from repro.core.sweep import sdot_sweep, slice_seed_shards
 from repro.streaming import chaos
 from repro.streaming.chaos import ChaosHooks, FaultPlan
-from repro.streaming.fleet import (LeaseLost, LeaseStore, fleet_worker_loop,
-                                   heartbeat_age, touch_heartbeat)
+from repro.streaming.fleet import (Lease, LeaseLost, LeaseStore,
+                                   fleet_worker_loop, heartbeat_age,
+                                   touch_heartbeat)
 from repro.streaming.launcher import (_load_result, build_engine,
                                       build_schedule, launch_sweep,
                                       spec_fingerprint)
@@ -198,6 +199,58 @@ def test_lease_pick_prefers_never_leased_then_stalest(tmp_path):
     #                                              with 2 never leased
     assert store.pick([0, 1, 2], "z") == 2       # then never-leased
     assert store.pick([0, 1], "z") == 0          # else the stalest
+
+
+def test_lease_expiry_survives_wall_clock_jumps(tmp_path):
+    """Lease aging is dual-clock: the monotonic stamp decides whenever it
+    is coherent, so operator ``date`` jumps and NTP steps cannot make a
+    DEAD lease immortal (wall jumped forward at renewal: age would read
+    negative) or a LIVE lease instantly stealable (wall jumped back)."""
+    store = LeaseStore(str(tmp_path), ttl=30.0)
+    lease = store.try_acquire(0, "a")
+
+    # owner died 100 monotonic seconds ago, but its last renewal happened
+    # just after the wall clock was stepped 1h into the future: wall age
+    # is hugely negative -> the old wall-only code NEVER expired this
+    lease["renewed_at"] = time.time() + 3600.0
+    lease["renewed_mono"] = time.monotonic() - 100.0
+    store._write(0, dict(lease))
+    assert store.read(0).expired(30.0)
+    assert store.try_acquire(0, "b") is not None      # stealable
+
+    # live lease (renewed moments ago) + wall stepped BACK 1h: wall age
+    # reads ~3600s but the monotonic pair says fresh -> not stealable
+    lease2 = store.try_acquire(1, "a")
+    lease2["renewed_at"] = time.time() - 3600.0
+    lease2["renewed_mono"] = time.monotonic()
+    store._write(1, dict(lease2))
+    assert not store.read(1).expired(30.0)
+    assert store.try_acquire(1, "b") is None
+
+
+def test_lease_incoherent_or_missing_mono_falls_back_to_wall(tmp_path):
+    """A monotonic stamp from ANOTHER boot (reads as our future) or a
+    lease written by an older code version (no stamp at all) must age by
+    the wall clock, not be trusted or crash."""
+    store = LeaseStore(str(tmp_path), ttl=30.0)
+
+    # pre-dual-clock lease document: no renewed_mono key, fresh wall stamp
+    legacy = Lease({"owner": "a", "token": 1, "renewed_at": time.time(),
+                    "owners": ["a"]})
+    store._write(0, dict(legacy))
+    assert not store.read(0).expired(30.0)            # wall fallback: live
+    legacy["renewed_at"] = time.time() - 100.0
+    store._write(0, dict(legacy))
+    assert store.read(0).expired(30.0)                # wall fallback: dead
+
+    # cross-boot stamp: a monotonic reading far ahead of ours is
+    # incoherent (nm - mono << -1) -> ignored in favor of the wall age
+    cross = Lease({"owner": "a", "token": 1,
+                   "renewed_at": time.time() - 100.0,
+                   "renewed_mono": time.monotonic() + 9e5,
+                   "owners": ["a"]})
+    store._write(1, dict(cross))
+    assert store.read(1).expired(30.0)
 
 
 def test_heartbeat_roundtrip(tmp_path):

@@ -1,0 +1,442 @@
+"""Self-healing gossip under network faults (core/netfaults.py): realized
+renormalization/debias correctness, execution-mode bit-equality (fused scan
+vs eager rounds vs host NumPy oracle), the faulty algorithm zoo, sweeps,
+and the net-fault plan front door."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import DenseConsensus, consensus_schedule
+from repro.core.fdot import fdot
+from repro.core.metrics import CommLedger
+from repro.core.netfaults import (FaultyConsensus, NetFaultModel,
+                                  masked_faulty_rounds, realized_debias,
+                                  sample_fault_blocks)
+from repro.core.sdot import sdot
+from repro.core.sweep import SweepResult, netfault_sweep, sdot_sweep
+from repro.core.topology import erdos_renyi, ring
+from repro.data.pipeline import partition_features
+from repro.core.linalg import eigh_topr
+
+N = 8
+
+
+def _z(n=N, d=6, r=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d, r)), jnp.float32)
+
+
+def _model(**kw):
+    base = dict(p_drop=0.25, p_bad=0.1, p_good=0.5, p_corrupt=0.05)
+    base.update(kw)
+    return NetFaultModel(**base)
+
+
+def _engine(seed=0, g=None, **kw):
+    return FaultyConsensus(graph=g or erdos_renyi(N, 0.5, seed=1),
+                           faults=_model(), seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# model validation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bad, field", [
+    (dict(p_drop=1.5), "p_drop"),
+    (dict(p_bad=-0.1), "p_bad"),
+    (dict(p_bad=0.2, p_good=0.0), "p_good"),
+    (dict(corrupt_mode="flip"), "corrupt_mode"),
+    (dict(corrupt_scale=-1.0), "corrupt_scale"),
+    (dict(guard_norm=0.0), "guard_norm"),
+    (dict(crash_windows=((0, 2, 0),)), "crash_windows"),
+    (dict(crash_windows=((-1, 2, 3),)), "crash_windows"),
+])
+def test_model_validation_names_field(bad, field):
+    with pytest.raises(ValueError, match=field):
+        NetFaultModel(**bad).validate()
+
+
+def test_model_validation_bounds_against_problem():
+    m = NetFaultModel(crash_windows=((9, 0, 2),))
+    with pytest.raises(ValueError, match="crash_windows"):
+        m.validate(n_nodes=8)
+    # a crash window entirely past the horizon is an authoring error too
+    m = NetFaultModel(crash_windows=((0, 10, 2),))
+    with pytest.raises(ValueError, match="crash_windows"):
+        m.validate(n_nodes=8, t_outer=5)
+
+
+def test_node_up_marks_crash_windows():
+    m = NetFaultModel(crash_windows=((1, 2, 3), (0, 0, 1)))
+    up = m.node_up(6, 4)
+    assert up.shape == (6, 4)
+    assert up[0, 0] == 0.0 and up[1, 0] == 1.0
+    assert np.all(up[2:5, 1] == 0.0) and up[5, 1] == 1.0
+    assert np.all(up[:, 2:] == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# degenerate rounds: all links down / everyone crashed -> exact identity
+# ---------------------------------------------------------------------------
+def test_all_links_down_round_is_identity_with_zero_sends():
+    eng = FaultyConsensus(graph=erdos_renyi(N, 0.5, seed=1),
+                          faults=NetFaultModel(p_drop=1.0), seed=3)
+    z0 = _z()
+    ledger = CommLedger()
+    out = eng.run_debiased(z0, 10, ledger)
+    # every round renormalizes to exact identity; debias clamp never
+    # divides by ~0, so the input comes back BIT-FOR-BIT
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z0))
+    assert ledger.p2p == 0.0 and ledger.scalars == 0.0
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_all_nodes_crashed_round_is_identity():
+    eng = _engine()
+    z0 = _z(seed=4)
+    out = eng.run_debiased(z0, 5, node_up=np.zeros((N,), np.float32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z0))
+
+
+def test_all_corrupt_degrades_to_identity():
+    """A fully poisoned round must degrade to a fully dropped one: the
+    norm/NaN screen rejects every payload, nothing mixes, nothing NaNs."""
+    for mode in ("scale", "nan"):
+        eng = FaultyConsensus(
+            graph=erdos_renyi(N, 0.5, seed=1),
+            faults=NetFaultModel(p_corrupt=1.0, corrupt_mode=mode), seed=5)
+        z0 = _z(seed=5)
+        out = eng.run_debiased(z0, 8)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(z0))
+
+
+# ---------------------------------------------------------------------------
+# realized round matrices stay doubly stochastic
+# ---------------------------------------------------------------------------
+def test_realized_round_matrix_doubly_stochastic():
+    eng = _engine()
+    rng = np.random.default_rng(0)
+    adj = np.asarray(eng.graph.adjacency, bool)
+    for _ in range(20):
+        u = rng.random((N, N))
+        u = np.triu(u, 1)
+        u = u + u.T
+        mask = adj & (u >= 0.4)
+        w = eng.realized_round_matrix(mask)
+        assert np.allclose(w.sum(0), 1.0, atol=1e-12)
+        assert np.allclose(w.sum(1), 1.0, atol=1e-12)
+        assert np.all(w >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# execution modes: fused scan == eager rounds (bitwise) == host oracle
+# ---------------------------------------------------------------------------
+def test_fused_rounds_match_eager_bitwise():
+    eng, eng2 = _engine(seed=11), _engine(seed=11)
+    z0 = _z(seed=1)
+    node_up = jnp.ones((N,), jnp.float32).at[2].set(0.0)
+    for _ in range(3):                  # burst state carries across calls
+        faults = eng.sample_faults(12, t_max=20)
+        faults2 = eng2.sample_faults(12, t_max=20)
+        fused = masked_faulty_rounds(eng._w, eng._adj, eng._params, node_up,
+                                     eng._ge, tuple(map(jnp.asarray,
+                                                        faults)),
+                                     jnp.int32(12), z0)
+        eager = eng2.run_rounds_eager(z0, node_up, faults2)
+        for a, b in zip(fused, eager):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        eng._ge, eng2._ge = fused[2], eager[2]
+
+
+def test_host_oracle_matches_device_rounds():
+    eng = _engine(seed=2)
+    host = FaultyConsensus(graph=eng.graph, faults=eng.faults, seed=2,
+                           fused=False)
+    z0 = _z(seed=2)
+    out_dev = eng.run_debiased(z0, 15)
+    out_host = host.run_debiased(z0, 15)
+    # same masks, same op order; np vs XLA einsum differ by ~1 ulp
+    np.testing.assert_allclose(np.asarray(out_dev), np.asarray(out_host),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(eng._ge), np.asarray(host._ge))
+
+
+def test_realized_debias_consensus_converges_under_drops():
+    eng = FaultyConsensus(graph=erdos_renyi(N, 0.5, seed=1),
+                          faults=NetFaultModel(p_drop=0.3), seed=0)
+    z0 = _z()
+    out = eng.run_debiased(z0, 300)
+    assert float(jnp.abs(out - z0.sum(0)[None]).max()) < 1e-3
+
+
+def test_padded_draws_slice_consistently():
+    """sample_faults(t_c, t_max) must equal the first t_c rows of the
+    padded draw — the contract that lets eager runs replay fused scans."""
+    key = jax.random.PRNGKey(9)
+    full = sample_fault_blocks(key, N, 20)
+    eng = _engine(seed=9)
+    got = eng.sample_faults(12, t_max=20)
+    _, sub = jax.random.split(jax.random.PRNGKey(9))
+    ref = sample_fault_blocks(sub, N, 20)
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r[:12]))
+    assert full[0].shape == (20, N, N)
+
+
+# ---------------------------------------------------------------------------
+# algorithm zoo under faults: fused executors vs eager oracles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sched_kind", ["const", "lin2"])
+@pytest.mark.parametrize("topo", ["ring", "er"])
+def test_sdot_faulty_fused_matches_eager_bitwise(psa_problem, sched_kind,
+                                                 topo):
+    p = psa_problem
+    g = (ring(p["n_nodes"]) if topo == "ring"
+         else erdos_renyi(p["n_nodes"], 0.5, seed=1))
+    model = NetFaultModel(p_drop=0.2, p_bad=0.05, p_good=0.5,
+                          p_corrupt=0.02, crash_windows=((0, 2, 2),))
+    sched = consensus_schedule(sched_kind, 6, t_max=8, cap=8)
+    run = lambda fused: sdot(
+        covs=p["covs"], engine=FaultyConsensus(graph=g, faults=model,
+                                               seed=7),
+        r=p["r"], t_outer=6, schedule=sched, q_true=p["q_true"],
+        fused=fused)
+    fres, eres = run(True), run(False)
+    # final iterates are BITWISE equal; the error trace is computed inside
+    # the jitted scan (fused) vs per-iteration (eager), so XLA fusion can
+    # move it by ~1 ulp — same pin as test_sdot_fused.py
+    np.testing.assert_array_equal(np.asarray(fres.q_nodes),
+                                  np.asarray(eres.q_nodes))
+    np.testing.assert_allclose(fres.error_trace, eres.error_trace,
+                               rtol=1e-5, atol=1e-7)
+    assert fres.ledger.p2p == eres.ledger.p2p
+    assert fres.ledger.scalars == eres.ledger.scalars
+    assert fres.ledger.awake_counts == eres.ledger.awake_counts
+
+
+def test_sdot_faulty_syncs_engine_state(psa_problem):
+    """After a fused run the engine's RNG key and burst state equal the
+    eager run's — chaining runs off one engine is execution-mode agnostic."""
+    p = psa_problem
+    g = erdos_renyi(p["n_nodes"], 0.5, seed=1)
+    model = NetFaultModel(p_drop=0.2, p_bad=0.1, p_good=0.4)
+    e1 = FaultyConsensus(graph=g, faults=model, seed=3)
+    e2 = FaultyConsensus(graph=g, faults=model, seed=3)
+    sdot(covs=p["covs"], engine=e1, r=p["r"], t_outer=4, t_c=6, fused=True)
+    sdot(covs=p["covs"], engine=e2, r=p["r"], t_outer=4, t_c=6, fused=False)
+    np.testing.assert_array_equal(np.asarray(e1._key), np.asarray(e2._key))
+    np.testing.assert_array_equal(np.asarray(e1._ge), np.asarray(e2._ge))
+
+
+def test_sdot_faulty_reaches_floor(psa_problem):
+    p = psa_problem
+    eng = FaultyConsensus(graph=erdos_renyi(p["n_nodes"], 0.5, seed=1),
+                          faults=NetFaultModel(p_drop=0.2), seed=0)
+    res = sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=60, t_c=30,
+               q_true=p["q_true"])
+    assert res.error_trace[-1] < 1e-5
+
+
+def test_sdot_crashed_node_freezes_then_rejoins(psa_problem):
+    """During its window the crashed node's iterate must not move; after
+    rejoin it must re-converge with everyone else."""
+    p = psa_problem
+    model = NetFaultModel(crash_windows=((3, 0, 4),))
+    eng = FaultyConsensus(graph=erdos_renyi(p["n_nodes"], 0.5, seed=1),
+                          faults=model, seed=0)
+    import repro.core.sdot as sdot_mod
+    prep = sdot_mod._prepare_sdot(covs=p["covs"], data=None, engine=eng,
+                                  r=p["r"], t_outer=10, t_c=10,
+                                  schedule=None, q_init=None,
+                                  q_true=p["q_true"], seed=0)
+    q_frozen = np.asarray(prep["q_nodes"][3])
+    # window [0, 4): the whole 4-iteration run leaves node 3 at its init
+    eng2 = FaultyConsensus(graph=eng.graph, faults=model, seed=0)
+    partial = sdot(covs=p["covs"], engine=eng2, r=p["r"], t_outer=4,
+                   t_c=10, fused=False)
+    np.testing.assert_array_equal(np.asarray(partial.q_nodes[3]), q_frozen)
+    res = sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=16, t_c=10,
+               q_true=p["q_true"], fused=False)
+    assert res.error_trace[-1] < 1e-4      # rejoined and re-converged
+
+
+def test_fdot_faulty_fused_matches_eager(psa_problem):
+    p = psa_problem
+    x = np.concatenate([np.asarray(b) for b in p["blocks"]], axis=1)
+    x = jnp.asarray(x[:, :120])
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], p["r"])
+    blocks = partition_features(x, 4)
+    model = NetFaultModel(p_drop=0.15, p_bad=0.05, p_good=0.5)
+    run = lambda fused: fdot(
+        data_blocks=blocks,
+        engine=FaultyConsensus(graph=erdos_renyi(4, 0.9, seed=1),
+                               faults=model, seed=2),
+        r=p["r"], t_outer=5, t_c=8, q_true=q_true, fused=fused)
+    fres, eres = run(True), run(False)
+    # the existing F-DOT precedent (test_fused_zoo): eager uses ragged
+    # per-block matmuls, fused uses padded slabs -> allclose, not bitwise
+    np.testing.assert_allclose(fres.error_trace, eres.error_trace,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fres.q_full),
+                               np.asarray(eres.q_full), rtol=1e-4,
+                               atol=1e-5)
+    assert fres.ledger.p2p == eres.ledger.p2p
+    assert fres.ledger.awake_counts == eres.ledger.awake_counts
+
+
+def test_fdot_faulty_reaches_floor(psa_problem):
+    p = psa_problem
+    x = np.concatenate([np.asarray(b) for b in p["blocks"]], axis=1)
+    x = jnp.asarray(x[:, :160])
+    _, q_true = eigh_topr(x @ x.T / x.shape[1], p["r"])
+    blocks = partition_features(x, 4)
+    eng = FaultyConsensus(graph=erdos_renyi(4, 0.9, seed=1),
+                          faults=NetFaultModel(p_drop=0.2), seed=0)
+    res = fdot(data_blocks=blocks, engine=eng, r=p["r"], t_outer=25,
+               t_c=40, q_true=q_true)
+    # F-DOT gossips GRAM matrices, so the realized-mixing residual feeds
+    # the QR directly (not washed out like S-DOT's scalar) — the faulty
+    # floor sits ~1e-4 rather than the fault-free 1e-6
+    assert res.error_trace[-1] < 5e-4
+
+
+# ---------------------------------------------------------------------------
+# sweep lane
+# ---------------------------------------------------------------------------
+def test_netfault_sweep_matches_single_runs(psa_problem):
+    p = psa_problem
+    g1 = erdos_renyi(p["n_nodes"], 0.5, seed=1)
+    g2 = ring(p["n_nodes"])
+    model = NetFaultModel(p_drop=0.2, p_bad=0.05, p_good=0.5)
+    engines = [FaultyConsensus(graph=g, faults=model, seed=4)
+               for g in (g1, g2)]
+    schedules = [consensus_schedule("const", 5, t_max=8),
+                 consensus_schedule("lin2", 5, cap=8)]
+    seeds = [0, 3]
+    sw = netfault_sweep(covs=p["covs"], engines=engines,
+                        schedules=schedules, r=p["r"], t_outer=5,
+                        seeds=seeds, q_true=p["q_true"])
+    assert sw.error_traces.shape == (2, 2, 5)
+    for ci, (g, sched) in enumerate(zip((g1, g2), schedules)):
+        for si, s in enumerate(seeds):
+            eng = FaultyConsensus(graph=g, faults=model, seed=4)
+            eng._key = jax.random.fold_in(eng._key, s)
+            single = sdot(covs=p["covs"], engine=eng, r=p["r"], t_outer=5,
+                          schedule=sched, q_true=p["q_true"], seed=s)
+            np.testing.assert_allclose(sw.error_traces[ci, si],
+                                       single.error_trace, atol=1e-6)
+
+
+def test_netfault_sweep_requires_faulty_engines(psa_problem):
+    p = psa_problem
+    with pytest.raises(ValueError, match="FaultyConsensus"):
+        netfault_sweep(covs=p["covs"],
+                       engines=[DenseConsensus(ring(p["n_nodes"]))],
+                       r=p["r"], t_outer=4, seeds=[0])
+
+
+# ---------------------------------------------------------------------------
+# merge_shards input validation
+# ---------------------------------------------------------------------------
+def _shard_tree(seeds, fp=101):
+    return {"q": jnp.zeros((len(seeds), 2, 2)),
+            "seeds": jnp.asarray(seeds),
+            "ledger": CommLedger(),
+            "spec_fp": jnp.asarray(fp, jnp.int32)}
+
+
+def test_merge_shards_rejects_mismatched_fingerprints():
+    with pytest.raises(ValueError, match="different sweep specs"):
+        SweepResult.merge_shards([_shard_tree([0, 1], fp=101),
+                                  _shard_tree([2, 3], fp=202)],
+                                 n_cases=1, has_err=False, ragged=False)
+
+
+def test_merge_shards_rejects_overlapping_seed_slices():
+    with pytest.raises(ValueError, match="seed 1 appears in shard 0 and "
+                                         "shard 1"):
+        SweepResult.merge_shards([_shard_tree([0, 1]), _shard_tree([1, 2])],
+                                 n_cases=1, has_err=False, ragged=False)
+
+
+def test_merge_shards_accepts_disjoint_same_fp():
+    sw = SweepResult.merge_shards([_shard_tree([0, 1]), _shard_tree([2])],
+                                  n_cases=1, has_err=False, ragged=False)
+    assert list(np.asarray(sw.seeds)) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# net-fault plan front door (streaming/chaos.py)
+# ---------------------------------------------------------------------------
+def test_net_fault_doc_validation_diagnostics():
+    from repro.streaming.chaos import validate_net_fault_doc
+    validate_net_fault_doc({})                    # empty = fault-free
+    ok = {"seed": 1, "p_drop": 0.2, "burst": {"p_bad": 0.1, "p_good": 0.5},
+          "corrupt": {"p": 0.01, "mode": "nan"},
+          "crash": [{"node": 0, "start": 1, "len": 2}]}
+    assert validate_net_fault_doc(ok) is ok
+    for doc, msg in [
+        ({"p_drop": 2.0}, r"p_drop: must be in \[0.0, 1.0\]"),
+        ({"frobnicate": 1}, "frobnicate: unknown field"),
+        ({"burst": {"p_bad": 0.1, "p_good": 0.0}}, "burst.p_good"),
+        ({"corrupt": {"mode": "zap"}}, "corrupt.mode"),
+        ({"crash": [{"node": 0, "start": 0, "len": 0}]}, r"crash\[0\].len"),
+        ({"crash": [{"node": 0, "start": 0}]}, r"crash\[0\].len: missing"),
+        ({"debias": "magic"}, "debias"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            validate_net_fault_doc(doc)
+
+
+def test_net_fault_model_from_dict_roundtrip():
+    from repro.streaming.chaos import net_fault_model_from_dict
+    doc = {"seed": 5, "p_drop": 0.3, "burst": {"p_bad": 0.1, "p_good": 0.5},
+           "corrupt": {"p": 0.02, "mode": "nan", "guard": 100.0},
+           "crash": [{"node": 2, "start": 1, "len": 4}],
+           "debias": "nominal"}
+    model, seed, debias = net_fault_model_from_dict(doc)
+    assert (seed, debias) == (5, "nominal")
+    assert model.p_drop == 0.3 and model.p_bad == 0.1
+    assert model.corrupt_mode == "nan" and model.guard_norm == 100.0
+    assert model.crash_windows == ((2, 1, 4),)
+
+
+def test_net_faults_from_env(monkeypatch, tmp_path):
+    from repro.streaming import chaos
+    monkeypatch.delenv(chaos.ENV_NET, raising=False)
+    assert chaos.net_faults_from_env() is None
+    monkeypatch.setenv(chaos.ENV_NET, '{"p_drop": 0.1}')
+    assert chaos.net_faults_from_env() == {"p_drop": 0.1}
+    path = tmp_path / "nf.json"
+    path.write_text(json.dumps({"p_drop": 0.2, "seed": 3}))
+    monkeypatch.setenv(chaos.ENV_NET, str(path))
+    assert chaos.net_faults_from_env()["seed"] == 3
+    monkeypatch.setenv(chaos.ENV_NET, '{"p_drop": 7}')
+    with pytest.raises(ValueError, match="p_drop"):
+        chaos.net_faults_from_env()
+
+
+def test_validate_cli_mode(tmp_path, capsys):
+    from repro.streaming import chaos
+    good = tmp_path / "good.json"
+    good.write_text('{"p_drop": 0.2}')
+    assert chaos.main(["--validate", str(good)]) == 0
+    assert "valid net-fault plan" in capsys.readouterr().out
+
+    plan = tmp_path / "plan.json"
+    plan.write_text('{"faults": [{"kind": "kill", "shard": 0}]}')
+    assert chaos.main(["--validate", str(plan)]) == 0
+    assert "valid process fault plan" in capsys.readouterr().out
+
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"p_drop": 2.0}')
+    assert chaos.main(["--validate", str(bad)]) == 1
+    assert "p_drop" in capsys.readouterr().out
+
+    torn = tmp_path / "torn.json"
+    torn.write_text('{"p_drop": 0.2,\n  "seed": }')
+    assert chaos.main(["--validate", str(torn)]) == 1
+    out = capsys.readouterr().out
+    assert f"{torn}:2:" in out and "invalid JSON" in out

@@ -225,6 +225,42 @@ def test_sdot_async_crash_resume_bitwise(tmp_path, stream_problem, kill_at):
 
 
 @pytest.mark.parametrize("kill_at", [1, 2])
+def test_sdot_netfaults_crash_resume_bitwise(tmp_path, stream_problem,
+                                             kill_at):
+    """The net-fault path: the RNG key AND the per-edge Gilbert–Elliott
+    burst state ride the checkpointed carry, so a faulty run killed at a
+    chunk boundary resumes the SAME realized fault sequence — drops,
+    bursts, and a crash window STRADDLING the boundary replay exactly."""
+    from repro.core.netfaults import FaultyConsensus, NetFaultModel
+    p = stream_problem
+    model = NetFaultModel(p_drop=0.15, p_bad=0.1, p_good=0.4,
+                          crash_windows=((0, 4, 3),))   # spans the t=5 cut
+    mk = lambda: FaultyConsensus(graph=p["graph"], faults=model, seed=9)
+    mono = sdot(covs=p["covs"], engine=mk(), r=R, t_outer=T_OUTER, t_c=T_C,
+                q_true=p["q_true"])
+    mgr = CheckpointManager(str(tmp_path / f"k{kill_at}"))
+    sdot_chunked(covs=p["covs"], engine=mk(), r=R, t_outer=T_OUTER, t_c=T_C,
+                 q_true=p["q_true"], chunk_size=CHUNK, manager=mgr,
+                 max_chunks=kill_at)
+    eng3 = mk()
+    res = sdot_chunked(covs=p["covs"], engine=eng3, r=R, t_outer=T_OUTER,
+                       t_c=T_C, q_true=p["q_true"], chunk_size=CHUNK,
+                       manager=mgr)
+    np.testing.assert_array_equal(res.error_trace, mono.error_trace)
+    np.testing.assert_array_equal(np.asarray(res.q_nodes),
+                                  np.asarray(mono.q_nodes))
+    _assert_ledgers_equal(res.ledger, mono.ledger)
+    # the engine's RNG stream position AND burst state land where the
+    # uninterrupted run's do
+    eng_mono = mk()
+    sdot(covs=p["covs"], engine=eng_mono, r=R, t_outer=T_OUTER, t_c=T_C)
+    np.testing.assert_array_equal(np.asarray(eng3._key),
+                                  np.asarray(eng_mono._key))
+    np.testing.assert_array_equal(np.asarray(eng3._ge),
+                                  np.asarray(eng_mono._ge))
+
+
+@pytest.mark.parametrize("kill_at", [1, 2])
 def test_fdot_crash_resume_bitwise(tmp_path, kill_at):
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.standard_normal((16, 240)), jnp.float32)
@@ -632,6 +668,59 @@ def test_launcher_worker_resumes_mid_grid(tmp_path, stream_problem):
     assert res2.resume_report["reused_shards"] == [0, 1]
     assert res2.resume_report["skipped_grid_points"] == len(seeds)
     np.testing.assert_array_equal(res2.error_traces, res.error_traces)
+
+
+def test_launcher_net_faults_matches_single_process(tmp_path,
+                                                    stream_problem):
+    """A net-fault document threads launcher -> spec -> worker: every
+    worker wraps its engines in FaultyConsensus and the merged result
+    matches the single-process netfault_sweep. The document enters the
+    spec fingerprint, so a CHANGED fault model must NOT reuse the
+    published shards."""
+    from repro.core.netfaults import FaultyConsensus
+    from repro.core.sweep import netfault_sweep
+    from repro.streaming import chaos
+
+    p = stream_problem
+    doc = {"p_drop": 0.2, "burst": {"p_bad": 0.05, "p_good": 0.5},
+           "crash": [{"node": 0, "start": 2, "len": 2}], "seed": 11}
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1}}]
+    seeds = [0, 1, 2]
+    model, fseed, deb = chaos.net_fault_model_from_dict(doc)
+    engines = [FaultyConsensus(graph=build_engine(cases[0]["topology"]).graph,
+                               faults=model, seed=fseed, debias=deb)]
+    ref = netfault_sweep(covs=p["covs"], engines=engines, r=R, t_outer=6,
+                         t_c=T_C, seeds=seeds, q_true=p["q_true"])
+    kw = dict(covs=p["covs"], cases=cases, r=R, t_outer=6, t_c=T_C,
+              seeds=seeds, q_true=p["q_true"], workdir=str(tmp_path),
+              n_workers=2)
+    sw = launch_sweep(net_faults=doc, **kw)
+    np.testing.assert_allclose(sw.error_traces, ref.error_traces,
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sw.q), np.asarray(ref.q),
+                               rtol=1e-6, atol=1e-7)
+    assert sw.ledger.p2p == ref.ledger.p2p
+
+    # same document again: published shards are reused wholesale
+    sw2 = launch_sweep(net_faults=doc, **kw)
+    assert sw2.resume_report["reused_shards"] == [0, 1]
+    np.testing.assert_array_equal(sw2.error_traces, sw.error_traces)
+
+    # a different fault model changes the fingerprint: no stale reuse
+    sw3 = launch_sweep(net_faults=dict(doc, p_drop=0.4), **kw)
+    assert sw3.resume_report["reused_shards"] == []
+    assert float(np.max(np.abs(sw3.error_traces - sw.error_traces))) > 0
+
+
+def test_launcher_net_faults_rejects_ragged(tmp_path, stream_problem):
+    """Per-case ragged covs cannot share one (C, T, N) node-up stack:
+    the launcher fails up front with a clear message."""
+    p = stream_problem
+    cases = [{"topology": {"kind": "er", "n": N, "p": 0.5, "seed": 1}}]
+    with pytest.raises(ValueError, match="uniform node count"):
+        launch_sweep(covs=[p["covs"]], cases=cases, r=R, t_outer=4,
+                     seeds=[0], workdir=str(tmp_path), n_workers=1,
+                     net_faults={"p_drop": 0.1})
 
 
 def test_launcher_reuses_results_published_without_resumed_steps(
