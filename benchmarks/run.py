@@ -16,6 +16,7 @@ MODULES = [
     "sweep_bench",
     "streaming_bench",
     "runtime_bench",
+    "serving_bench",
     "table1_eigengap_p2p",
     "table2_connectivity",
     "table3_ring",

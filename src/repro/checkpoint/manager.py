@@ -148,7 +148,14 @@ class CheckpointManager:
     ``on_save`` (optional) is invoked synchronously with the step number at
     the top of every ``save`` — the chunk-boundary hook the fleet uses for
     heartbeat touches, lease renewals, and chaos injection, with no
-    branches in the runtime's chunk driver."""
+    branches in the runtime's chunk driver.
+
+    ``pin(step)`` / ``unpin(step)`` exempt a step from ``keep_last``
+    retention: a pinned step is never garbage-collected, however many newer
+    steps churn past it. Pins are durable marker files (``pin_<n>``) in the
+    root — a restarted process (or a different one sharing the directory)
+    sees them — which is what lets the serving layer keep its "last good
+    served subspace" alive while per-tick service snapshots cycle."""
 
     def __init__(self, root: str, keep_last: int = 3, on_save=None):
         self.root = root
@@ -159,6 +166,33 @@ class CheckpointManager:
 
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.root, f"step_{step:08d}")
+
+    def _pin_path(self, step: int) -> str:
+        return os.path.join(self.root, f"pin_{step:08d}")
+
+    # -- retention pins -----------------------------------------------------
+    def pin(self, step: int) -> None:
+        """Exempt ``step`` from GC until ``unpin`` (durable across restarts)."""
+        with open(self._pin_path(step), "w") as f:
+            f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
+
+    def unpin(self, step: int) -> None:
+        try:
+            os.remove(self._pin_path(step))
+        except FileNotFoundError:
+            pass
+
+    def pinned_steps(self):
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("pin_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
 
     def all_steps(self):
         out = []
@@ -213,5 +247,8 @@ class CheckpointManager:
             if ".tmp" in name:
                 shutil.rmtree(os.path.join(self.root, name), ignore_errors=True)
         steps = self.all_steps()
+        pinned = set(self.pinned_steps())
         for s in steps[:-self.keep_last] if self.keep_last else []:
+            if s in pinned:
+                continue   # pinned steps survive keep_last churn
             shutil.rmtree(self._step_dir(s), ignore_errors=True)

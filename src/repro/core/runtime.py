@@ -253,7 +253,8 @@ def _restore_any(manager: Optional[CheckpointManager], like: RunState):
 
 def _drive_chunks(state: RunState, program: Program, chunk_size: int,
                   manager: Optional[CheckpointManager],
-                  max_chunks: Optional[int]) -> RunState:
+                  max_chunks: Optional[int],
+                  target_step: Optional[int] = None) -> RunState:
     """The outer chunk loop: scan a chunk, checkpoint, repeat.
 
     The completed-step counter is mirrored on the host (read from the
@@ -263,7 +264,11 @@ def _drive_chunks(state: RunState, program: Program, chunk_size: int,
     (``blocking=False``) so serialization overlaps the next chunk's
     compute; the manager's atomic rename guarantees a kill mid-save leaves
     the previous step intact. ``max_chunks`` lets tests and benchmarks
-    simulate a job killed at a chunk boundary."""
+    simulate a job killed at a chunk boundary. ``target_step`` stops at an
+    ABSOLUTE outer step instead of a relative chunk count — the idempotent
+    form an incremental caller wants: if the restored state is already at
+    (or past) the target, nothing runs, so re-executing a crashed
+    increment can never double-advance the run."""
     t_outer = program.t_outer
     seeded = program.n_seeds > 0
     case_axes = program.case_axes if program.n_cases else None
@@ -272,7 +277,11 @@ def _drive_chunks(state: RunState, program: Program, chunk_size: int,
     while step < t_outer:
         if max_chunks is not None and done >= max_chunks:
             break
+        if target_step is not None and step >= target_step:
+            break
         length = min(chunk_size, t_outer - step)
+        if target_step is not None:
+            length = min(length, target_step - step)
         xs_chunk = jnp.asarray(program.xs[..., step:step + length],
                                jnp.int32)
         state = _chunk_program(state, program.operands, xs_chunk,
@@ -289,14 +298,16 @@ def _drive_chunks(state: RunState, program: Program, chunk_size: int,
 
 
 def _run(program: Program, manager: Optional[CheckpointManager],
-         chunk_size: int, max_chunks: Optional[int]):
+         chunk_size: int, max_chunks: Optional[int],
+         target_step: Optional[int] = None):
     like = _init_state(program)
     restored = _restore_any(manager, like)
     # the step the run ACTUALLY resumed from (a corrupt/stale newest
     # checkpoint falls back, so this can differ from manager.latest_step())
     program.restored_step = int(restored.step) if restored is not None else 0
     state = restored if restored is not None else like
-    state = _drive_chunks(state, program, chunk_size, manager, max_chunks)
+    state = _drive_chunks(state, program, chunk_size, manager, max_chunks,
+                          target_step)
     done = int(state.step)
     if program.finalize is None:
         return state
@@ -312,12 +323,16 @@ def run_monolithic(program: Program):
 
 
 def run_chunked(program: Program, manager: Optional[CheckpointManager],
-                chunk_size: int = 10, max_chunks: Optional[int] = None):
+                chunk_size: int = 10, max_chunks: Optional[int] = None,
+                target_step: Optional[int] = None):
     """The run executed ``chunk_size`` iterations at a time with the
     RunState checkpointed through ``manager`` at every chunk boundary.
     Resume from a kill at any boundary is bit-identical to the
-    uninterrupted run; ``max_chunks`` simulates the kill."""
-    return _run(program, manager, chunk_size, max_chunks)
+    uninterrupted run; ``max_chunks`` simulates the kill. ``target_step``
+    stops at an absolute outer step (idempotent incremental execution —
+    the serving layer's warm re-solve advances a few chunks per service
+    tick this way while the incumbent subspace keeps answering queries)."""
+    return _run(program, manager, chunk_size, max_chunks, target_step)
 
 
 def run_sweep(program: Program, manager: Optional[CheckpointManager] = None,

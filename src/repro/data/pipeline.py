@@ -20,7 +20,8 @@ from ..configs.base import ModelConfig
 
 __all__ = ["gaussian_eigengap_data", "partition_samples", "partition_features",
            "synthetic_lm_stream", "make_lm_batch", "spectrum_matched_data",
-           "spectrum_matched_stream", "eigengap_stream"]
+           "spectrum_matched_stream", "eigengap_stream",
+           "drifting_eigengap_stream"]
 
 
 def _eigengap_cov(rng, d: int, r: int, gap: float, lead: float,
@@ -140,6 +141,40 @@ def eigengap_stream(d: int, r: int, gap: float, seed: int = 0,
     factor = np.linalg.cholesky(c + 1e-12 * np.eye(d))
     return (_stream_batch_fn(jnp.asarray(factor, jnp.float32), seed),
             jnp.asarray(c, jnp.float32), jnp.asarray(u[:, :r], jnp.float32))
+
+
+def drifting_eigengap_stream(d: int, r: int, gap: float, shift_at: int,
+                             seed: int = 0, lead: float = 3.0,
+                             shift_seed: Optional[int] = None,
+                             shift_lead: Optional[float] = None):
+    """An ``eigengap_stream`` whose POPULATION covariance changes mid-stream.
+
+    Steps ``< shift_at`` draw from the pre-shift population, steps
+    ``>= shift_at`` from an independently rotated one (``shift_seed``,
+    default ``seed + 101``) with the same eigengap profile — the seeded
+    spectrum-drift adversary for the serving layer's drift detector.
+    ``shift_lead`` (default ``lead``) sets the post-shift leading
+    eigenvalue: larger than ``lead`` makes the new directions dominate an
+    accumulated sketch quickly (a sharp regime change), equal gives a pure
+    rotation at matched energy. Still a pure function of (seed, step), so
+    a restarted ingestor replays the identical drifting stream, shift
+    included.
+
+    Returns ``(batch_fn, (C0, Q0), (C1, Q1))`` — both population
+    covariances and their top-r bases, for before/after ground truth.
+    """
+    if shift_seed is None:
+        shift_seed = seed + 101
+    if shift_lead is None:
+        shift_lead = lead
+    fn0, c0, q0 = eigengap_stream(d, r, gap, seed=seed, lead=lead)
+    fn1, c1, q1 = eigengap_stream(d, r, gap, seed=shift_seed,
+                                  lead=shift_lead)
+
+    def batch(step: int, m: int) -> jnp.ndarray:
+        return fn0(step, m) if step < shift_at else fn1(step, m)
+
+    return batch, (c0, q0), (c1, q1)
 
 
 # ---------------------------------------------------------------------------

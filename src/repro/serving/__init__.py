@@ -1,0 +1,10 @@
+# Always-fresh subspace serving: a long-lived, self-healing PSA service.
+# drift.py  — spectrum-drift detection on the ingestor's tracked Ritz state
+# query.py  — batched projection/compression query path (deadlines, bounded
+#             admission queue, explicit load shedding, p50/p99 accounting)
+# service.py — the tick loop: ingest -> drift -> warm re-solve (chunked,
+#             crash-resumable) -> quality gate -> atomic swap -> queries,
+#             plus the supervisor (heartbeat watchdog + backoff relaunch)
+#             and the seeded chaos smoke scenario.
+# Keep this module free of jax imports so `python -m repro.serving.service`
+# controls its own flags (same convention as repro.streaming).

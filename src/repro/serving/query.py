@@ -1,0 +1,160 @@
+"""Batched projection/compression query path for the PSA service.
+
+A served subspace is only useful if something asks it questions.  Queries
+here are the two PSA inference primitives: **project** (``y = Q^T x``, the
+r-dim compressed code) and **reconstruct** (``Q Q^T x``, the rank-r
+approximation).  The path is built for graceful degradation, not peak
+throughput:
+
+* **bounded admission queue** — ``submit`` on a full queue returns False
+  and counts a shed request; the service never buffers unboundedly while
+  a re-solve is hogging the device;
+* **per-request deadlines** — every request carries an absolute deadline;
+  answers that would arrive late are counted ``expired`` and dropped
+  instead of silently served stale-slow;
+* **batched execution** — ``process`` drains up to ``max_batch`` requests
+  into ONE jitted matmul against the currently served Q (requests never
+  see a half-swapped subspace: the Q is read once per batch);
+* **p50/p99 accounting** — per-request latency = queue wait + batch
+  compute + any chaos-injected delay.
+
+Chaos integration: ``ChaosHooks.query_delay(req_id)`` returns a *seeded,
+per-request* artificial delay.  It is **accounted, never slept** — the
+delay is added to the request's latency and can push it past its deadline
+(the degradation the bench measures), but wall-clock stays fast and the
+outcome for a given (plan seed, req_id) is deterministic across replays
+and restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QueryRequest", "QueryPath"]
+
+
+@jax.jit
+def _project(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return q.T @ x
+
+
+@jax.jit
+def _reconstruct(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return q @ (q.T @ x)
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One admitted query: payload column + its admission bookkeeping."""
+
+    req_id: int
+    x: np.ndarray          # (d,) query vector
+    submitted_at: float    # wall clock at admission
+    deadline: float        # absolute wall clock; late answers expire
+
+
+class QueryPath:
+    """Bounded, deadline-aware, batched query front-end.
+
+    ``capacity`` bounds the admission queue (overflow -> shed).
+    ``max_batch`` bounds one ``process`` drain.  ``deadline_s`` is the
+    per-request latency budget.  ``mode`` is ``"project"`` or
+    ``"reconstruct"``.  ``hooks`` (a ``streaming.chaos.ChaosHooks`` or
+    None) supplies seeded per-request injected delays.
+    """
+
+    def __init__(self, *, capacity: int = 64, max_batch: int = 16,
+                 deadline_s: float = 0.25, mode: str = "project",
+                 hooks=None, clock=time.monotonic):
+        if mode not in ("project", "reconstruct"):
+            raise ValueError(f"unknown query mode: {mode}")
+        self.capacity = int(capacity)
+        self.max_batch = int(max_batch)
+        self.deadline_s = float(deadline_s)
+        self.mode = mode
+        self.hooks = hooks
+        self.clock = clock
+        self._queue: List[QueryRequest] = []
+        self.submitted = 0
+        self.answered = 0
+        self.shed = 0           # refused at admission (queue full)
+        self.expired = 0        # admitted but answer would miss its deadline
+        self.latencies: List[float] = []
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def warmup(self, d: int, r: int) -> None:
+        """Compile both kernels so first-query latency is not a jit trace."""
+        q = jnp.zeros((d, r), jnp.float32)
+        x = jnp.zeros((d, 1), jnp.float32)
+        _project(q, x).block_until_ready()
+        _reconstruct(q, x).block_until_ready()
+
+    def submit(self, req_id: int, x) -> bool:
+        """Admit one query; False (and a shed count) when the queue is full."""
+        self.submitted += 1
+        if len(self._queue) >= self.capacity:
+            self.shed += 1
+            return False
+        now = self.clock()
+        self._queue.append(QueryRequest(
+            req_id=int(req_id), x=np.asarray(x, np.float32),
+            submitted_at=now, deadline=now + self.deadline_s))
+        return True
+
+    def process(self, served_q) -> List[Tuple[int, np.ndarray]]:
+        """Drain up to ``max_batch`` requests against the served subspace.
+
+        Returns ``[(req_id, answer), ...]`` for the requests that made their
+        deadline; late ones are counted ``expired`` and dropped.  Latency is
+        accounted as queue wait + batch compute + injected chaos delay — the
+        injected part is added to the books, never slept.
+        """
+        if not self._queue:
+            return []
+        batch = self._queue[:self.max_batch]
+        self._queue = self._queue[self.max_batch:]
+        x = jnp.asarray(np.stack([req.x for req in batch], axis=1))
+        kernel = _project if self.mode == "project" else _reconstruct
+        out = np.asarray(kernel(jnp.asarray(served_q), x))
+        done = self.clock()
+        answers: List[Tuple[int, np.ndarray]] = []
+        for j, req in enumerate(batch):
+            injected = (self.hooks.query_delay(req.req_id)
+                        if self.hooks is not None else 0.0)
+            latency = (done - req.submitted_at) + injected
+            if done + injected > req.deadline:
+                self.expired += 1
+                continue
+            self.answered += 1
+            self.latencies.append(latency)
+            answers.append((req.req_id, out[:, j]))
+        return answers
+
+    def drain_expired(self) -> int:
+        """Expire (without answering) queued requests already past deadline."""
+        now = self.clock()
+        live = [r for r in self._queue if r.deadline > now]
+        n_expired = len(self._queue) - len(live)
+        self.expired += n_expired
+        self._queue = live
+        return n_expired
+
+    def summary(self) -> dict:
+        """Counters + latency percentiles (seconds) for metrics/bench."""
+        lat = np.asarray(self.latencies, np.float64)
+        return {
+            "submitted": self.submitted,
+            "answered": self.answered,
+            "shed": self.shed,
+            "expired": self.expired,
+            "queued": len(self._queue),
+            "p50_s": float(np.percentile(lat, 50)) if lat.size else None,
+            "p99_s": float(np.percentile(lat, 99)) if lat.size else None,
+        }

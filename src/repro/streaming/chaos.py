@@ -52,6 +52,19 @@ Fault semantics:
 * ``drop``: delete the freshly published result directory (a lost
   publish). The worker still exits 0 — recovery is the launcher treating
   rc==0 with no valid result as a failure and retrying.
+* ``delay_query``: seeded per-request added latency on the SERVING query
+  path (``{"kind": "delay_query", "p": 0.5, "delay": 0.05}``): request
+  ``req_id`` is delayed iff its (plan seed, fault index, req_id)-keyed draw
+  lands under ``p`` — deterministic, so a serving bench can exercise
+  deadline expiry and load shedding reproducibly. Never one-shot; fires
+  from ``ChaosHooks.query_delay``, not at chunk boundaries. Recovery: the
+  query path's deadline check sheds the late request explicitly.
+* ``corrupt_candidate``: one-shot mangling of a re-solve's CANDIDATE
+  subspace right before the serving quality gate (``mode`` nan | scale) —
+  the adversary for the gate itself. Fires from
+  ``ChaosHooks.mangle_candidate``; an optional ``"resolve"`` field pins it
+  to one re-solve id. Recovery: the gate must reject the candidate, keep
+  serving the incumbent, and fall back to a cold re-solve.
 """
 from __future__ import annotations
 
@@ -71,8 +84,9 @@ ENV_PLAN = "REPRO_CHAOS_PLAN"
 ENV_NET = "REPRO_NET_FAULTS"
 _STATE_DIR = "chaos_state"
 
-_KINDS = ("kill", "corrupt", "slow", "hang", "drop")
-_ONE_SHOT = ("kill", "corrupt", "hang", "drop")
+_KINDS = ("kill", "corrupt", "slow", "hang", "drop", "delay_query",
+          "corrupt_candidate")
+_ONE_SHOT = ("kill", "corrupt", "hang", "drop", "corrupt_candidate")
 
 
 class FaultPlan:
@@ -80,9 +94,25 @@ class FaultPlan:
 
     def __init__(self, faults: List[dict], seed: int = 0):
         for i, f in enumerate(faults):
-            if f.get("kind") not in _KINDS:
-                raise ValueError(f"fault {i}: unknown kind {f.get('kind')!r}"
+            kind = f.get("kind")
+            if kind not in _KINDS:
+                raise ValueError(f"fault {i}: unknown kind {kind!r}"
                                  f" (expected one of {_KINDS})")
+            if kind == "delay_query":
+                p = f.get("p", 1.0)
+                if not isinstance(p, (int, float)) or isinstance(p, bool) \
+                        or not 0.0 <= float(p) <= 1.0:
+                    raise ValueError(f"fault {i}: delay_query.p must be a "
+                                     f"number in [0, 1], got {p!r}")
+                delay = f.get("delay", 0.05)
+                if not isinstance(delay, (int, float)) \
+                        or isinstance(delay, bool) or float(delay) < 0.0:
+                    raise ValueError(f"fault {i}: delay_query.delay must be "
+                                     f"a number >= 0 (seconds), got {delay!r}")
+            if kind == "corrupt_candidate" \
+                    and f.get("mode", "nan") not in ("nan", "scale"):
+                raise ValueError(f"fault {i}: corrupt_candidate.mode must be "
+                                 f"'nan' or 'scale', got {f.get('mode')!r}")
         self.faults = list(faults)
         self.seed = int(seed)
 
@@ -133,18 +163,29 @@ class ChaosHooks:
 
     ``at_boundary(step)`` is invoked from the checkpoint manager's
     ``on_save`` callback (every chunk boundary); ``after_publish(out_dir)``
-    right after the worker publishes its result.
+    right after the worker publishes its result; ``query_delay(req_id)``
+    from a serving query path per admitted request; ``mangle_candidate``
+    from the serving quality gate on each re-solve candidate.
+
+    ``step_boundaries=True`` anchors boundary matching to the SAVED STEP
+    NUMBER instead of this process's save count: a long-lived service whose
+    step counter survives restarts (the serving tick) wants fault
+    boundaries pinned to absolute ticks, so a plan reads the same before
+    and after a crash — a worker's per-attempt count restarts from zero,
+    which is the right axis for the sweep fleet but not for a service.
     """
 
     def __init__(self, plan: Optional[FaultPlan], *, shard=None, worker=None,
                  n_boundaries: int = 1, ckpt_root: Optional[str] = None,
-                 state_dir: Optional[str] = None):
+                 state_dir: Optional[str] = None,
+                 step_boundaries: bool = False):
         self.plan = plan
         self.shard = None if shard is None else int(shard)
         self.worker = None if worker is None else str(worker)
         self.n_boundaries = max(1, int(n_boundaries))
         self.ckpt_root = ckpt_root
         self.state_dir = state_dir
+        self.step_boundaries = bool(step_boundaries)
         self._boundary = 0
         self._last_t = time.monotonic()
         if plan is not None and state_dir:
@@ -196,13 +237,18 @@ class ChaosHooks:
     def at_boundary(self, step: int) -> None:
         if self.plan is None:
             return
-        self._boundary += 1
+        if self.step_boundaries:
+            self._boundary = int(step)
+        else:
+            self._boundary += 1
         elapsed = time.monotonic() - self._last_t
         self._last_t = time.monotonic()
         for idx, fault in enumerate(self.plan.faults):
             if not _matches(fault, self.shard, self.worker):
                 continue
             kind = fault["kind"]
+            if kind in ("delay_query", "corrupt_candidate"):
+                continue  # fire from the serving hooks, not at boundaries
             if kind == "slow":
                 if "sleep" in fault:
                     time.sleep(float(fault["sleep"]))
@@ -235,10 +281,58 @@ class ChaosHooks:
                 import shutil
                 shutil.rmtree(out_dir, ignore_errors=True)
 
+    def query_delay(self, req_id: int) -> float:
+        """Seconds of injected latency for request ``req_id`` (0.0 inert).
+
+        Deterministic in (plan seed, fault index, req_id): the same plan
+        delays the same requests on every run, so deadline-expiry and
+        load-shedding behaviour is reproducible. The caller adds the delay
+        to its service time (sleep or simulated clock)."""
+        if self.plan is None:
+            return 0.0
+        total = 0.0
+        for idx, fault in enumerate(self.plan.faults):
+            if fault["kind"] != "delay_query" \
+                    or not _matches(fault, self.shard, self.worker):
+                continue
+            rng = np.random.default_rng(
+                self.plan.seed * 7919 + (idx + 1) * 104729 + int(req_id))
+            if rng.random() < float(fault.get("p", 1.0)):
+                total += float(fault.get("delay", 0.05))
+        return total
+
+    def mangle_candidate(self, q, resolve_id: int):
+        """One-shot corruption of a re-solve candidate before the gate.
+
+        ``mode`` "nan" poisons one entry; "scale" blows the candidate up by
+        ``scale`` (default 1e9, destroying orthonormality). An optional
+        ``"resolve"`` field pins the fault to one re-solve id; without it
+        the first candidate to pass through is hit. Returns the (possibly
+        corrupted) candidate."""
+        if self.plan is None:
+            return q
+        for idx, fault in enumerate(self.plan.faults):
+            if fault["kind"] != "corrupt_candidate" \
+                    or not _matches(fault, self.shard, self.worker) \
+                    or self._fired(idx):
+                continue
+            if fault.get("resolve") is not None \
+                    and int(fault["resolve"]) != int(resolve_id):
+                continue
+            self._mark(idx)
+            arr = np.array(q, np.float32, copy=True)
+            if fault.get("mode", "nan") == "nan":
+                arr.flat[0] = np.nan
+            else:
+                arr *= float(fault.get("scale", 1e9))
+            q = arr
+        return q
+
 
 def hooks_from_env(*, shard=None, worker=None, n_boundaries: int = 1,
                    ckpt_root: Optional[str] = None,
-                   workdir: Optional[str] = None) -> ChaosHooks:
+                   workdir: Optional[str] = None,
+                   step_boundaries: bool = False) -> ChaosHooks:
     """The worker's single chaos entry point.
 
     Without ``REPRO_CHAOS_PLAN`` in the environment this returns inert
@@ -251,7 +345,7 @@ def hooks_from_env(*, shard=None, worker=None, n_boundaries: int = 1,
     state_dir = os.path.join(workdir or os.path.dirname(path), _STATE_DIR)
     return ChaosHooks(plan, shard=shard, worker=worker,
                       n_boundaries=n_boundaries, ckpt_root=ckpt_root,
-                      state_dir=state_dir)
+                      state_dir=state_dir, step_boundaries=step_boundaries)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,15 @@ are exactly the concatenation of its per-batch shards.  The ingestor's
 whole state (sketch pytree + next stream step) checkpoints through
 ``checkpoint/manager.py``; because the stream is stateless, a restarted
 ingestor resumes at the saved step and replays the identical remainder.
+
+With ``track_top=K`` the ingestor also carries a cheap top-(K+1)
+Rayleigh–Ritz estimate of the GLOBAL covariance spectrum: one subspace-
+iteration + Ritz step per ingested micro-batch against the accumulated
+sketch (two sketch-applies of a (d, K+1) basis — never an eigendecomposition
+of the full (N, d, d) stack), exposing ``ritz_values`` / ``eigengap`` /
+``top_basis()``. This is what the serving layer's drift detector reads; the
+tracked basis and values ride in the checkpointed ``state()`` so a
+restarted service sees the same spectrum estimate it crashed with.
 """
 from __future__ import annotations
 
@@ -39,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.linalg import orthonormal_init
 from ..data.pipeline import partition_samples
 
 __all__ = ["CovSketch", "FrequentDirections", "StreamingIngestor"]
@@ -80,6 +90,10 @@ class CovSketch:
         operand stack ``sdot`` / ``sdot_sweep`` expect."""
         _require_samples(self.counts)
         return self.second_moment / self.counts[:, None, None]
+
+    def apply_sum(self, v: jnp.ndarray) -> jnp.ndarray:
+        """(sum_n X_n X_n^T) @ v without materializing the global matrix."""
+        return jnp.einsum("nde,ek->dk", self.second_moment, v)
 
     def tree_flatten(self):
         return (self.second_moment, self.counts), None
@@ -149,12 +163,35 @@ class FrequentDirections:
         return (jnp.einsum("nld,nle->nde", self.sketch, self.sketch)
                 / self.counts[:, None, None])
 
+    def apply_sum(self, v: jnp.ndarray) -> jnp.ndarray:
+        """(sum_n B_n^T B_n) @ v — two (ell, d) products, never a (d, d)."""
+        bv = jnp.einsum("nld,dk->nlk", self.sketch, v)
+        return jnp.einsum("nld,nlk->dk", self.sketch, bv)
+
     def tree_flatten(self):
         return (self.sketch, self.counts, self.shrink_loss), None
 
     @classmethod
     def tree_unflatten(cls, _aux, children):
         return cls(*children)
+
+
+@jax.jit
+def _ritz_step(sketch, basis):
+    """One subspace-iteration + Rayleigh–Ritz step of the tracked basis.
+
+    ``basis`` (d, k) orthonormal -> (new basis, Ritz values descending).
+    Two sketch-applies and one (k, k) eigh — O(N d^2 k) for the exact
+    sketch, O(N ell d k) for FD — per micro-batch, against the sketch's
+    ACCUMULATED global second moment (so the estimate integrates the whole
+    stream, not just the newest batch)."""
+    total = jnp.maximum(sketch.counts.sum(), 1.0)
+    v, _ = jnp.linalg.qr(sketch.apply_sum(basis))
+    h = v.T @ sketch.apply_sum(v) / total
+    h = 0.5 * (h + h.T)
+    vals, vecs = jnp.linalg.eigh(h)
+    order = jnp.argsort(vals)[::-1]
+    return v @ vecs[:, order], vals[order]
 
 
 class StreamingIngestor:
@@ -167,13 +204,15 @@ class StreamingIngestor:
     sample sets are deterministic and restart-invariant.
 
     ``state()`` / ``restore()`` round-trip the full ingestion state (sketch
-    pytree + next step) through ``checkpoint/manager.py``.
+    pytree + next step — plus the tracked Ritz basis/values when
+    ``track_top`` is set) through ``checkpoint/manager.py``.
     """
 
     def __init__(self, *, n_nodes: int, d: int,
                  batch_fn: Callable[[int, int], jnp.ndarray],
                  batch_size: int, sketch: str = "exact",
-                 ell: Optional[int] = None, start_step: int = 0):
+                 ell: Optional[int] = None, start_step: int = 0,
+                 track_top: Optional[int] = None, ritz_seed: int = 0):
         if batch_size % n_nodes:
             raise ValueError(f"batch_size={batch_size} must divide evenly "
                              f"over {n_nodes} nodes (partition_samples "
@@ -191,6 +230,18 @@ class StreamingIngestor:
             self.sketch = FrequentDirections.init(n_nodes, d, ell)
         else:
             raise ValueError(f"unknown sketch kind: {sketch}")
+        self.track_top = track_top
+        if track_top is not None:
+            if not 0 < track_top < d:
+                raise ValueError(f"track_top={track_top} needs a spare "
+                                 f"direction: require 0 < K < d={d} so the "
+                                 "(K+1)-th Ritz value exists for the gap")
+            self._ritz_basis = orthonormal_init(
+                jax.random.PRNGKey(ritz_seed), d, track_top + 1)
+            self._ritz_vals = jnp.zeros((track_top + 1,), jnp.float32)
+        else:
+            self._ritz_basis = None
+            self._ritz_vals = None
 
     def ingest(self, n_batches: int = 1) -> "StreamingIngestor":
         """Consume the next ``n_batches`` stream steps into the sketches."""
@@ -198,8 +249,31 @@ class StreamingIngestor:
             x = self.batch_fn(self.step, self.batch_size)
             blocks = jnp.stack(partition_samples(x, self.n_nodes))
             self.sketch = self.sketch.update(blocks)
+            if self._ritz_basis is not None:
+                self._ritz_basis, self._ritz_vals = _ritz_step(
+                    self.sketch, self._ritz_basis)
             self.step += 1
         return self
+
+    # -- tracked spectrum (drift detector inputs) ---------------------------
+    @property
+    def ritz_values(self) -> Optional[np.ndarray]:
+        """(K+1,) descending Ritz estimates of the global eigenvalues."""
+        return None if self._ritz_vals is None else np.asarray(self._ritz_vals)
+
+    @property
+    def eigengap(self) -> float:
+        """Tracked lambda_K - lambda_{K+1} estimate (Alg. 1's rate driver)."""
+        if self._ritz_vals is None:
+            raise ValueError("eigengap needs track_top set at construction")
+        k = self.track_top
+        return float(self._ritz_vals[k - 1] - self._ritz_vals[k])
+
+    def top_basis(self) -> jnp.ndarray:
+        """(d, K) tracked leading Ritz basis (the drift reference)."""
+        if self._ritz_basis is None:
+            raise ValueError("top_basis needs track_top set at construction")
+        return self._ritz_basis[:, :self.track_top]
 
     def cov_stack(self) -> jnp.ndarray:
         """The evolving (N, d, d) operand stack for the fused executors."""
@@ -211,10 +285,21 @@ class StreamingIngestor:
 
     # -- checkpointing ------------------------------------------------------
     def state(self) -> dict:
-        """Pytree snapshot for CheckpointManager.save."""
-        return {"step": jnp.int32(self.step), "sketch": self.sketch}
+        """Pytree snapshot for CheckpointManager.save.
+
+        The tracked Ritz basis/values join the tree only when tracking is
+        on, so untracked ingestors keep the PR-4 checkpoint layout (old
+        snapshots restore unchanged)."""
+        tree = {"step": jnp.int32(self.step), "sketch": self.sketch}
+        if self._ritz_basis is not None:
+            tree["ritz_basis"] = self._ritz_basis
+            tree["ritz_vals"] = self._ritz_vals
+        return tree
 
     def restore(self, tree: dict) -> "StreamingIngestor":
         self.step = int(tree["step"])
         self.sketch = tree["sketch"]
+        if self._ritz_basis is not None:
+            self._ritz_basis = jnp.asarray(tree["ritz_basis"])
+            self._ritz_vals = jnp.asarray(tree["ritz_vals"])
         return self

@@ -82,6 +82,66 @@ def test_faultplan_rejects_unknown_kind():
         FaultPlan([{"kind": "explode"}])
 
 
+def test_faultplan_validates_serving_kinds():
+    """Satellite: the serving-layer kinds get field diagnostics too."""
+    with pytest.raises(ValueError, match="fault 0: delay_query.p"):
+        FaultPlan([{"kind": "delay_query", "p": 1.5}])
+    with pytest.raises(ValueError, match="fault 0: delay_query.p"):
+        FaultPlan([{"kind": "delay_query", "p": True}])
+    with pytest.raises(ValueError, match="fault 1: delay_query.delay"):
+        FaultPlan([{"kind": "kill"},
+                   {"kind": "delay_query", "delay": -0.1}])
+    with pytest.raises(ValueError, match="fault 0: corrupt_candidate.mode"):
+        FaultPlan([{"kind": "corrupt_candidate", "mode": "shred"}])
+    # well-formed serving faults load
+    FaultPlan([{"kind": "delay_query", "p": 0.5, "delay": 0.05},
+               {"kind": "corrupt_candidate", "mode": "scale"}])
+
+
+def test_query_delay_seeded_per_request(tmp_path):
+    """delay_query: deterministic in (plan seed, fault idx, req_id), hits
+    ~p of requests, and independent hook instances agree — the property
+    that makes serving-bench deadline expiry reproducible."""
+    plan = FaultPlan([{"kind": "delay_query", "p": 0.5, "delay": 0.05}],
+                     seed=3)
+    h1 = ChaosHooks(plan, state_dir=str(tmp_path / "a"))
+    h2 = ChaosHooks(plan, state_dir=str(tmp_path / "b"))
+    delays = [h1.query_delay(i) for i in range(400)]
+    assert delays == [h2.query_delay(i) for i in range(400)]  # replay-stable
+    hit = sum(d > 0 for d in delays) / len(delays)
+    assert 0.35 < hit < 0.65                                   # ~p
+    assert {d for d in delays} <= {0.0, 0.05}
+    # two delay faults stack; a different seed lands elsewhere
+    plan2 = FaultPlan([{"kind": "delay_query", "p": 0.5, "delay": 0.05}],
+                      seed=4)
+    h3 = ChaosHooks(plan2, state_dir=str(tmp_path / "c"))
+    assert [h3.query_delay(i) for i in range(400)] != delays
+    assert ChaosHooks(None).query_delay(0) == 0.0              # inert
+
+
+def test_mangle_candidate_one_shot_and_pinned(tmp_path):
+    """corrupt_candidate: fires once (durable marker), honors the optional
+    resolve-id pin, and supports both corruption modes."""
+    state = str(tmp_path / "chaos_state")
+    q = np.eye(6, 2, dtype=np.float32)
+
+    plan = FaultPlan([{"kind": "corrupt_candidate", "mode": "nan",
+                       "resolve": 1}])
+    hooks = ChaosHooks(plan, state_dir=state)
+    np.testing.assert_array_equal(hooks.mangle_candidate(q, 0), q)  # not id 1
+    out = hooks.mangle_candidate(q, 1)
+    assert np.isnan(out).any() and np.isfinite(q).all()
+    # one-shot survives a "relaunch" (fresh hooks, same marker dir)
+    relaunched = ChaosHooks(plan, state_dir=state)
+    np.testing.assert_array_equal(relaunched.mangle_candidate(q, 1), q)
+
+    scale = ChaosHooks(
+        FaultPlan([{"kind": "corrupt_candidate", "mode": "scale"}]),
+        state_dir=str(tmp_path / "s"))
+    out = scale.mangle_candidate(q, 0)           # unpinned: first candidate
+    assert np.isfinite(out).all() and np.abs(out).max() > 1e6
+
+
 def test_hooks_inert_without_env(monkeypatch, tmp_path):
     """Production path: no env var -> no chaos branches, no side effects."""
     monkeypatch.delenv(chaos.ENV_PLAN, raising=False)

@@ -41,6 +41,32 @@ def test_latest_step_and_retention(tmp_path):
     assert mgr.all_steps() == [5, 9]          # step 1 pruned
 
 
+def test_pinned_step_survives_retention_churn(tmp_path):
+    """Satellite: pin() exempts a step from keep_last GC until unpin() —
+    the serving layer's last-good served subspace must outlive per-tick
+    snapshot churn, across manager instances (pins are durable files)."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = _tree()
+    mgr.save(1, tree)
+    mgr.pin(1)
+    for s in (2, 3, 4, 5, 6):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [1, 5, 6]       # pinned 1 outlives churn
+    got, step = mgr.restore(tree, step=1)
+    assert step == 1 and got is not None
+
+    # a NEW manager over the same root sees the durable pin
+    mgr2 = CheckpointManager(str(tmp_path), keep_last=2)
+    assert mgr2.pinned_steps() == [1]
+    mgr2.save(7, tree)
+    assert 1 in mgr2.all_steps()
+
+    mgr2.unpin(1)
+    mgr2.unpin(1)                             # idempotent
+    mgr2.save(8, tree)
+    assert mgr2.all_steps() == [7, 8]         # unpinned -> GC'd
+
+
 def test_corrupt_partial_checkpoint_ignored(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     tree = _tree()

@@ -1,0 +1,293 @@
+"""Serving layer: drift-triggered warm re-solve, gated swap, crash-resume.
+
+The load-bearing properties, in the order the service promises them:
+warm starts reconverge in strictly fewer iterations than cold starts after
+a seeded spectrum shift; a kill at any chunk boundary mid-re-solve resumes
+bit-identically (and absolute target_step increments are idempotent, so a
+re-executed service tick can never double-advance a re-solve); the quality
+gate never serves a corrupted/diverged candidate; the query path sheds and
+expires explicitly instead of blocking; and a restarted service replays an
+identical served-subspace trajectory.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.consensus import DenseConsensus
+from repro.core.linalg import eigh_topr, orthonormal_init
+from repro.core.metrics import subspace_error
+from repro.core.runtime import run_chunked, run_monolithic
+from repro.core.sdot import sdot_program
+from repro.core.topology import erdos_renyi
+from repro.data.pipeline import drifting_eigengap_stream
+from repro.serving.drift import DriftDetector
+from repro.serving.query import QueryPath
+from repro.serving.service import PSAService, ServiceConfig, service_summary
+from repro.streaming.chaos import FaultPlan
+from repro.streaming.ingest import StreamingIngestor
+
+D, R, N = 12, 3, 4
+T_OUTER, T_C, CHUNK = 12, 12, 3
+
+
+@pytest.fixture(scope="module")
+def shifted_problem():
+    """A drifting stream ingested just past its shift: pre-shift covs (what
+    the incumbent was solved on) and early-post-shift covs (what a
+    drift-triggered re-solve faces — the detector fires while the blend is
+    moderately rotated, not after the old subspace is orthogonal)."""
+    batch_fn, (_, q0), (_, q1) = drifting_eigengap_stream(
+        D, R, 0.6, shift_at=6, seed=0, lead=3.0, shift_lead=6.0)
+    ing = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn, batch_size=32)
+    ing.ingest(6)
+    covs_pre = ing.cov_stack()
+    ing.ingest(2)
+    covs_post = ing.cov_stack()
+    engine = DenseConsensus(erdos_renyi(N, 0.6, seed=1))
+    return dict(covs_pre=covs_pre, covs_post=covs_post, engine=engine,
+                q0=q0, q1=q1)
+
+
+def _prog(covs, engine, q_init, q_true=None, t_outer=T_OUTER):
+    return sdot_program(covs=covs, engine=engine, r=R, t_outer=t_outer,
+                        t_c=T_C, q_init=q_init, q_true=q_true)
+
+
+# ---------------------------------------------------------------------------
+# warm vs cold reconvergence after a spectrum shift
+# ---------------------------------------------------------------------------
+def test_warm_start_reconverges_in_fewer_iterations(shifted_problem):
+    """Satellite 4a: after the seeded shift, a re-solve warm-started from
+    the incumbent (solved on pre-shift covs) reaches the target residual in
+    STRICTLY fewer outer iterations than a cold random start."""
+    p = shifted_problem
+    _, q_true = eigh_topr(p["covs_post"].sum(0), R)
+    # the incumbent: converged on the PRE-shift covs
+    warm_q = run_monolithic(
+        _prog(p["covs_pre"], p["engine"],
+              orthonormal_init(jax.random.PRNGKey(3), D, R),
+              t_outer=20)).q_nodes.mean(axis=0)
+    assert 0.05 < float(subspace_error(q_true, warm_q)) < 0.5  # moderate
+    t_long = 30
+    cold = run_monolithic(_prog(
+        p["covs_post"], p["engine"],
+        orthonormal_init(jax.random.PRNGKey(4), D, R), q_true=q_true,
+        t_outer=t_long)).error_trace
+    warm = run_monolithic(_prog(
+        p["covs_post"], p["engine"], warm_q, q_true=q_true,
+        t_outer=t_long)).error_trace
+    target = 1e-3
+    assert cold.min() < target and warm.min() < target
+    it_cold = int(np.argmax(cold < target)) + 1
+    it_warm = int(np.argmax(warm < target)) + 1
+    assert it_warm < it_cold, (it_warm, it_cold)
+
+
+# ---------------------------------------------------------------------------
+# kill-at-any-chunk-boundary + absolute-target idempotency
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kill_at", [1, 2, 3])
+def test_resolve_kill_at_chunk_boundary_resumes_bitwise(
+        tmp_path, shifted_problem, kill_at):
+    """Satellite 4b: the serving re-solve (run_chunked over sdot_program)
+    killed at any chunk boundary resumes bit-identically."""
+    p = shifted_problem
+    q_init = orthonormal_init(jax.random.PRNGKey(7), D, R)
+    ref = run_monolithic(_prog(p["covs_post"], p["engine"], q_init))
+
+    mgr = CheckpointManager(str(tmp_path))
+    run_chunked(_prog(p["covs_post"], p["engine"], q_init), mgr,
+                chunk_size=CHUNK, max_chunks=kill_at)       # the "kill"
+    res = run_chunked(_prog(p["covs_post"], p["engine"], q_init), mgr,
+                      chunk_size=CHUNK)                     # the relaunch
+    np.testing.assert_array_equal(np.asarray(res.q_nodes),
+                                  np.asarray(ref.q_nodes))
+    np.testing.assert_array_equal(np.asarray(res.consensus_trace),
+                                  np.asarray(ref.consensus_trace))
+
+
+def test_target_step_increments_are_idempotent(tmp_path, shifted_problem):
+    """The service advances a re-solve to ABSOLUTE targets, one increment
+    per tick: the increments compose to the one-shot run bitwise, and
+    re-executing an increment (a crashed tick replayed) is a no-op."""
+    p = shifted_problem
+    q_init = orthonormal_init(jax.random.PRNGKey(8), D, R)
+    ref = run_monolithic(_prog(p["covs_post"], p["engine"], q_init))
+
+    mgr = CheckpointManager(str(tmp_path))
+    for target in (3, 6, 6, 9, 6, 12):      # repeats/regressions: no-ops
+        res = run_chunked(_prog(p["covs_post"], p["engine"], q_init), mgr,
+                          chunk_size=CHUNK, target_step=target)
+    assert mgr.latest_step() == T_OUTER
+    np.testing.assert_array_equal(np.asarray(res.q_nodes),
+                                  np.asarray(ref.q_nodes))
+
+
+# ---------------------------------------------------------------------------
+# drift detector
+# ---------------------------------------------------------------------------
+def test_drift_detector_triggers_after_shift_not_before(shifted_problem):
+    p = shifted_problem
+    det = DriftDetector(residual_threshold=0.3, warmup=0)
+    batch_fn, (_, q0), _ = drifting_eigengap_stream(
+        D, R, 0.6, shift_at=6, seed=0, lead=3.0, shift_lead=6.0)
+    ing = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                            batch_size=32, track_top=R)
+    ing.ingest(6)
+    served = ing.top_basis()                 # "solved" on pre-shift data
+    pre = det.read(ing, served, baseline_gap=ing.eigengap,
+                   ticks_since_swap=5)
+    assert not pre.triggered, pre
+    ing.ingest(10)                           # through the shift
+    post = det.read(ing, served, baseline_gap=pre.eigengap,
+                    ticks_since_swap=15)
+    assert post.triggered and post.residual > pre.residual, (pre, post)
+
+
+def test_drift_detector_warmup_suppresses_trigger():
+    batch_fn, _, _ = drifting_eigengap_stream(D, R, 0.6, shift_at=0, seed=0)
+    ing = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                            batch_size=32, track_top=R)
+    ing.ingest(8)
+    far = orthonormal_init(jax.random.PRNGKey(9), D, R)  # residual ~ 1
+    det = DriftDetector(residual_threshold=0.1, warmup=3)
+    assert not det.read(ing, far, baseline_gap=1.0,
+                        ticks_since_swap=2).triggered
+    assert det.read(ing, far, baseline_gap=1.0,
+                    ticks_since_swap=3).triggered
+
+
+# ---------------------------------------------------------------------------
+# query path: bounded admission, deadlines, percentiles
+# ---------------------------------------------------------------------------
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _FakeHooks:
+    """query_delay stand-in: fixed delay for odd req_ids."""
+
+    def query_delay(self, req_id):
+        return 1.0 if req_id % 2 else 0.0
+
+
+def test_query_path_sheds_on_full_queue():
+    qp = QueryPath(capacity=3, max_batch=8, deadline_s=10.0)
+    for i in range(5):
+        qp.submit(i, np.zeros(D))
+    assert qp.shed == 2 and len(qp) == 3
+    out = qp.process(np.eye(D, R, dtype=np.float32))
+    assert [rid for rid, _ in out] == [0, 1, 2]
+    assert qp.summary()["shed"] == 2
+
+
+def test_query_path_injected_delay_expires_against_deadline():
+    clock = _FakeClock()
+    qp = QueryPath(capacity=8, max_batch=8, deadline_s=0.5,
+                   hooks=_FakeHooks(), clock=clock)
+    for i in range(4):
+        qp.submit(i, np.ones(D))
+    out = qp.process(np.eye(D, R, dtype=np.float32))
+    # odd req_ids carry +1.0s injected latency > 0.5s deadline: expired,
+    # never answered; even ones answered with sub-deadline latency
+    assert [rid for rid, _ in out] == [0, 2]
+    s = qp.summary()
+    assert s["answered"] == 2 and s["expired"] == 2
+    assert s["p99_s"] < 0.5
+
+
+def test_query_path_drain_expired_and_projection_math():
+    clock = _FakeClock()
+    qp = QueryPath(capacity=8, max_batch=8, deadline_s=0.5, clock=clock)
+    q = np.asarray(orthonormal_init(jax.random.PRNGKey(0), D, R))
+    x = np.arange(D, dtype=np.float32)
+    qp.submit(0, x)
+    out = qp.process(q)
+    np.testing.assert_allclose(out[0][1], q.T @ x, rtol=1e-5, atol=1e-5)
+    qp.submit(1, x)
+    clock.t += 1.0                       # past the deadline while queued
+    assert qp.drain_expired() == 1
+    assert qp.summary()["expired"] == 1 and len(qp) == 0
+
+
+# ---------------------------------------------------------------------------
+# the service loop
+# ---------------------------------------------------------------------------
+def _small_cfg():
+    return ServiceConfig(
+        d=10, r=2, n_nodes=4, batch_size=24, gap=0.6, lead=3.0,
+        shift_lead=6.0, shift_at=5, holdout_m=256, total_ticks=14,
+        t_outer=8, t_c=10, resolve_chunk=2, chunks_per_tick=2,
+        topology={"kind": "er", "n": 4, "p": 0.6, "seed": 1},
+        warmup_ticks=1, drift_threshold=0.3, drift_warmup=2,
+        queries_per_tick=4, max_batch=4, staleness_bound=12, keep_last=3)
+
+
+def test_service_trajectory_and_resume_bitwise(tmp_path):
+    """A stop-and-resume service replays the identical served-subspace
+    trajectory: same swap ticks, same served bits, restore matches the
+    pinned last-good snapshot."""
+    cfg = _small_cfg()
+    ref_dir = os.path.join(str(tmp_path), "ref")
+    svc = PSAService(cfg, ref_dir).run()
+    svc.finalize()
+    ref = service_summary(ref_dir)
+    assert ref["swaps"] >= 2 and ref["gate_rejects"] == 0, ref
+    assert ref["max_staleness"] <= cfg.staleness_bound, ref
+    assert ref["queries"]["answered"] > 0 and ref["queries"]["shed"] == 0
+
+    res_dir = os.path.join(str(tmp_path), "resume")
+    PSAService(cfg, res_dir).run(until=6)       # "crash" at tick boundary
+    svc2 = PSAService(cfg, res_dir).run()       # fresh process resumes
+    svc2.finalize()
+    res = service_summary(res_dir)
+    assert res["served_sha256"] == ref["served_sha256"], (res, ref)
+    assert res["swap_ticks"] == ref["swap_ticks"], (res, ref)
+    assert res["restores"] and all(
+        e["pinned_match"] is not False for e in res["restores"]), res
+    # the pinned step holding the last-swapped subspace survived GC churn
+    mgr = CheckpointManager(os.path.join(res_dir, "state"),
+                            keep_last=cfg.keep_last)
+    pinned = mgr.pinned_steps()
+    assert pinned == [ref["served_at"]]
+    assert pinned[0] in mgr.all_steps()
+
+
+def test_service_gate_rejects_corrupted_candidate(tmp_path):
+    """A chaos-mangled candidate is NEVER served: the gate rejects it, the
+    incumbent keeps serving, and a cold re-solve recovers."""
+    cfg = _small_cfg()
+    plan = FaultPlan(seed=0, faults=[
+        {"kind": "corrupt_candidate", "mode": "nan", "resolve": 1}])
+    svc = PSAService(cfg, str(tmp_path), plan=plan).run()
+    svc.finalize()
+    s = service_summary(str(tmp_path))
+    assert s["gate_rejects"] == 1 and s["cold_resolves"] == 1, s
+    assert s["swaps"] >= 2, s                    # recovered after the reject
+    assert np.all(np.isfinite(svc.served_q))     # NaN never reached serving
+    assert s["reject_ticks"], s
+    # the recovered subspace tracks the post-shift truth
+    err = float(subspace_error(svc.q_post, jnp.asarray(svc.served_q)))
+    assert err < 0.25, err
+
+
+def test_service_gate_rejects_scaled_candidate(tmp_path):
+    """mode='scale' destroys orthonormality rather than finiteness — the
+    gate's second check has to catch it."""
+    cfg = _small_cfg()
+    plan = FaultPlan(seed=0, faults=[
+        {"kind": "corrupt_candidate", "mode": "scale", "resolve": 1}])
+    svc = PSAService(cfg, str(tmp_path), plan=plan).run()
+    svc.finalize()
+    s = service_summary(str(tmp_path))
+    assert s["gate_rejects"] == 1, s
+    gram = svc.served_q.T @ svc.served_q
+    np.testing.assert_allclose(gram, np.eye(cfg.r), atol=1e-4)

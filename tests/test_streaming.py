@@ -130,6 +130,68 @@ def test_fd_rejects_ell_over_d():
         FrequentDirections.init(2, 8, 9)
 
 
+def test_ritz_tracking_estimates_global_spectrum(stream_problem):
+    """track_top=K: the per-batch Rayleigh–Ritz step converges to the top
+    K+1 eigenpairs of the accumulated GLOBAL covariance, for both sketches,
+    without ever eigendecomposing the (N, d, d) stack."""
+    batch_fn = stream_problem["batch_fn"]
+    for kw in ({}, {"sketch": "fd", "ell": 10}):
+        ing = StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                                batch_size=30, track_top=R, **kw)
+        ing.ingest(25)
+        total = float(np.asarray(ing.sketch.counts).sum())
+        glob = np.asarray(ing.sketch.apply_sum(jnp.eye(D))) / total
+        vals, vecs = eigh_topr(jnp.asarray(glob), R + 1)
+        np.testing.assert_allclose(ing.ritz_values, np.asarray(vals),
+                                   rtol=5e-3, atol=5e-3)
+        assert float(jnp.linalg.norm(
+            ing.top_basis().T @ vecs[:, :R])) == pytest.approx(
+                np.sqrt(R), abs=1e-2)
+        assert ing.eigengap == pytest.approx(
+            float(vals[R - 1] - vals[R]), abs=1e-2)
+
+
+def test_ritz_state_checkpoint_roundtrip_bitwise(tmp_path, stream_problem):
+    """Satellite: the tracked Ritz basis/values ride in the checkpointed
+    state — a restored ingestor continues the spectrum estimate bitwise."""
+    batch_fn = stream_problem["batch_fn"]
+    mk = lambda: StreamingIngestor(n_nodes=N, d=D, batch_fn=batch_fn,
+                                   batch_size=30, track_top=R, ritz_seed=5)
+    full = mk().ingest(12)
+    part = mk().ingest(5)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(part.step, part.state())
+    fresh = mk()
+    tree, _ = mgr.restore(fresh.state())
+    fresh.restore(tree).ingest(7)
+    np.testing.assert_array_equal(np.asarray(fresh._ritz_basis),
+                                  np.asarray(full._ritz_basis))
+    np.testing.assert_array_equal(fresh.ritz_values, full.ritz_values)
+    assert fresh.eigengap == full.eigengap
+    np.testing.assert_array_equal(np.asarray(fresh.cov_stack()),
+                                  np.asarray(full.cov_stack()))
+
+
+def test_untracked_state_layout_unchanged(stream_problem):
+    """Without track_top the checkpoint tree keeps the pre-serving layout
+    (no ritz keys), so old snapshots restore against new code."""
+    ing = StreamingIngestor(n_nodes=N, d=D,
+                            batch_fn=stream_problem["batch_fn"],
+                            batch_size=30)
+    assert set(ing.state()) == {"step", "sketch"}
+    with pytest.raises(ValueError, match="track_top"):
+        ing.eigengap
+    with pytest.raises(ValueError, match="track_top"):
+        ing.top_basis()
+
+
+def test_track_top_validation(stream_problem):
+    with pytest.raises(ValueError, match="track_top"):
+        StreamingIngestor(n_nodes=N, d=D,
+                          batch_fn=stream_problem["batch_fn"],
+                          batch_size=30, track_top=D)
+
+
 # ---------------------------------------------------------------------------
 # registered pytrees
 # ---------------------------------------------------------------------------
