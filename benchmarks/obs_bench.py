@@ -1,0 +1,212 @@
+"""Observability overhead benchmark: tracing must be near-free.
+
+The span journal (repro/obs) instruments the two hottest supervised
+paths — the chunked-runtime driver (a journal event per chunk boundary
+plus ckpt_save spans) and the serving tick loop (tick/ingest/query_drain
+spans, registry counters, the query-latency histogram). Both are
+host-side atomic file appends, strictly out-of-band of device math; this
+benchmark prices them end to end and enforces the <3% bar:
+
+* ``runtime``  — ``run_chunked`` over a fused S-DOT program with async
+  checkpoints, traced (journal installed) vs untraced (noop journal);
+* ``serving``  — a full ``PSAService`` run to ``total_ticks`` in a fresh
+  workdir, traced (default-on ``<workdir>/obs``) vs ``REPRO_OBS=0``.
+
+Both are measured with ``common.interleaved_best_of`` (this container
+shows +-20% walltime jitter; rotating best-of-N is the low-noise
+estimator) and every traced result is asserted bitwise equal to its
+untraced twin — tracing that changed the math would fail here before it
+failed a replay drill.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.obs_bench [--smoke]
+    PYTHONPATH=src python -m benchmarks.run obs_bench
+
+Writes BENCH_obs.json (or .smoke.json) next to the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.obs as obs
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.consensus import DenseConsensus
+from repro.core.runtime import run_chunked
+from repro.core.sdot import sdot_program
+from repro.core.topology import erdos_renyi
+
+from .common import Row, interleaved_best_of, sample_problem
+
+OVERHEAD_BAR_PCT = 3.0
+
+
+def _bench_root(prefix: str) -> str:
+    """Workdir for one bench case — on tmpfs when available.
+
+    Both variants checkpoint identically (fsync'd manifest per boundary /
+    tick), and on this container's disk that fsync latency variance is
+    +-200 ms per run — larger than the entire instrumentation cost, so
+    best-of minima never converge. tmpfs removes the disk jitter while
+    keeping every syscall: the journal itself never fsyncs, so its appends
+    are page-cache writes on either filesystem and its measured cost is
+    unchanged."""
+    base = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    return tempfile.mkdtemp(prefix=prefix, dir=base)
+
+
+def _overhead(best: dict) -> float:
+    return round((best["traced"] - best["plain"]) / best["plain"] * 100, 2)
+
+
+def bench_runtime(d, r, n_nodes, t_outer, chunk_size, repeats):
+    """Chunked driver + async checkpoints, journal on vs off."""
+    covs, q_true = sample_problem(d=d, r=r, n_nodes=n_nodes, n_per=4 * d,
+                                  gap=0.7)
+    engine = DenseConsensus(erdos_renyi(n_nodes, 0.5, seed=1))
+    root = _bench_root("bench_obs_rt_")
+
+    def one(tag, journal):
+        obs.set_journal(journal)
+        try:
+            ckpt = os.path.join(root, f"ckpt_{tag}")
+            shutil.rmtree(ckpt, ignore_errors=True)
+            prog = sdot_program(covs=covs, engine=engine, r=r,
+                                t_outer=t_outer, t_c=20, q_true=q_true)
+            res = run_chunked(prog, CheckpointManager(ckpt, keep_last=2),
+                              chunk_size=chunk_size)
+            jax.block_until_ready(res.q_nodes)
+            return res
+        finally:
+            journal.close()
+            obs.set_journal(obs.Journal.noop())
+
+    def traced():
+        return one("traced", obs.Journal.open(
+            os.path.join(root, "obs"), "bench",
+            registry=obs.MetricsRegistry()))
+
+    def plain():
+        return one("plain", obs.Journal.noop())
+
+    plain()                                          # warmup compile
+    try:
+        best, outs = interleaved_best_of(
+            [("traced", traced), ("plain", plain)], repeats)
+        np.testing.assert_array_equal(np.asarray(outs["traced"].q_nodes),
+                                      np.asarray(outs["plain"].q_nodes))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {"case": f"runtime d={d} T={t_outer} chunk={chunk_size}",
+            "traced_ms": round(best["traced"] * 1e3, 3),
+            "plain_ms": round(best["plain"] * 1e3, 3),
+            "overhead_pct": _overhead(best),
+            "boundaries": -(-t_outer // chunk_size)}
+
+
+def bench_serving(total_ticks, repeats, **cfg_kw):
+    """Full service run (ingest/re-solve/gate/queries/checkpoint per tick),
+    default-on tracing vs REPRO_OBS=0."""
+    from repro.serving.service import PSAService, ServiceConfig
+
+    cfg = ServiceConfig(total_ticks=total_ticks, **cfg_kw)
+    root = _bench_root("bench_obs_sv_")
+    counter = [0]
+
+    def one(disable_obs):
+        counter[0] += 1
+        workdir = os.path.join(root, f"run{counter[0]}")
+        prev = os.environ.get(obs.ENV_OBS)
+        if disable_obs:
+            os.environ[obs.ENV_OBS] = "0"
+        try:
+            svc = PSAService(cfg, workdir).run()
+            return svc.finalize()
+        finally:
+            obs.get_journal().close()
+            obs.set_journal(obs.Journal.noop())
+            if disable_obs:
+                if prev is None:
+                    del os.environ[obs.ENV_OBS]
+                else:
+                    os.environ[obs.ENV_OBS] = prev
+
+    one(True)                                        # warmup compile
+    try:
+        best, outs = interleaved_best_of(
+            [("traced", lambda: one(False)), ("plain", lambda: one(True))],
+            repeats)
+        # tracing must not touch the served trajectory
+        assert outs["traced"]["served_sha256"] == \
+            outs["plain"]["served_sha256"], (outs["traced"], outs["plain"])
+        assert outs["traced"]["swaps"] == outs["plain"]["swaps"]
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return {"case": f"serving ticks={total_ticks}",
+            "traced_ms": round(best["traced"] * 1e3, 3),
+            "plain_ms": round(best["plain"] * 1e3, 3),
+            "overhead_pct": _overhead(best),
+            "swaps": outs["traced"]["swaps"]}
+
+
+def run_bench(smoke: bool = False):
+    if smoke:
+        return [
+            bench_runtime(d=24, r=3, n_nodes=4, t_outer=30, chunk_size=10,
+                          repeats=2),
+            bench_serving(total_ticks=8, repeats=1),
+        ]
+    # sized >= ~1 s per measurement so per-boundary journal appends are
+    # integrated over the container's throttling jitter; the serving config
+    # is scaled up from the d=12 unit-test toy to a representative tick
+    # (the instrumentation cost per tick is constant, so the toy would
+    # price the journal against ~10 ms ticks no deployment runs)
+    return [
+        bench_runtime(d=96, r=5, n_nodes=6, t_outer=600, chunk_size=30,
+                      repeats=9),
+        bench_serving(total_ticks=26, repeats=7, d=96, batch_size=192,
+                      holdout_m=2048, queries_per_tick=16),
+    ]
+
+
+def run():
+    """benchmarks.run entry point."""
+    return [Row(f"obs/{rec['case']}", rec["traced_ms"] * 1e3,
+                {"plain_ms": rec["plain_ms"],
+                 "overhead_pct": rec["overhead_pct"]})
+            for rec in run_bench(smoke=False)]
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    results = run_bench(smoke=smoke)
+    out = {
+        "bench": "obs",
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "overhead_bar_pct": OVERHEAD_BAR_PCT,
+        "results": results,
+    }
+    print(json.dumps(out, indent=2))
+    name = "BENCH_obs.smoke.json" if smoke else "BENCH_obs.json"
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+    if not smoke:
+        worst = max(r["overhead_pct"] for r in results)
+        if worst > OVERHEAD_BAR_PCT:
+            print(f"# WARNING: tracing overhead {worst}% above the "
+                  f"{OVERHEAD_BAR_PCT}% bar")
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

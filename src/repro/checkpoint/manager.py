@@ -30,6 +30,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..obs import get_journal
+
 __all__ = ["CheckpointManager", "save_tree", "restore_tree"]
 
 _MANIFEST = "manifest.json"
@@ -177,12 +179,14 @@ class CheckpointManager:
             f.write(str(step))
             f.flush()
             os.fsync(f.fileno())
+        get_journal().event("ckpt_pin", "checkpoint", step=step)
 
     def unpin(self, step: int) -> None:
         try:
             os.remove(self._pin_path(step))
         except FileNotFoundError:
-            pass
+            return
+        get_journal().event("ckpt_unpin", "checkpoint", step=step)
 
     def pinned_steps(self):
         out = []
@@ -212,6 +216,14 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def save(self, step: int, tree: Any, blocking: bool = True) -> None:
+        # The span OPENS before on_save fires: a chaos kill injected at the
+        # boundary hook leaves an orphaned span_start in the journal, which
+        # is exactly how forensics names the phase the worker died in. The
+        # span covers the caller-visible critical path — for async saves
+        # that is the host transfer + thread handoff, not the write itself
+        # (the worker thread journals ckpt_write when it lands).
+        sp = get_journal().begin("ckpt_save", "checkpoint", step=step,
+                                 blocking=blocking)
         self.wait()  # never two writers
         if self.on_save is not None:
             self.on_save(step)
@@ -220,11 +232,17 @@ class CheckpointManager:
         else:
             host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
             self._worker = threading.Thread(
-                target=self._save, args=(step, host_tree), daemon=True)
+                target=self._save, args=(step, host_tree, True), daemon=True)
             self._worker.start()
+        sp.end()
 
-    def _save(self, step: int, tree: Any) -> None:
+    def _save(self, step: int, tree: Any, async_write: bool = False) -> None:
         save_tree(self._step_dir(step), tree, step)
+        if async_write:
+            # only the async path marks write completion separately — it
+            # lands after the caller's ckpt_save span closed; a blocking
+            # save's span end IS the completion record
+            get_journal().event("ckpt_write", "checkpoint", step=step)
         self._gc()
 
     def wait(self) -> None:
@@ -238,7 +256,10 @@ class CheckpointManager:
         step = self.latest_step() if step is None else step
         if step is None:
             return None, None
-        return restore_tree(self._step_dir(step), like, mesh=mesh, specs=specs), step
+        with get_journal().span("ckpt_restore", "checkpoint", step=step):
+            tree = restore_tree(self._step_dir(step), like, mesh=mesh,
+                                specs=specs)
+        return tree, step
 
     def _gc(self) -> None:
         # remove stale tmp dirs (crashed writers, any ".tmp"/".tmp-<pid>"
@@ -248,7 +269,12 @@ class CheckpointManager:
                 shutil.rmtree(os.path.join(self.root, name), ignore_errors=True)
         steps = self.all_steps()
         pinned = set(self.pinned_steps())
+        removed = []
         for s in steps[:-self.keep_last] if self.keep_last else []:
             if s in pinned:
                 continue   # pinned steps survive keep_last churn
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
+            removed.append(s)
+        if removed:
+            get_journal().event("ckpt_gc", "checkpoint", removed=removed,
+                                pinned=sorted(pinned))

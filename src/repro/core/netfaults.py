@@ -336,6 +336,14 @@ class FaultyConsensus:
         self._params = self.faults.params()
         self._debias_tables = {}
         self.reset()
+        from ..obs import get_journal
+        get_journal().event(
+            "netfault_model", "chaos", n_nodes=self.graph.n_nodes,
+            seed=int(self.seed), debias=self.debias,
+            p_drop=float(self.faults.p_drop),
+            p_bad=float(self.faults.p_bad),
+            p_corrupt=float(self.faults.p_corrupt),
+            n_crash_windows=len(self.faults.crash_windows))
 
     @property
     def n_nodes(self) -> int:

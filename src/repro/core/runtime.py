@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Any, Callable, Optional, Tuple
 
@@ -65,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..obs import get_journal
 from .metrics import CommLedger
 
 __all__ = ["RunState", "Program", "sync_body", "run_monolithic",
@@ -274,6 +276,12 @@ def _drive_chunks(state: RunState, program: Program, chunk_size: int,
     case_axes = program.case_axes if program.n_cases else None
     step = int(state.step)                   # the one host sync (restore)
     done = 0
+    # Out-of-band tracing: journal writes are host-side appends with no
+    # device sync, so the dispatch pipelining above is preserved. Per-chunk
+    # "dispatch_s" is enqueue time only; a jit-cache-size delta separates
+    # compile chunks from steady-state ones.
+    j = get_journal()
+    step0, t_start = step, time.monotonic()
     while step < t_outer:
         if max_chunks is not None and done >= max_chunks:
             break
@@ -284,16 +292,28 @@ def _drive_chunks(state: RunState, program: Program, chunk_size: int,
             length = min(length, target_step - step)
         xs_chunk = jnp.asarray(program.xs[..., step:step + length],
                                jnp.int32)
+        if j.enabled:
+            n_compiled, t0 = _chunk_program._cache_size(), time.monotonic()
         state = _chunk_program(state, program.operands, xs_chunk,
                                build=program.build_body,
                                statics=program.statics,
                                case_axes=case_axes, seeded=seeded)
         step += length
+        if j.enabled:
+            j.event("chunk", phase="runtime", step=step, length=length,
+                    dispatch_s=round(time.monotonic() - t0, 6),
+                    compiled=_chunk_program._cache_size() > n_compiled)
         if manager is not None:
             manager.save(step, state, blocking=False)
         done += 1
     if manager is not None:
         manager.wait()
+    if j.enabled and step > step0:
+        wall = time.monotonic() - t_start    # incl. the final save barrier
+        j.event("chunks_done", phase="runtime", steps=step - step0,
+                chunks=done, wall_s=round(wall, 6),
+                steps_per_s=round((step - step0) / wall, 3) if wall > 0
+                else None)
     return state
 
 

@@ -1,0 +1,308 @@
+"""Crash-safe, append-only JSONL span/event journal.
+
+One journal == one process attempt: a single ``.jsonl`` file under an
+observability directory, named ``<proc>.a<attempt>.jsonl`` so a relaunched
+worker opens a NEW attempt-scoped file instead of clobbering (or
+interleaving confusingly with) its predecessor's trace. Every record is one
+JSON object on one line, written with a SINGLE ``os.write`` to an
+``O_APPEND`` descriptor — appends are atomic at the kernel level, so
+concurrent writers (the async checkpoint thread, or a second process
+sharing a file) interleave whole lines, never bytes, and a SIGKILL can tear
+at most the final line. The reader (``read_journal``) therefore treats an
+undecodable tail as expected debris and skips it.
+
+Record schema (all records):
+
+    ts       wall clock (time.time) at write
+    mono     time.monotonic() at write — orders records within one boot
+             even across wall-clock jumps
+    proc     process identity ("worker_s3", "fleet_w0", "service",
+             "launcher")
+    pid      OS pid
+    attempt  which relaunch of this proc wrote the file
+    kind     "event" | "span_start" | "span"
+    name     what happened ("chunk", "ckpt_save", "chaos_fired", ...)
+    phase    coarse subsystem bucket ("runtime", "checkpoint", "tick", ...)
+    run / shard / tick / step / ...   optional correlation ids
+
+Spans are TWO records: ``span_start`` at entry and ``span`` (with
+``dur_s``) at exit, sharing a per-journal ``sid``. A process that dies
+mid-span leaves the ``span_start`` orphaned — which is exactly the
+forensic signal the CLI's ``forensics`` mode uses to name the phase a dead
+worker was in.
+
+The journal is strictly OUT-OF-BAND: it only appends host-side lines, so
+it can never perturb device math — runs replay bit-identical with tracing
+on or off — and the disabled journal (``Journal.noop()``) costs one
+attribute check per call site.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["Journal", "Span", "read_journal", "merge_journals",
+           "journal_files", "ENV_DIR", "ENV_OBS"]
+
+ENV_DIR = "REPRO_OBS_DIR"   # where journals go (overrides <workdir>/obs)
+ENV_OBS = "REPRO_OBS"       # "0"/"off" disables journaling entirely
+
+_FILE_RE = re.compile(r"^(?P<proc>.+)\.a(?P<attempt>\d+)\.jsonl$")
+
+# base record schema keys a caller-supplied field must never clobber; a
+# colliding field is written under an "f_" prefix instead of raising
+_RESERVED = frozenset({"ts", "mono", "proc", "pid", "attempt", "kind",
+                       "name"})
+
+
+def _jsonable(v):
+    """Coerce numpy scalars / arrays / anything exotic to JSON-safe."""
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
+        return v.item()
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    return str(v)
+
+
+def _coerce(v):
+    """Encoder ``default=`` hook: invoked ONLY for values json can't
+    encode natively, so plain int/float/str/bool fields (the vast majority)
+    pay nothing — this keeps the hot write path at a few µs per record."""
+    if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
+        return v.item()                         # numpy / jax scalar
+    if hasattr(v, "tolist"):
+        return v.tolist()                       # small arrays
+    return str(v)
+
+
+# one shared encoder (json.dumps with default= builds a fresh JSONEncoder
+# per call; .encode() on this instance takes the C one-shot path)
+_ENCODER = json.JSONEncoder(separators=(",", ":"), default=_coerce)
+
+
+class Span:
+    """An in-flight span; ``end()`` (or context-manager exit) writes the
+    closing record. Idempotent: a double end writes nothing."""
+
+    __slots__ = ("_j", "name", "phase", "sid", "_t0", "_fields", "_done")
+
+    def __init__(self, journal: "Journal", name: str, phase: Optional[str],
+                 sid: int, fields: Dict[str, Any]):
+        self._j = journal
+        self.name = name
+        self.phase = phase
+        self.sid = sid
+        self._fields = fields
+        self._done = False
+        self._t0 = time.monotonic()
+
+    def add(self, **fields) -> "Span":
+        """Attach fields to the CLOSING record (e.g. a result computed
+        mid-span)."""
+        self._fields.update(fields)
+        return self
+
+    def end(self, ok: bool = True, **fields) -> None:
+        if self._done:
+            return
+        self._done = True
+        self._fields.update(fields)
+        self._j._write("span", self.name, self.phase, sid=self.sid,
+                       dur_s=round(time.monotonic() - self._t0, 6),
+                       ok=bool(ok), **self._fields)
+
+    def __enter__(self) -> "Span":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.end(ok=exc_type is None)
+        return False
+
+
+class _NoopSpan:
+    __slots__ = ()
+
+    def add(self, **fields):
+        return self
+
+    def end(self, ok=True, **fields):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+_NOOP_SPAN = _NoopSpan()
+
+
+class Journal:
+    """Append-only JSONL writer for one process attempt (module docstring).
+
+    ``registry`` (optional, a ``repro.obs.registry.MetricsRegistry``) gets a
+    ``span_<name>_seconds`` histogram observation for every closed span —
+    the journal is the trace, the registry the aggregate view of the same
+    instrumentation points."""
+
+    def __init__(self, path: Optional[str], proc: str, attempt: int = 0,
+                 *, registry=None, **static):
+        self.path = path
+        self.proc = proc
+        self.attempt = int(attempt)
+        self.registry = registry
+        self.enabled = path is not None
+        self._static = {k: _jsonable(v) for k, v in static.items()
+                        if v is not None}
+        self._pid = os.getpid()                 # cached: one syscall, ever
+        self._sid = 0
+        self._fd = None
+        if self.enabled:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fd = os.open(path, os.O_APPEND | os.O_CREAT | os.O_WRONLY,
+                               0o644)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def noop(cls) -> "Journal":
+        return cls(None, proc="noop")
+
+    @classmethod
+    def open(cls, obs_dir: str, proc: str, *, attempt: Optional[int] = None,
+             registry=None, **static) -> "Journal":
+        """Open the next attempt-scoped journal for ``proc`` in ``obs_dir``.
+
+        ``attempt=None`` scans existing ``<proc>.a*.jsonl`` files and takes
+        the next index — a relaunched process extends the directory's
+        history instead of clobbering the crashed attempt's trace."""
+        os.makedirs(obs_dir, exist_ok=True)
+        if attempt is None:
+            prev = [-1]
+            for name in os.listdir(obs_dir):
+                m = _FILE_RE.match(name)
+                if m and m.group("proc") == proc:
+                    prev.append(int(m.group("attempt")))
+            attempt = max(prev) + 1
+        path = os.path.join(obs_dir, f"{proc}.a{int(attempt)}.jsonl")
+        return cls(path, proc, attempt, registry=registry, **static)
+
+    # -- writers ------------------------------------------------------------
+    def _write(self, kind: str, name: str, phase: Optional[str], /,
+               **fields) -> None:
+        if not self.enabled:
+            return
+        rec = {"ts": round(time.time(), 6),
+               "mono": round(time.monotonic(), 6),
+               "proc": self.proc, "pid": self._pid,
+               "attempt": self.attempt, "kind": kind, "name": name}
+        if phase is not None:
+            rec["phase"] = phase
+        rec.update(self._static)
+        for k, v in fields.items():
+            if v is not None:
+                rec["f_" + k if k in _RESERVED else k] = v
+        try:
+            line = _ENCODER.encode(rec) + "\n"
+            os.write(self._fd, line.encode())    # ONE atomic append
+        except (OSError, TypeError, ValueError):
+            pass                                 # observability never raises
+        if kind == "span" and self.registry is not None:
+            self.registry.histogram(
+                f"span_{name}_seconds").observe(fields.get("dur_s", 0.0))
+
+    def event(self, name: str, phase: Optional[str] = None, /,
+              **fields) -> None:
+        self._write("event", name, phase, **fields)
+
+    def begin(self, name: str, phase: Optional[str] = None, /, **fields):
+        """Start a span: writes ``span_start`` now, returns a ``Span`` whose
+        ``end()`` writes the closing ``span`` record with ``dur_s``."""
+        if not self.enabled:
+            return _NOOP_SPAN
+        self._sid += 1
+        self._write("span_start", name, phase, sid=self._sid, **fields)
+        return Span(self, name, phase, self._sid, dict(fields))
+
+    def span(self, name: str, phase: Optional[str] = None, /, **fields):
+        """Context-manager form of ``begin``."""
+        return self.begin(name, phase, **fields)
+
+    def close(self) -> None:
+        if self._fd is not None:
+            try:
+                os.close(self._fd)
+            except OSError:
+                pass
+            self._fd = None
+            self.enabled = False
+
+
+# ---------------------------------------------------------------------------
+# readers (torn-tail tolerant)
+# ---------------------------------------------------------------------------
+def read_journal(path: str) -> List[dict]:
+    """All decodable records of one journal file, in write order.
+
+    A SIGKILL can tear the final line (a partial ``os.write`` is
+    impossible for the sizes here, but a torn filesystem or a copied file
+    is not) — any undecodable or non-object line is SKIPPED, not raised.
+    Appends from concurrent writers land as whole lines, so mid-file
+    records are intact by construction."""
+    out: List[dict] = []
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except OSError:
+        return out
+    for line in data.split(b"\n"):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except (ValueError, UnicodeDecodeError):
+            continue                    # torn tail / debris: skip cleanly
+        if isinstance(rec, dict):
+            out.append(rec)
+    return out
+
+
+def journal_files(obs_dir: str) -> List[Tuple[str, str, int]]:
+    """(path, proc, attempt) for every journal in ``obs_dir``, sorted by
+    (proc, attempt)."""
+    out = []
+    try:
+        names = os.listdir(obs_dir)
+    except OSError:
+        return out
+    for name in names:
+        m = _FILE_RE.match(name)
+        if m:
+            out.append((os.path.join(obs_dir, name), m.group("proc"),
+                        int(m.group("attempt"))))
+    return sorted(out, key=lambda t: (t[1], t[2]))
+
+
+def merge_journals(obs_dir: str) -> List[dict]:
+    """Every record of every per-process journal in ``obs_dir``, merged
+    into ONE timeline ordered by wall clock (stable: ties keep per-file
+    write order, which monotonic stamps preserve within a process)."""
+    records: List[dict] = []
+    for path, proc, attempt in journal_files(obs_dir):
+        for i, rec in enumerate(read_journal(path)):
+            rec.setdefault("proc", proc)
+            rec.setdefault("attempt", attempt)
+            rec["_order"] = i
+            records.append(rec)
+    records.sort(key=lambda r: (r.get("ts", 0.0), r.get("proc", ""),
+                                r["_order"]))
+    for rec in records:
+        rec.pop("_order", None)
+    return records

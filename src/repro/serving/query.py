@@ -16,7 +16,11 @@ throughput:
   into ONE jitted matmul against the currently served Q (requests never
   see a half-swapped subspace: the Q is read once per batch);
 * **p50/p99 accounting** — per-request latency = queue wait + batch
-  compute + any chaos-injected delay.
+  compute + any chaos-injected delay, observed into an
+  ``obs.registry.Histogram`` (O(1) memory; the old keep-every-latency
+  list grew with the run). Pass ``registry=`` to expose the same
+  histogram/counters through a shared ``MetricsRegistry`` (the service
+  dumps it for the ``repro.obs`` CLI).
 
 Chaos integration: ``ChaosHooks.query_delay(req_id)`` returns a *seeded,
 per-request* artificial delay.  It is **accounted, never slept** — the
@@ -34,6 +38,8 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..obs import Histogram
 
 __all__ = ["QueryRequest", "QueryPath"]
 
@@ -70,7 +76,7 @@ class QueryPath:
 
     def __init__(self, *, capacity: int = 64, max_batch: int = 16,
                  deadline_s: float = 0.25, mode: str = "project",
-                 hooks=None, clock=time.monotonic):
+                 hooks=None, clock=time.monotonic, registry=None):
         if mode not in ("project", "reconstruct"):
             raise ValueError(f"unknown query mode: {mode}")
         self.capacity = int(capacity)
@@ -79,12 +85,17 @@ class QueryPath:
         self.mode = mode
         self.hooks = hooks
         self.clock = clock
+        self.registry = registry
         self._queue: List[QueryRequest] = []
         self.submitted = 0
         self.answered = 0
         self.shed = 0           # refused at admission (queue full)
         self.expired = 0        # admitted but answer would miss its deadline
-        self.latencies: List[float] = []
+        # per-instance histogram unless a shared registry is supplied —
+        # two services (or a bench and a test) must not pollute each
+        # other's percentiles
+        self.latency = (registry.histogram("query_latency_seconds")
+                        if registry is not None else Histogram())
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -99,8 +110,12 @@ class QueryPath:
     def submit(self, req_id: int, x) -> bool:
         """Admit one query; False (and a shed count) when the queue is full."""
         self.submitted += 1
+        if self.registry is not None:
+            self.registry.counter("query_submitted_total").inc()
         if len(self._queue) >= self.capacity:
             self.shed += 1
+            if self.registry is not None:
+                self.registry.counter("query_shed_total").inc()
             return False
         now = self.clock()
         self._queue.append(QueryRequest(
@@ -131,10 +146,14 @@ class QueryPath:
             latency = (done - req.submitted_at) + injected
             if done + injected > req.deadline:
                 self.expired += 1
+                if self.registry is not None:
+                    self.registry.counter("query_expired_total").inc()
                 continue
             self.answered += 1
-            self.latencies.append(latency)
+            self.latency.observe(latency)
             answers.append((req.req_id, out[:, j]))
+        if self.registry is not None:
+            self.registry.counter("query_answered_total").inc(len(answers))
         return answers
 
     def drain_expired(self) -> int:
@@ -144,17 +163,23 @@ class QueryPath:
         n_expired = len(self._queue) - len(live)
         self.expired += n_expired
         self._queue = live
+        if n_expired and self.registry is not None:
+            self.registry.counter("query_expired_total").inc(n_expired)
         return n_expired
 
     def summary(self) -> dict:
-        """Counters + latency percentiles (seconds) for metrics/bench."""
-        lat = np.asarray(self.latencies, np.float64)
+        """Counters + latency percentiles (seconds) for metrics/bench.
+
+        Percentiles come from the bucketed histogram (rank interpolation,
+        clamped to observed min/max) — keys and units unchanged from the
+        keep-every-latency implementation this replaced."""
+        p50, p99 = self.latency.p50, self.latency.p99
         return {
             "submitted": self.submitted,
             "answered": self.answered,
             "shed": self.shed,
             "expired": self.expired,
             "queued": len(self._queue),
-            "p50_s": float(np.percentile(lat, 50)) if lat.size else None,
-            "p99_s": float(np.percentile(lat, 99)) if lat.size else None,
+            "p50_s": None if p50 is None else float(p50),
+            "p99_s": None if p99 is None else float(p99),
         }

@@ -67,6 +67,9 @@ from ..core.linalg import cholesky_qr2, orthonormal_init
 from ..core.runtime import run_chunked
 from ..core.sdot import sdot_program
 from ..data.pipeline import drifting_eigengap_stream
+from ..obs import install as obs_install
+from ..obs import metrics as obs_metrics
+from ..obs import obs_dir_for
 from ..streaming.chaos import ENV_PLAN, ChaosHooks, FaultPlan
 from ..streaming.ingest import StreamingIngestor
 from ..streaming.launcher import build_engine
@@ -154,6 +157,12 @@ class PSAService:
         self.cfg = cfg
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
+        # process journal + metrics registry for this service attempt; the
+        # runtime/checkpoint/chaos seams pick the journal up via
+        # get_journal(), and the query path shares the registry so its
+        # latency histogram lands in the finalize dump
+        self.journal = obs_install(workdir, "service")
+        self.registry = obs_metrics()
         state_root = os.path.join(workdir, _STATE)
         self.resolve_root = os.path.join(workdir, _RESOLVE)
         chaos_dir = os.path.join(workdir, "chaos_state")
@@ -192,7 +201,8 @@ class PSAService:
         self.queries = QueryPath(capacity=cfg.queue_capacity,
                                  max_batch=cfg.max_batch,
                                  deadline_s=cfg.deadline_s,
-                                 mode=cfg.query_mode, hooks=self.hooks)
+                                 mode=cfg.query_mode, hooks=self.hooks,
+                                 registry=self.registry)
         self.queries.warmup(cfg.d, cfg.r)
         self.history: list = []      # per-tick metrics (host-only)
 
@@ -353,6 +363,9 @@ class PSAService:
         self._event({"type": "start", "tick": self.tick + 1,
                      "resolve_id": self.resolve_id, "cold": cold,
                      "frozen_step": self.resolve_frozen_step})
+        self.journal.event("resolve_start", "resolve",
+                           tick=self.tick + 1, resolve_id=self.resolve_id,
+                           cold=cold, frozen_step=self.resolve_frozen_step)
 
     def _advance_resolve(self) -> None:
         """A few chunks of the active re-solve, to an ABSOLUTE target step —
@@ -367,8 +380,12 @@ class PSAService:
             covs=jnp.asarray(self.resolve_covs), engine=self.engine,
             r=cfg.r, t_outer=cfg.t_outer, t_c=cfg.t_c,
             q_init=jnp.asarray(self.resolve_qinit))
-        result = run_chunked(program, mgr, chunk_size=cfg.resolve_chunk,
-                             target_step=target)
+        with self.journal.span("resolve_increment", "resolve",
+                               tick=self.tick + 1,
+                               resolve_id=self.resolve_id,
+                               target=target, cold=self.resolve_cold):
+            result = run_chunked(program, mgr, chunk_size=cfg.resolve_chunk,
+                                 target_step=target)
         self.resolve_done = target
         if target < cfg.t_outer:
             return
@@ -378,7 +395,11 @@ class PSAService:
             cholesky_qr2(result.q_nodes.mean(axis=0))[0], np.float32)
         candidate = np.asarray(self.hooks.mangle_candidate(
             candidate, self.resolve_id), np.float32)
+        gate_sp = self.journal.begin("gate", "resolve",
+                                     tick=self.tick + 1,
+                                     resolve_id=self.resolve_id)
         accept, reason, cand_ev, inc_ev = self._gate(candidate)
+        gate_sp.end(accept=accept, reason=reason)
         if accept:
             # the atomic swap: one assignment; queries only ever batch
             # against a fully-published Q
@@ -394,6 +415,10 @@ class PSAService:
                          "cand_ev": round(cand_ev, 6),
                          "inc_ev": round(inc_ev, 6),
                          "frozen_step": self.resolve_frozen_step})
+            self.journal.event("swap", "resolve", tick=self.tick + 1,
+                               resolve_id=self.resolve_id,
+                               frozen_step=self.resolve_frozen_step)
+            self.registry.counter("serving_swaps_total").inc()
         else:
             # never served: incumbent stays, cold re-solve from fresh seed
             self.gate_rejects += 1
@@ -401,15 +426,24 @@ class PSAService:
             self._event({"type": "reject", "tick": self.tick + 1,
                          "resolve_id": self.resolve_id, "reason": reason,
                          "cand_ev": cand_ev, "inc_ev": inc_ev})
+            self.journal.event("reject", "resolve", tick=self.tick + 1,
+                               resolve_id=self.resolve_id, reason=reason)
+            self.registry.counter("serving_gate_rejects_total").inc()
             self._start_resolve(cold=True)
 
     # -- the tick -----------------------------------------------------------
     def _run_tick(self) -> None:
         cfg = self.cfg
         tick = self.tick + 1
+        jl = self.journal
+        # one span per tick; a chaos kill mid-tick leaves it (and the phase
+        # span it died inside) orphaned — that pair IS the forensics answer
+        # to "what was the service doing when it died"
+        tick_sp = jl.begin("tick", "serving", tick=tick)
 
         # 1) ingest this tick's micro-batch (pure in (seed, step))
-        self.ingestor.ingest(1)
+        with jl.span("ingest", "serving", tick=tick):
+            self.ingestor.ingest(1)
 
         # 2) re-solve lifecycle: advance the active one, or decide to start
         if self.resolve_active:
@@ -419,27 +453,32 @@ class PSAService:
                 self._start_resolve(cold=True)
                 self._advance_resolve()
         else:
-            stats = self.detector.read(
-                self.ingestor, jnp.asarray(self.served_q),
-                baseline_gap=self.baseline_gap,
-                ticks_since_swap=tick - self.served_at)
+            with jl.span("drift_read", "serving", tick=tick) as dsp:
+                stats = self.detector.read(
+                    self.ingestor, jnp.asarray(self.served_q),
+                    baseline_gap=self.baseline_gap,
+                    ticks_since_swap=tick - self.served_at)
+                dsp.add(triggered=bool(stats.triggered))
             if stats.triggered:
                 self._start_resolve(cold=False)   # warm: from the served Q
                 self._advance_resolve()
 
         # 3) queries against whatever is served right now
-        rng = np.random.default_rng(cfg.seed * 31 + 17 + tick)
-        for j in range(cfg.queries_per_tick):
-            req_id = tick * cfg.queries_per_tick + j
-            self.queries.submit(req_id, rng.standard_normal(cfg.d))
-        self.queries.process(self.served_q)
-        self.queries.drain_expired()
+        with jl.span("query_drain", "serving", tick=tick) as qsp:
+            rng = np.random.default_rng(cfg.seed * 31 + 17 + tick)
+            for j in range(cfg.queries_per_tick):
+                req_id = tick * cfg.queries_per_tick + j
+                self.queries.submit(req_id, rng.standard_normal(cfg.d))
+            answered = len(self.queries.process(self.served_q))
+            expired = self.queries.drain_expired()
+            qsp.add(answered=answered, drain_expired=expired)
 
         # 4) staleness: served-from freeze step vs ingested step — a
         #    surfaced metric, never a stall
         staleness = (self.ingestor.step - self.served_stream_step
                      if self.swaps else 0)
         self.max_staleness = max(self.max_staleness, staleness)
+        self.registry.gauge("serving_staleness_ticks").set(staleness)
         self.history.append({
             "tick": tick, "staleness": staleness, "swaps": self.swaps,
             "resolve_active": self.resolve_active,
@@ -457,6 +496,7 @@ class PSAService:
             for s in self.state_mgr.pinned_steps():
                 if s != tick:
                     self.state_mgr.unpin(s)
+        tick_sp.end(staleness=staleness, swaps=self.swaps)
 
     def run(self, until: Optional[int] = None) -> "PSAService":
         stop = self.cfg.total_ticks if until is None else until
@@ -484,6 +524,12 @@ class PSAService:
         doc = self.summary()
         with open(os.path.join(self.workdir, _FINAL), "w") as f:
             json.dump(doc, f, indent=2)
+        obs_dir = obs_dir_for(self.workdir)
+        if obs_dir is not None:
+            # the aggregate twin of the journal: the obs CLI merges this
+            # dump (query latency histogram, swap/reject counters) into its
+            # exposition alongside journal-derived span durations
+            self.registry.dump(os.path.join(obs_dir, "metrics.service.json"))
         return doc
 
 

@@ -76,6 +76,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..obs import get_journal
+
 __all__ = ["FaultPlan", "ChaosHooks", "hooks_from_env", "ENV_PLAN",
            "ENV_NET", "validate_net_fault_doc", "net_fault_model_from_dict",
            "net_faults_from_env"]
@@ -212,6 +214,17 @@ class ChaosHooks:
             f.flush()
             os.fsync(f.fileno())
 
+    def _journal(self, idx: int, kind: str, **fields) -> None:
+        # also BEFORE the fault executes: the journal append is one atomic
+        # os.write, so even a self-SIGKILL on the next line leaves the
+        # firing attributable from the trace (the forensics CLI matches
+        # these records against the plan by fault index)
+        # "kind" is reserved record schema (event/span_start/span), so the
+        # fault's kind travels as fault_kind
+        get_journal().event("chaos_fired", "chaos", fault=idx,
+                            fault_kind=kind, boundary=self._boundary,
+                            shard=self.shard, worker=self.worker, **fields)
+
     # -- fault executors -------------------------------------------------
     def _corrupt_newest(self, mode: str) -> None:
         root = self.ckpt_root
@@ -251,10 +264,12 @@ class ChaosHooks:
                 continue  # fire from the serving hooks, not at boundaries
             if kind == "slow":
                 if "sleep" in fault:
-                    time.sleep(float(fault["sleep"]))
+                    pause = float(fault["sleep"])
                 else:
-                    time.sleep(max(0.0, (float(fault.get("factor", 2.0))
-                                         - 1.0) * elapsed))
+                    pause = max(0.0, (float(fault.get("factor", 2.0))
+                                      - 1.0) * elapsed)
+                self._journal(idx, kind, sleep_s=round(pause, 6))
+                time.sleep(pause)
                 continue
             if kind == "drop":
                 continue  # fires at publish time
@@ -262,6 +277,7 @@ class ChaosHooks:
                     idx, self.n_boundaries) or self._fired(idx):
                 continue
             self._mark(idx)
+            self._journal(idx, kind, step=step)
             if kind == "hang":
                 time.sleep(float(fault.get("sleep", 600.0)))
             elif kind == "corrupt":
@@ -278,6 +294,7 @@ class ChaosHooks:
                     and _matches(fault, self.shard, self.worker)
                     and not self._fired(idx)):
                 self._mark(idx)
+                self._journal(idx, "drop", out_dir=out_dir)
                 import shutil
                 shutil.rmtree(out_dir, ignore_errors=True)
 
@@ -298,7 +315,10 @@ class ChaosHooks:
             rng = np.random.default_rng(
                 self.plan.seed * 7919 + (idx + 1) * 104729 + int(req_id))
             if rng.random() < float(fault.get("p", 1.0)):
-                total += float(fault.get("delay", 0.05))
+                delay = float(fault.get("delay", 0.05))
+                self._journal(idx, "delay_query", req_id=int(req_id),
+                              delay_s=delay)
+                total += delay
         return total
 
     def mangle_candidate(self, q, resolve_id: int):
@@ -320,6 +340,9 @@ class ChaosHooks:
                     and int(fault["resolve"]) != int(resolve_id):
                 continue
             self._mark(idx)
+            self._journal(idx, "corrupt_candidate",
+                          resolve=int(resolve_id),
+                          mode=fault.get("mode", "nan"))
             arr = np.array(q, np.float32, copy=True)
             if fault.get("mode", "nan") == "nan":
                 arr.flat[0] = np.nan

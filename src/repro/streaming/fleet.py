@@ -44,8 +44,10 @@ import time
 import uuid
 from typing import Dict, List, Optional
 
+from ..obs import get_journal
+
 __all__ = ["LeaseLost", "LeaseStore", "Lease", "touch_heartbeat",
-           "heartbeat_age", "fleet_worker_loop"]
+           "heartbeat_age", "read_heartbeat", "fleet_worker_loop"]
 
 _LEASE_DIR = "leases"
 
@@ -72,6 +74,20 @@ def heartbeat_age(path: str, now: Optional[float] = None) -> Optional[float]:
     except OSError:
         return None
     return (time.time() if now is None else now) - mtime
+
+
+def read_heartbeat(path: str) -> Optional[dict]:
+    """The heartbeat's JSON payload ({pid, step, t}), or None if absent or
+    torn mid-replace. ``touch_heartbeat`` has always written the worker's
+    last completed step here — this reader surfaces it so stall-kill and
+    stalest-lease diagnostics can say WHERE a silent worker stopped, not
+    just how long ago (the mtime)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return doc if isinstance(doc, dict) else None
 
 
 class Lease(dict):
@@ -137,9 +153,17 @@ class LeaseStore:
     """
 
     def __init__(self, workdir: str, ttl: float = 30.0):
+        self.workdir = workdir
         self.root = os.path.join(workdir, _LEASE_DIR)
         self.ttl = float(ttl)
         os.makedirs(self.root, exist_ok=True)
+
+    def _victim_step(self, shard: int) -> Optional[int]:
+        """Last step the shard's previous owner heartbeat before going
+        silent (pinned-layout heartbeat path; None if never beaten)."""
+        doc = read_heartbeat(os.path.join(self.workdir, f"worker_{shard}",
+                                          "heartbeat"))
+        return None if doc is None else doc.get("step")
 
     def _path(self, shard: int) -> str:
         return os.path.join(self.root, f"shard_{int(shard)}.json")
@@ -185,6 +209,10 @@ class LeaseStore:
         got = self.read(shard)
         if got is None or got.get("nonce") != nonce:
             return None                       # out-renamed by another claimant
+        stolen_from = (cur.owner if cur is not None and cur.owner
+                       and cur.owner != owner else None)
+        get_journal().event("lease_acquire", "fleet", shard=shard,
+                            token=got.token, stolen_from=stolen_from)
         return got
 
     def renew(self, shard: int, owner: str, token: int) -> None:
@@ -192,6 +220,10 @@ class LeaseStore:
         token (the shard was stolen — abandon it)."""
         cur = self.read(shard)
         if cur is None or cur.owner != owner or cur.token != int(token):
+            get_journal().event(
+                "lease_lost", "fleet", shard=shard, token=int(token),
+                holder=cur.owner if cur else None,
+                holder_token=cur.token if cur else None)
             raise LeaseLost(f"shard {shard}: lease lost to "
                             f"{cur.owner if cur else '<gone>'}")
         cur["renewed_at"] = time.time()
@@ -208,6 +240,8 @@ class LeaseStore:
         cur["renewed_at"] = 0.0               # immediately acquirable
         cur["renewed_mono"] = None            # (from either clock)
         self._write(shard, cur)
+        get_journal().event("lease_release", "fleet", shard=shard,
+                            token=int(token), done=bool(done))
 
     def pick(self, shards: List[int], owner: str) -> Optional[int]:
         """The next shard ``owner`` should take: a shard whose lease we
@@ -217,7 +251,7 @@ class LeaseStore:
         worst straggler's)."""
         now = time.time()
         now_mono = time.monotonic()
-        stalest, stalest_age = None, -1.0
+        stalest, stalest_age, stalest_owner = None, -1.0, ""
         for s in shards:
             cur = self.read(s)
             if cur is not None and cur.owner == owner:
@@ -229,7 +263,19 @@ class LeaseStore:
             if cur.expired(self.ttl, now, now_mono):
                 age = cur.age(now, now_mono)
                 if age > stalest_age:
-                    stalest, stalest_age = s, age
+                    stalest, stalest_age, stalest_owner = s, age, cur.owner
+        if stalest is not None and stalest_owner:
+            # a steal of a live-owned-but-expired lease: say who the victim
+            # was, how stale, and the last step it heartbeat — not just the
+            # lease-file age
+            step = self._victim_step(stalest)
+            print(f"fleet {owner}: picking stalest shard {stalest} from "
+                  f"{stalest_owner} (lease {stalest_age:.1f}s stale, last "
+                  f"heartbeat step {'?' if step is None else step})")
+            get_journal().event("lease_pick", "fleet", shard=stalest,
+                                victim=stalest_owner,
+                                age_s=round(stalest_age, 3),
+                                victim_step=step)
         return stalest
 
     def snapshot(self) -> Dict[int, Lease]:

@@ -76,9 +76,10 @@ from ..core.consensus import DenseConsensus, consensus_schedule
 from ..core.metrics import CommLedger
 from ..core.sweep import SweepResult, slice_seed_shards
 from ..core.topology import complete, erdos_renyi, ring, star, torus2d
+from ..obs import Journal, obs_dir_for
 from .chaos import (ENV_PLAN, FaultPlan, net_faults_from_env,
                     validate_net_fault_doc)
-from .fleet import LeaseStore
+from .fleet import LeaseStore, read_heartbeat
 
 __all__ = ["build_engine", "build_schedule", "launch_sweep"]
 
@@ -221,6 +222,31 @@ def _tail(log_path: str, n: int = 2000) -> str:
         return "<no worker log>"
 
 
+def _trace_tail(workdir: str, proc: str, n: int = 8) -> str:
+    """The worker's journal tail — last spans plus any span left OPEN at
+    death — so a failure report says what PHASE the worker died in, not
+    just its last stdout lines. Empty-string when tracing is off or the
+    worker never journaled."""
+    from ..obs.cli import forensics_report
+    obs_dir = obs_dir_for(workdir)
+    if obs_dir is None or not os.path.isdir(obs_dir):
+        return ""
+    try:
+        text, _ = forensics_report(obs_dir, last=n, proc=proc)
+    except Exception:
+        return ""
+    return text.strip()
+
+
+def _fail_report(workdir: str, proc: str, log_path: str) -> str:
+    """stderr tail + journal tail, the launcher's full failure context."""
+    out = f"last log tail:\n{_tail(log_path)}"
+    trace = _trace_tail(workdir, proc)
+    if trace:
+        out += f"\njournal tail ({proc}):\n{trace}"
+    return out
+
+
 def _backoff(base: float, attempt: int, rng: random.Random) -> float:
     """Exponential backoff with jitter: base * 2^(attempt-1) * U[1, 1.25]."""
     return base * (2.0 ** max(0, attempt - 1)) * (1.0 + 0.25 * rng.random())
@@ -231,11 +257,13 @@ def _backoff(base: float, attempt: int, rng: random.Random) -> float:
 # ---------------------------------------------------------------------------
 def _supervise_pinned(spec_path, workdir, spec, pending, env, *, n_workers,
                       retries, timeout, stall_timeout, backoff_base,
-                      poll_interval, results, unexpected, attempts):
+                      poll_interval, results, unexpected, attempts,
+                      journal=None):
     """Shard-pinned supervision: one worker process per pending shard,
     polled concurrently against one shared deadline (no serial
     ``communicate(timeout)`` accounting), stale-heartbeat kills, retry
     budgets with exponential backoff + jitter."""
+    jl = journal if journal is not None else Journal.noop()
     rng = random.Random(0xC0FFEE)
     t0 = time.monotonic()
     deadline = t0 + timeout
@@ -262,6 +290,8 @@ def _supervise_pinned(spec_path, workdir, spec, pending, env, *, n_workers,
                 last_log[i] = log
                 procs[i] = _spawn([spec_path, str(i)], env, log)
                 spawn_wall[i] = time.time()
+                jl.event("spawn", "launcher", shard=i,
+                         launch_attempt=attempts[i], pid_child=procs[i].pid)
             reaped = []
             for i, p in procs.items():
                 rc = p.poll()
@@ -280,6 +310,18 @@ def _supervise_pinned(spec_path, workdir, spec, pending, env, *, n_workers,
                         beat = None
                     if (beat is not None and beat > spawn_wall[i]
                             and time.time() - beat > stall_timeout):
+                        # stall diagnostics carry the heartbeat's step
+                        # payload — WHERE the worker went quiet, not just
+                        # how long ago
+                        hb = read_heartbeat(_heartbeat_path(workdir, i))
+                        hb_step = None if hb is None else hb.get("step")
+                        age = time.time() - beat
+                        print(f"launcher: shard {i} heartbeat {age:.1f}s "
+                              f"stale (last step "
+                              f"{'?' if hb_step is None else hb_step}) — "
+                              f"killing wedged worker")
+                        jl.event("stall_kill", "launcher", shard=i,
+                                 beat_age_s=round(age, 3), step=hb_step)
                         p.kill()
                         p.wait()
                         rc = p.returncode
@@ -294,13 +336,19 @@ def _supervise_pinned(spec_path, workdir, spec, pending, env, *, n_workers,
                 if res is not None:
                     results[i] = res
                     pending.discard(i)
+                    jl.event("shard_done", "launcher", shard=i,
+                             launch_attempts=attempts[i], rc=rc)
                     continue
                 if attempts[i] > retries:
                     raise RuntimeError(
                         f"sweep shard {i} failed after {retries + 1} "
-                        f"attempts; last log tail:\n{_tail(last_log[i])}")
+                        f"attempts; "
+                        f"{_fail_report(workdir, f'worker_s{i}', last_log[i])}")
                 next_spawn[i] = now + _backoff(backoff_base, attempts[i],
                                                rng)
+                jl.event("retry", "launcher", shard=i, rc=rc,
+                         launch_attempt=attempts[i],
+                         backoff_s=round(next_spawn[i] - now, 3))
             for i in reaped:
                 procs.pop(i)
             if pending:
@@ -313,12 +361,14 @@ def _supervise_pinned(spec_path, workdir, spec, pending, env, *, n_workers,
 
 def _supervise_elastic(spec_path, workdir, spec, pending, env, *, n_workers,
                        retries, timeout, lease_ttl, backoff_base,
-                       poll_interval, results, unexpected, attempts):
+                       poll_interval, results, unexpected, attempts,
+                       journal=None):
     """Elastic fleet supervision: ``n_workers`` un-pinned fleet workers
     lease-and-steal shards; the launcher only keeps worker SLOTS alive
     (respawning dead ones under a per-slot budget) and polls for published
     shard results. Extra workers may join from outside at any time; a
     worker leaving is just its leases expiring."""
+    jl = journal if journal is not None else Journal.noop()
     rng = random.Random(0xE1A571C)
     deadline = time.monotonic() + timeout
     pending = set(pending)
@@ -341,8 +391,11 @@ def _supervise_elastic(spec_path, workdir, spec, pending, env, *, n_workers,
                     # a fleet worker exits 0 only once every shard is
                     # published; an exit with work still pending — clean or
                     # not — consumes this slot's retry budget
+                    rc = p.returncode
                     procs.pop(s)
                     slot_attempts[s] += 1
+                    jl.event("slot_exit", "launcher", slot=s, rc=rc,
+                             slot_attempts=slot_attempts[s])
                     if slot_attempts[s] > retries:
                         continue  # slot exhausted; others may still finish
                     next_spawn[s] = now + _backoff(backoff_base,
@@ -356,6 +409,9 @@ def _supervise_elastic(spec_path, workdir, spec, pending, env, *, n_workers,
                 procs[s] = _spawn(
                     [spec_path, "--fleet", "--worker", f"w{s}",
                      "--ttl", str(lease_ttl)], env, log)
+                jl.event("spawn", "launcher", slot=s,
+                         launch_attempt=slot_attempts[s],
+                         pid_child=procs[s].pid)
             for i in sorted(pending):
                 res = _load_result(workdir, spec, i, unexpected)
                 if res is not None:
@@ -365,11 +421,13 @@ def _supervise_elastic(spec_path, workdir, spec, pending, env, *, n_workers,
             if pending:
                 if not procs and all(a > retries
                                      for a in slot_attempts.values()):
-                    tails = "\n".join(_tail(l) for l in last_log.values())
+                    tails = "\n".join(
+                        _fail_report(workdir, f"fleet_w{s}", l)
+                        for s, l in last_log.items())
                     raise RuntimeError(
                         f"all {n_workers} fleet worker slots exhausted "
                         f"their {retries + 1}-attempt budgets with shards "
-                        f"{sorted(pending)} unfinished; log tails:\n{tails}")
+                        f"{sorted(pending)} unfinished;\n{tails}")
                 time.sleep(poll_interval)
     finally:
         # every shard is published (or we raised) — surviving fleet workers
@@ -555,14 +613,28 @@ def launch_sweep(
         shutil.rmtree(_result_dir(workdir, i), ignore_errors=True)
     attempts = {i: 0 for i in range(n_shards)}
     if pending:
+        # the launcher keeps its OWN journal (not the process-global one:
+        # launch_sweep is a library call — tests and services drive it from
+        # processes whose journal belongs to them)
+        obs_dir = obs_dir_for(workdir)
+        jl = (Journal.open(obs_dir, "launcher") if obs_dir is not None
+              else Journal.noop())
         supervise = _supervise_elastic if elastic else _supervise_pinned
         kw = ({"lease_ttl": lease_ttl} if elastic
               else {"stall_timeout": stall_timeout})
-        supervise(spec_path, workdir, spec, pending, env,
-                  n_workers=n_workers, retries=retries, timeout=timeout,
-                  backoff_base=backoff_base, poll_interval=poll_interval,
-                  results=results, unexpected=unexpected, attempts=attempts,
-                  **kw)
+        try:
+            with jl.span("supervise", "launcher", n_shards=n_shards,
+                         n_workers=n_workers, elastic=elastic,
+                         pending=sorted(pending),
+                         chaos=chaos_plan is not None):
+                supervise(spec_path, workdir, spec, pending, env,
+                          n_workers=n_workers, retries=retries,
+                          timeout=timeout, backoff_base=backoff_base,
+                          poll_interval=poll_interval, results=results,
+                          unexpected=unexpected, attempts=attempts,
+                          journal=jl, **kw)
+        finally:
+            jl.close()
 
     # gather + merge along the seed axis (shards are contiguous slices)
     trees = [results[i] for i in range(n_shards)]

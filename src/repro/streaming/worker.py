@@ -62,22 +62,13 @@ def run_shard(spec: dict, workdir: str, shard: int, *, worker=None,
     ``worker`` is the process identity for chaos targeting and lease
     ownership (defaults to the shard index). ``lease_store``/``lease``
     wire per-chunk-boundary lease renewal in fleet mode."""
-    import jax.numpy as jnp
-    import numpy as np
-
-    from repro.checkpoint.manager import CheckpointManager, save_tree
-    from repro.core.sweep import netfault_sweep, sdot_sweep
-    from repro.streaming import chaos
-    from repro.streaming.fleet import touch_heartbeat
-    from repro.streaming.launcher import (_load_result, _worker_dir,
-                                          build_engine, build_schedule,
-                                          spec_fingerprint)
+    from repro.obs import get_journal
+    from repro.streaming.launcher import _load_result, _worker_dir
 
     shard = int(shard)
     shard_dir = _worker_dir(workdir, shard)
     out_dir = os.path.join(shard_dir, "result")
     ckpt_dir = os.path.join(shard_dir, "ckpt")
-    hb_path = os.path.join(shard_dir, "heartbeat")
     worker_id = str(worker) if worker is not None else str(shard)
 
     # idempotent relaunch — but only for a result stamped with THIS spec's
@@ -87,9 +78,45 @@ def run_shard(spec: dict, workdir: str, shard: int, *, worker=None,
     # and is cleaned up here, making the publish->cleanup pair idempotent.
     if _load_result(workdir, spec, shard) is not None:
         shutil.rmtree(ckpt_dir, ignore_errors=True)
+        get_journal().event("shard_skip", "worker", shard=shard)
         print(f"worker {shard}: result already published, nothing to do")
         return 0
     shutil.rmtree(out_dir, ignore_errors=True)
+
+    # the whole shard is ONE span: a chaos kill (or LeaseLost abandon)
+    # leaves it open in the journal, which is how forensics names the work
+    # a dead/robbed worker was doing
+    sp = get_journal().begin("shard_run", "worker", shard=shard,
+                             worker=worker_id)
+
+    try:
+        return _run_shard_body(spec, workdir, shard, worker_id, sp,
+                               lease_store, lease)
+    except BaseException:
+        # close the span for survivable aborts (LeaseLost, raised errors) —
+        # a SIGKILL never reaches here and leaves the span_start orphaned,
+        # by design
+        sp.end(ok=False)
+        raise
+
+
+def _run_shard_body(spec, workdir, shard, worker_id, sp, lease_store,
+                    lease) -> int:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint.manager import CheckpointManager, save_tree
+    from repro.core.sweep import netfault_sweep, sdot_sweep
+    from repro.obs import get_journal
+    from repro.streaming import chaos
+    from repro.streaming.fleet import touch_heartbeat
+    from repro.streaming.launcher import (_worker_dir, build_engine,
+                                          build_schedule, spec_fingerprint)
+
+    shard_dir = _worker_dir(workdir, shard)
+    out_dir = os.path.join(shard_dir, "result")
+    ckpt_dir = os.path.join(shard_dir, "ckpt")
+    hb_path = os.path.join(shard_dir, "heartbeat")
 
     seeds = spec["shards"][shard]
     if not seeds:
@@ -165,12 +192,16 @@ def run_shard(spec: dict, workdir: str, shard: int, *, worker=None,
         tree["node_counts"] = jnp.asarray(sw.node_counts)
     touch_heartbeat(hb_path, step=spec["t_outer"])
     save_tree(out_dir, tree, step=shard)
+    get_journal().event("publish", "worker", shard=shard,
+                        n_seeds=len(seeds),
+                        resumed_steps=int(resumed_steps))
     hooks.after_publish(out_dir)
     # the published result supersedes the intermediate sweep state; a kill
     # landing between the publish above and this cleanup is benign — the
     # relaunch path at the top of this function redoes the cleanup and the
     # result always wins over the stale checkpoint
     shutil.rmtree(ckpt_dir, ignore_errors=True)
+    sp.end(n_seeds=len(seeds), resumed_steps=int(resumed_steps))
     print(f"worker {shard}: published {len(seeds)} seed lanes -> {out_dir}"
           + (f" (resumed from outer step {resumed_steps})"
              if resumed_steps else ""))
@@ -200,10 +231,16 @@ def main(argv=None) -> int:
     with open(args.spec) as f:
         spec = json.load(f)
 
+    from repro.obs import install
+
     if args.fleet:
         from repro.streaming.fleet import fleet_worker_loop
         worker_id = args.worker or f"w{os.getpid()}"
+        # attempt-scoped journal: a respawned slot opens fleet_w0.a1.jsonl
+        # next to the crashed attempt's fleet_w0.a0.jsonl
+        install(workdir, f"fleet_{worker_id}")
         return fleet_worker_loop(spec, workdir, worker_id, ttl=args.ttl)
+    install(workdir, f"worker_s{int(args.shard)}")
     return run_shard(spec, workdir, int(args.shard), worker=args.worker)
 
 

@@ -1,0 +1,333 @@
+"""Observability layer: journal robustness, registry math, CLI forensics.
+
+The journal's load-bearing properties: appends are whole-line atomic under
+concurrency, a SIGKILL-torn tail reads cleanly, relaunches open NEW
+attempt-scoped files, and — above all — tracing is strictly out-of-band:
+the same chunked run produces bit-identical device results with the
+journal installed or disabled.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.obs import (Histogram, Journal, MetricsRegistry, install,
+                      journal_files, merge_journals, read_journal)
+from repro.obs.cli import (build_exposition, forensics_report, main,
+                           phase_summary, render_gantt, resolve_obs_dir)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs(monkeypatch):
+    """Every test gets a pristine process journal/registry and a clean env
+    (no cross-test leakage through the module globals)."""
+    monkeypatch.delenv(obs.ENV_OBS, raising=False)
+    monkeypatch.delenv(obs.ENV_DIR, raising=False)
+    yield
+    obs.set_journal(Journal.noop())
+
+
+# ---------------------------------------------------------------------------
+# journal: record schema, spans, robustness
+# ---------------------------------------------------------------------------
+def test_journal_records_and_span_pairing(tmp_path):
+    j = Journal.open(str(tmp_path), "worker_s0", run="r1")
+    j.event("chunk", "runtime", step=4)
+    with j.span("ckpt_save", "checkpoint", step=4) as sp:
+        sp.add(blocking=False)
+    j.close()
+    recs = read_journal(os.path.join(tmp_path, "worker_s0.a0.jsonl"))
+    assert [r["kind"] for r in recs] == ["event", "span_start", "span"]
+    ev, start, end = recs
+    assert ev["name"] == "chunk" and ev["phase"] == "runtime"
+    assert ev["step"] == 4 and ev["run"] == "r1"      # static field rides
+    assert start["sid"] == end["sid"]
+    assert end["ok"] is True and end["dur_s"] >= 0.0
+    assert end["blocking"] is False                   # add() landed
+    assert {"ts", "mono", "proc", "pid", "attempt"} <= set(ev)
+
+
+def test_journal_reserved_field_names_never_raise(tmp_path):
+    # "kind"/"name"/... are record schema; a colliding caller field is
+    # prefixed instead of clobbering it (observability never raises)
+    j = Journal.open(str(tmp_path), "p")
+    j.event("fired", "chaos", kind="kill", name="x", pid=9)
+    j.close()
+    (rec,) = read_journal(os.path.join(tmp_path, "p.a0.jsonl"))
+    assert rec["kind"] == "event" and rec["name"] == "fired"
+    assert rec["f_kind"] == "kill" and rec["f_name"] == "x"
+    assert rec["f_pid"] == 9 and rec["pid"] == os.getpid()
+
+
+def test_torn_tail_skipped_cleanly(tmp_path):
+    path = str(tmp_path / "w.a0.jsonl")
+    j = Journal(path, "w")
+    for i in range(3):
+        j.event("e", step=i)
+    j.close()
+    with open(path, "ab") as f:                 # SIGKILL mid-append debris
+        f.write(b'{"ts": 1.0, "kind": "eve')
+    recs = read_journal(path)
+    assert [r["step"] for r in recs] == [0, 1, 2]
+    # and a second writer appending AFTER the torn line still parses: the
+    # torn line has no newline, so the next append glues to it — both are
+    # lost together, later lines survive
+    j2 = Journal(path, "w")
+    j2.event("e", step=3)
+    j2.event("e", step=4)
+    j2.close()
+    steps = [r["step"] for r in read_journal(path) if "step" in r]
+    assert steps[-1] == 4
+
+
+def test_concurrent_appends_interleave_whole_lines(tmp_path):
+    path = str(tmp_path / "shared.a0.jsonl")
+    writers = [Journal(path, f"t{i}") for i in range(4)]
+
+    def pound(j, tid):
+        for i in range(200):
+            j.event("e", tid=tid, i=i, pad="x" * 64)
+
+    threads = [threading.Thread(target=pound, args=(w, i))
+               for i, w in enumerate(writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for w in writers:
+        w.close()
+    recs = read_journal(path)
+    assert len(recs) == 4 * 200                 # nothing torn or merged
+    for tid in range(4):
+        mine = [r["i"] for r in recs if r["tid"] == tid]
+        assert mine == list(range(200))         # per-writer order kept
+
+
+def test_attempt_scoped_journals_never_clobber(tmp_path):
+    j0 = Journal.open(str(tmp_path), "fleet_w0")
+    j0.event("before_crash")
+    j0.close()
+    j1 = Journal.open(str(tmp_path), "fleet_w0")      # the relaunch
+    j1.event("after_crash")
+    j1.close()
+    files = journal_files(str(tmp_path))
+    assert [(p, a) for _, p, a in files] == [("fleet_w0", 0),
+                                             ("fleet_w0", 1)]
+    assert read_journal(files[0][0])[0]["name"] == "before_crash"
+    assert read_journal(files[1][0])[0]["name"] == "after_crash"
+
+
+def test_merge_journals_orders_by_wall_clock(tmp_path):
+    a = Journal.open(str(tmp_path), "a")
+    b = Journal.open(str(tmp_path), "b")
+    a.event("first")
+    b.event("second")
+    a.event("third")
+    a.close(), b.close()
+    names = [r["name"] for r in merge_journals(str(tmp_path))]
+    assert names == ["first", "second", "third"]
+
+
+def test_noop_journal_is_inert(tmp_path):
+    j = Journal.noop()
+    assert not j.enabled
+    j.event("e", step=1)
+    with j.span("s", "p") as sp:
+        sp.add(x=1)
+    sp.end()                                    # double end: fine
+    assert list(tmp_path.iterdir()) == []
+
+
+def test_install_disabled_by_env(tmp_path, monkeypatch):
+    monkeypatch.setenv(obs.ENV_OBS, "0")
+    j = install(str(tmp_path), "service")
+    assert not j.enabled and obs.get_journal() is j
+    assert obs.obs_dir_for(str(tmp_path)) is None
+    assert not (tmp_path / "obs").exists()
+
+
+def test_install_opens_attempt_scoped_journal(tmp_path):
+    j = install(str(tmp_path), "service")
+    assert j.enabled and j.attempt == 0
+    j.event("tick")
+    j.close()
+    j2 = install(str(tmp_path), "service")
+    assert j2.attempt == 1
+    with j2.span("work", "serving"):
+        pass
+    j2.close()
+    # span durations fed the (fresh) process registry
+    h = obs.metrics().histogram("span_work_seconds")
+    assert h.count == 1
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_histogram_percentiles_and_merge():
+    h = Histogram()
+    for v in np.linspace(0.001, 0.1, 100):
+        h.observe(float(v))
+    assert 0.03 < h.p50 < 0.07
+    assert 0.08 < h.p99 <= 0.1
+    assert h.mean == pytest.approx(np.mean(np.linspace(0.001, 0.1, 100)))
+    h2 = Histogram()
+    h2.merge(h.snapshot())
+    h2.merge(h.snapshot())
+    assert h2.count == 200 and h2.max == h.max
+    with pytest.raises(ValueError):
+        Histogram(bounds=[1.0, 2.0]).merge(h.snapshot())
+
+
+def test_histogram_empty_and_degenerate():
+    h = Histogram()
+    assert h.p50 is None and h.p99 is None and h.mean is None
+    h.observe(0.0)                              # below the lowest bound
+    assert h.p50 == 0.0 and h.p99 == 0.0       # clamped to observed range
+
+
+def test_registry_dump_load_merge_prom(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("query_shed_total").inc(3)
+    reg.gauge("staleness_ticks").set(7)
+    reg.histogram("lat_seconds").observe(0.01)
+    path = reg.dump(str(tmp_path / "metrics.a.json"))
+    back = MetricsRegistry.load(path)
+    assert back.counter("query_shed_total").value == 3
+    back.merge_snapshot(reg.snapshot())         # fold a second process in
+    assert back.counter("query_shed_total").value == 6
+    assert back.gauge("staleness_ticks").value == 7
+    assert back.histogram("lat_seconds").count == 2
+    prom = back.to_prom()
+    assert "# TYPE repro_query_shed_total counter" in prom
+    assert "repro_query_shed_total 6" in prom
+    assert 'repro_lat_seconds_bucket{le="+Inf"} 2' in prom
+    assert "repro_lat_seconds_p99" in prom
+
+
+def test_registry_type_conflict():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+# ---------------------------------------------------------------------------
+# CLI: forensics, attribution, summaries, gantt
+# ---------------------------------------------------------------------------
+def _synthetic_crash_dir(tmp_path):
+    """worker_s0.a0 dies inside ckpt_save with fault #0 fired in it;
+    worker_s0.a1 completes cleanly. Fault #1 never fires anywhere."""
+    d = str(tmp_path / "obs")
+    j = Journal.open(d, "worker_s0")
+    sp = j.begin("shard_run", "worker", shard=0)
+    inner = j.begin("ckpt_save", "checkpoint", step=4)
+    j.event("chaos_fired", "chaos", fault=0, fault_kind="kill", boundary=2,
+            shard=0)
+    del sp, inner                               # SIGKILL: spans never end
+    j.close()
+    j = Journal.open(d, "worker_s0")
+    with j.span("shard_run", "worker", shard=0):
+        pass
+    j.close()
+    plan = {"seed": 0, "faults": [
+        {"kind": "kill", "shard": 0, "boundary": 2},
+        {"kind": "corrupt", "shard": 1, "boundary": 3}]}
+    plan_path = str(tmp_path / "plan.json")
+    with open(plan_path, "w") as f:
+        json.dump(plan, f)
+    return d, plan_path
+
+
+def test_forensics_names_death_phase_and_attributes_faults(tmp_path):
+    d, plan_path = _synthetic_crash_dir(tmp_path)
+    text, ok = forensics_report(d, plan_path=plan_path)
+    assert "died during shard_run[worker] > ckpt_save[checkpoint]" in text
+    assert "kill(shard=0) -> worker_s0.a0" in text
+    assert "during ckpt_save/checkpoint" in text
+    assert "fault #1 corrupt(shard=1) -> NO TRACE" in text
+    assert "1/2 plan faults attributed" in text
+    assert ok is False                          # fault #1 unattributed
+    text2, ok2 = forensics_report(d)            # no plan: always ok
+    assert ok2 is True and "no open spans" in text2
+
+
+def test_cli_exit_codes_and_dir_resolution(tmp_path, capsys):
+    d, plan_path = _synthetic_crash_dir(tmp_path)
+    # workdir containing obs/ resolves too
+    assert resolve_obs_dir(str(tmp_path)) == d
+    assert main(["forensics", str(tmp_path), "--plan", plan_path]) == 1
+    assert main(["forensics", d]) == 0
+    assert main(["timeline", d, "--last", "3"]) == 0
+    assert main(["summary", d]) == 0
+    assert main(["prom", d]) == 0
+    assert main(["gantt", d]) == 0
+    capsys.readouterr()
+    with pytest.raises(SystemExit):
+        resolve_obs_dir(str(tmp_path / "nope"))
+
+
+def test_phase_summary_and_exposition(tmp_path):
+    d, _ = _synthetic_crash_dir(tmp_path)
+    summary = phase_summary(merge_journals(d))
+    assert summary[("worker", "shard_run")]["count"] == 1   # only the closed one
+    assert summary[("chaos", "chaos_fired")]["events"] == 1
+    reg = build_exposition(d)
+    assert reg.counter("event_chaos_fired_total").value == 1
+    assert reg.histogram("span_shard_run_seconds").count == 1
+    # a metrics.*.json dump in the dir is merged in
+    extra = MetricsRegistry()
+    extra.counter("query_shed_total").inc(5)
+    extra.dump(os.path.join(d, "metrics.service.json"))
+    assert build_exposition(d).counter("query_shed_total").value == 5
+
+
+def test_gantt_renders_rows_and_fault_marks(tmp_path):
+    d, _ = _synthetic_crash_dir(tmp_path)
+    out = render_gantt(d, width=32)
+    assert "worker_s0.a0" in out and "worker_s0.a1" in out
+    assert "X" in out                           # the chaos firing column
+
+
+# ---------------------------------------------------------------------------
+# out-of-band: tracing never changes device results
+# ---------------------------------------------------------------------------
+def test_chunked_run_bit_identical_with_tracing(tmp_path, monkeypatch):
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.core.consensus import DenseConsensus
+    from repro.core.runtime import run_chunked
+    from repro.core.sdot import sdot_program
+    from repro.core.topology import erdos_renyi
+
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((10, 120)).astype(np.float32)
+    covs = jnp.stack([jnp.asarray(b @ b.T / b.shape[1])
+                      for b in np.split(x, 4, axis=1)])
+
+    def one_run(tag, enabled):
+        if enabled:
+            monkeypatch.setenv(obs.ENV_DIR, str(tmp_path / "obs"))
+        else:
+            monkeypatch.setenv(obs.ENV_OBS, "0")
+        install(str(tmp_path), "worker_s0")
+        prog = sdot_program(covs=covs, engine=DenseConsensus(
+            erdos_renyi(4, 0.6, seed=1)), r=2, t_outer=8, t_c=8)
+        mgr = CheckpointManager(str(tmp_path / f"ckpt_{tag}"))
+        res = run_chunked(prog, mgr, chunk_size=3)
+        obs.get_journal().close()
+        monkeypatch.delenv(obs.ENV_DIR, raising=False)
+        monkeypatch.delenv(obs.ENV_OBS, raising=False)
+        return np.asarray(res.q_nodes)
+
+    q_traced = one_run("on", enabled=True)
+    q_plain = one_run("off", enabled=False)
+    np.testing.assert_array_equal(q_traced, q_plain)
+    recs = merge_journals(str(tmp_path / "obs"))
+    assert any(r["name"] == "chunk" for r in recs)
+    assert any(r["name"] == "ckpt_save" and r["kind"] == "span"
+               for r in recs)

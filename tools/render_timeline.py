@@ -1,0 +1,40 @@
+"""Render a plain-text Gantt + per-phase summary of a traced run.
+
+Thin wrapper over the ``repro.obs`` CLI for the common post-mortem loop:
+"show me WHAT every process was doing WHEN, then where the time went".
+
+Usage:
+    PYTHONPATH=src python tools/render_timeline.py <workdir-or-obs-dir> \
+        [--width N] [--no-summary]
+
+``<workdir-or-obs-dir>`` is a sweep/serving workdir (the journals live in
+its ``obs/``) or an obs directory itself. Equivalent to running
+``python -m repro.obs gantt`` followed by ``python -m repro.obs summary``.
+"""
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("dir", help="workdir (containing obs/) or obs dir")
+    ap.add_argument("--width", type=int, default=72,
+                    help="gantt columns (default 72)")
+    ap.add_argument("--no-summary", action="store_true",
+                    help="gantt only, skip the per-phase duration table")
+    args = ap.parse_args(argv)
+
+    from repro.obs.cli import render_gantt, render_summary, resolve_obs_dir
+
+    obs_dir = resolve_obs_dir(args.dir)
+    sys.stdout.write(render_gantt(obs_dir, width=args.width))
+    if not args.no_summary:
+        sys.stdout.write("\n")
+        sys.stdout.write(render_summary(obs_dir))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
