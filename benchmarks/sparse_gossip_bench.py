@@ -1,0 +1,210 @@
+"""Sparse-topology gossip at scale: SparseW/ELL-SpMM vs the dense einsum.
+
+The paper's experiments (and this repo's table reproductions) run on
+N <= 200 node overlays where a dense (N, N) mixing matrix is free. The
+overlay families the connectivity tradeoffs are *about* — small-world
+(Watts-Strogatz), scale-free (Barabasi-Albert), geometric (RGG) — have
+O(N) edges at the 1k-10k-node scale, so dense mixing pays O(N^2 k) per
+round for >99% zeros. This benchmark measures what ``SparseW`` mixing
+(kernels/ops.ell_spmm: Pallas ELL kernel on TPU, gather/einsum fallback
+on CPU) buys over the dense einsum across N x topology:
+
+* **walltime grid** — N in {200, 1000, 4000, 10000} x {ws, ba, rgg}:
+  best-of interleaved walltime of ``t_c`` gossip rounds on a (N, K)
+  payload, dense vs sparse engine (identical graphs and weights), plus
+  the deterministic weight-storage footprint (dense N^2 f32 vs ELL
+  idx+val+diag+nnz) — the memory axis of the tradeoff. Acceptance
+  (full run): sparse wins at every N >= 4000 on at least one topology,
+  and never loses by more than 1.2x at N = 200.
+* **bf16 accuracy-vs-bytes curve** — consensus-sum (``run_debiased``)
+  on WS(1000) for growing round budgets, f32 vs bf16 gossip payloads:
+  relative error against the exact sum vs the comm ledger's
+  ``payload_bytes`` (priced at 2 bytes/elem for bf16 — the ledger is
+  the source of truth for the bytes axis). bf16 halves the wire bytes
+  and floors at quantization error; f32 keeps converging.
+* **equivalence guard** — every timed pair also checks dense and
+  sparse outputs agree to f32 tolerance, so the speedup is never
+  measured against a wrong answer.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.sparse_gossip_bench [--smoke]
+
+Writes BENCH_sparse_gossip.json (or .smoke.json) at the repo root. The
+smoke run covers N in {200, 1000} on WS only with the assertions relaxed
+to the equivalence guard (CI containers jitter too much for timing
+gates).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.consensus import DenseConsensus
+from repro.core.metrics import CommLedger
+from repro.core.topology import (barabasi_albert, random_geometric,
+                                 watts_strogatz)
+from repro.kernels.ops import ell_spmm_path
+
+from .common import interleaved_best_of
+
+K = 16                 # payload columns per node (d*r-style block, flattened)
+TOPOLOGIES = {
+    "ws": lambda n: watts_strogatz(n, k=6, p=0.1, seed=1),
+    "ba": lambda n: barabasi_albert(n, m=3, seed=1),
+    "rgg": lambda n: random_geometric(n, seed=1),
+}
+
+
+def _weight_bytes(eng: DenseConsensus) -> int:
+    """Deterministic device-weight footprint (the memory axis)."""
+    if eng.is_sparse:
+        sw = eng._w
+        mirror = 0 if sw.dense_off is None else sw.dense_off.size * 4
+        return int(sw.ell_idx.size * 4 + sw.ell_val.size * 4
+                   + sw.diag.size * 4 + sw.row_nnz.size * 4 + mirror)
+    n = eng.graph.n_nodes
+    return n * n * 4
+
+
+def _time_pair(graph, t_c: int, repeats: int, seed: int):
+    """Best-of walltime of t_c gossip rounds, dense vs sparse engine."""
+    n = graph.n_nodes
+    dense = DenseConsensus(graph, sparse=False)
+    sparse = DenseConsensus(graph, sparse=True)
+    z = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((n, K)).astype(np.float32))
+    run_d = lambda: dense.run(z, t_c)
+    run_s = lambda: sparse.run(z, t_c)
+    outs = (jax.block_until_ready(run_d()),
+            jax.block_until_ready(run_s()))          # compile both
+    gap = float(jnp.max(jnp.abs(outs[0] - outs[1])))
+    scale = float(jnp.max(jnp.abs(outs[0]))) + 1e-12
+    best, _ = interleaved_best_of(
+        [("dense", run_d), ("sparse", run_s)], repeats=repeats,
+        sync=jax.block_until_ready)
+    sw = sparse._w
+    return {
+        "n": n,
+        "t_c": t_c,
+        "density": round(graph.density, 6),
+        "ell_width": sw.ell_width,
+        "nnz": sw.nnz,
+        "kernel_path": ell_spmm_path(n, sw.ell_width, K),
+        "dense_ms": round(best["dense"] * 1e3, 3),
+        "sparse_ms": round(best["sparse"] * 1e3, 3),
+        "speedup_x": round(best["dense"] / best["sparse"], 3),
+        "dense_weight_bytes": _weight_bytes(dense),
+        "sparse_weight_bytes": _weight_bytes(sparse),
+        "weight_bytes_ratio": round(_weight_bytes(dense)
+                                    / _weight_bytes(sparse), 1),
+        "rel_gap": gap / scale,
+    }
+
+
+def _bf16_curve(n: int, budgets, seed: int):
+    """Consensus-sum accuracy vs ledger wire bytes, f32 vs bf16 payloads.
+
+    Uses a well-connected small-world overlay (spectral gap ~0.34, so the
+    budget range actually spans unconverged -> converged): f32 keeps
+    converging toward the exact sum while bf16 floors at quantization
+    error having moved HALF the wire bytes per round.
+    """
+    g = watts_strogatz(n, k=20, p=0.5, seed=1)
+    z = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((n, K)).astype(np.float32))
+    true_sum = np.asarray(z, np.float64).sum(axis=0)
+    rows = []
+    for payload in (None, "bfloat16"):
+        eng = DenseConsensus(g, sparse=True, payload_dtype=payload)
+        for t_c in budgets:
+            ledger = CommLedger()
+            out = eng.run_debiased(z, t_c, ledger)
+            err = np.asarray(out, np.float64) - true_sum[None, :]
+            rel = float(np.sqrt((err ** 2).mean())
+                        / np.sqrt((true_sum ** 2).mean()))
+            rows.append({
+                "mode": "f32" if payload is None else "bf16",
+                "t_c": t_c,
+                "rel_err": rel,
+                "payload_bytes": ledger.payload_bytes,
+                "bytes_per_elem": eng.payload_bytes_per_elem,
+            })
+    return rows
+
+
+def run_bench(smoke: bool = False):
+    if smoke:
+        grid = [(200, "ws"), (1000, "ws")]
+        budgets = (8, 32)
+    else:
+        grid = [(n, t) for n in (200, 1000, 4000, 10000)
+                for t in ("ws", "ba", "rgg")]
+        budgets = (8, 16, 32, 64)
+
+    walltime = []
+    for n, topo in grid:
+        # more rounds + repeats at small N to integrate over timer noise;
+        # fewer at 10k where a single dense run is already seconds
+        t_c = 50 if n <= 200 else (20 if n <= 1000 else (10 if n <= 4000
+                                                         else 5))
+        repeats = 5 if n <= 1000 else (3 if n <= 4000 else 2)
+        if smoke:
+            t_c, repeats = min(t_c, 10), 2
+        row = _time_pair(TOPOLOGIES[topo](n), t_c, repeats, seed=n)
+        row["topology"] = topo
+        walltime.append(row)
+        print(f"# {topo} n={n}: dense {row['dense_ms']}ms "
+              f"sparse {row['sparse_ms']}ms ({row['speedup_x']}x), "
+              f"L={row['ell_width']}, {row['kernel_path']}",
+              file=sys.stderr)
+        assert row["rel_gap"] <= 1e-4, row   # equivalence guard, all runs
+
+    results = {"walltime_grid": walltime,
+               "bf16_curve": _bf16_curve(1000 if not smoke else 200,
+                                         budgets, seed=3)}
+
+    if not smoke:
+        for n in (4000, 10000):
+            wins = [r for r in walltime if r["n"] == n
+                    and r["speedup_x"] > 1.0]
+            assert wins, f"sparse never beat dense at n={n}: " + json.dumps(
+                [r for r in walltime if r["n"] == n])
+        for r in walltime:
+            if r["n"] == 200:
+                assert r["speedup_x"] >= 1.0 / 1.2, r
+        # bf16 moves half the bytes of f32 for the same budget
+        by_mode = {m: [r for r in results["bf16_curve"] if r["mode"] == m]
+                   for m in ("f32", "bf16")}
+        for rf, rb in zip(by_mode["f32"], by_mode["bf16"]):
+            assert rb["payload_bytes"] == rf["payload_bytes"] / 2.0, (rf, rb)
+    return results
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    out = {
+        "bench": "sparse_gossip",
+        "scale": {"payload_cols": K,
+                  "topologies": {k: ("ws(k=6,p=0.1)" if k == "ws" else
+                                     "ba(m=3)" if k == "ba" else
+                                     "rgg(default radius)")
+                                 for k in TOPOLOGIES}},
+        "smoke": smoke,
+        "backend": jax.default_backend(),
+        "results": run_bench(smoke=smoke),
+    }
+    print(json.dumps(out, indent=2))
+    name = ("BENCH_sparse_gossip.smoke.json" if smoke
+            else "BENCH_sparse_gossip.json")
+    path = pathlib.Path(__file__).resolve().parent.parent / name
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(f"# wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

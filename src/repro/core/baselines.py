@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import runtime
-from .consensus import DenseConsensus, debiased_gossip
+from .consensus import DenseConsensus, debiased_gossip, gossip_mix
 from .linalg import cholesky_qr2, orthonormal_init
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
 from .sdot import local_cov_apply
@@ -61,9 +61,11 @@ def _masked_node_mean(q, node_mask):
 
 
 def _supports_fused(engine) -> bool:
-    """Fused baselines need the dense weight matrix (+ debias table for the
-    consensus-sum methods); engines without them (e.g. AsyncConsensus with
-    host-side rounds disabled) fall back to the eager loop."""
+    """Fused baselines need the engine's mixing weights — dense array or
+    ``SparseW``, both flow through ``gossip_mix`` as Program operands —
+    plus the debias table for the consensus-sum methods; engines without
+    them (e.g. AsyncConsensus with host-side rounds disabled) fall back
+    to the eager loop."""
     return hasattr(engine, "_w") and hasattr(engine, "debias_table")
 
 
@@ -197,7 +199,9 @@ def seq_dist_pm(covs: jnp.ndarray, engine: DenseConsensus, r: int,
         errs = np.asarray(errs)
     if ledger is not None and closed_form:
         ledger.log_gossip_rounds(np.full(n_steps, t_c),
-                                 engine.graph.adjacency, d)
+                                 engine.graph.adjacency, d,
+                                 bytes_per_elem=getattr(
+                                     engine, "payload_bytes_per_elem", 4.0))
     return q_nodes, errs
 
 
@@ -208,7 +212,7 @@ def _dsa_build_body(operands, *, trace_err: bool):
     covs, w, lr, q_true, node_mask = operands
 
     def body(q, _):
-        mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
+        mixed = gossip_mix(w.astype(q.dtype), q)
         mq = local_cov_apply(covs, q)
         qmq = jnp.einsum("ndr,nds->nrs", q, mq)
         upper = jnp.triu(qmq)
@@ -251,7 +255,9 @@ def dsa(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     errs = np.asarray(errs)
     if ledger is not None:
         ledger.log_gossip_rounds(np.ones(t_outer), engine.graph.adjacency,
-                                 d * r)
+                                 d * r,
+                                 bytes_per_elem=getattr(
+                                     engine, "payload_bytes_per_elem", 4.0))
     return q, errs
 
 
@@ -262,7 +268,7 @@ def _dpgd_build_body(operands, *, trace_err: bool):
     covs, w, lr, q_true, node_mask = operands
 
     def body(q, _):
-        mixed = jnp.einsum("ij,j...->i...", w.astype(q.dtype), q)
+        mixed = gossip_mix(w.astype(q.dtype), q)
         grad = local_cov_apply(covs, q)
         v = mixed + lr * grad
         q_new = jax.vmap(lambda vv: cholesky_qr2(vv)[0])(v)
@@ -297,7 +303,9 @@ def dpgd(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     errs = np.asarray(errs)
     if ledger is not None:
         ledger.log_gossip_rounds(np.ones(t_outer), engine.graph.adjacency,
-                                 d * r)
+                                 d * r,
+                                 bytes_per_elem=getattr(
+                                     engine, "payload_bytes_per_elem", 4.0))
     return q, errs
 
 
@@ -315,7 +323,7 @@ def _deepca_build_body(operands, *, t_mix: int, trace_err: bool):
         wz = w.astype(s.dtype)
 
         def mix(z, _):
-            return jnp.einsum("ij,j...->i...", wz, z), None
+            return gossip_mix(wz, z), None
 
         s, _ = jax.lax.scan(mix, s, None, length=t_mix)
         # sign-fixed orthonormalization (DeEPCA's rounding keeps tracking valid)
@@ -368,7 +376,9 @@ def deepca(covs: jnp.ndarray, engine: DenseConsensus, r: int, t_outer: int,
     errs = np.asarray(errs)
     if ledger is not None:
         ledger.log_gossip_rounds(np.full(t_outer, t_mix),
-                                 engine.graph.adjacency, d * r)
+                                 engine.graph.adjacency, d * r,
+                                 bytes_per_elem=getattr(
+                                     engine, "payload_bytes_per_elem", 4.0))
     return q, errs
 
 
@@ -460,7 +470,9 @@ def d_pm(data_blocks: Sequence[jnp.ndarray], engine: DenseConsensus, r: int,
         errs = np.asarray(errs)
     if ledger is not None and closed_form:
         ledger.log_gossip_rounds(np.full(n_steps, t_c),
-                                 engine.graph.adjacency, n_samples)
+                                 engine.graph.adjacency, n_samples,
+                                 bytes_per_elem=getattr(
+                                     engine, "payload_bytes_per_elem", 4.0))
     return q_full, errs
 
 
@@ -567,7 +579,9 @@ def baseline_program(
     def finalize(state: runtime.RunState, done: int) -> BaselineResult:
         ledger = CommLedger()
         ledger.log_gossip_rounds(rounds(done), engine.graph.adjacency,
-                                 payload)
+                                 payload,
+                                 bytes_per_elem=getattr(
+                                     engine, "payload_bytes_per_elem", 4.0))
         return BaselineResult(
             q=to_q(state.q),
             error_trace=_finish_errs(state.errs[:done], done, trace_err),

@@ -69,9 +69,30 @@ from .consensus import DenseConsensus, consensus_schedule, debiased_gossip
 from .fdot import _qr_pass, distributed_cholesky_qr, split_pad_rows
 from .linalg import orthonormal_init
 from .metrics import CommLedger, subspace_error, subspace_error_from_cross
+from .sparse import SparseW
 from ..kernels import ops as kops
 
 __all__ = ["BDOTResult", "bdot", "bdot_program", "pad_grid_blocks"]
+
+
+def _stack_weights(engines: Sequence[DenseConsensus]):
+    """Stack per-sub-network mixing weights for the vmapped gossip stages.
+
+    All-dense engines stack to a (B, N, N) array; all-sparse engines stack
+    to one batched ``SparseW`` (``SparseW.stack`` pads ELL widths to the
+    common max) — ``jax.vmap`` maps over its leading-axis leaves exactly
+    like the dense stack. Mixing dense and sparse engines in one stage has
+    no common batched representation, so it is rejected loudly.
+    """
+    ws = [e._w for e in engines]
+    n_sparse = sum(isinstance(w, SparseW) for w in ws)
+    if n_sparse == 0:
+        return jnp.stack(ws)
+    if n_sparse != len(ws):
+        raise ValueError(
+            "B-DOT stage mixes sparse and dense engines; pass sparse=True "
+            "or sparse=False uniformly per stage")
+    return SparseW.stack(ws)
 
 
 @dataclasses.dataclass
@@ -230,21 +251,28 @@ def bdot_program(
     trace_err = prep["trace_err"]
     sched_np = prep["schedule"]
     dims, n_samps = prep["dims"], prep["n_samps"]
-    w_col = jnp.stack([e._w for e in col_engines])       # (J, I, I)
+    w_col = _stack_weights(col_engines)                  # (J, I, I)
     tab_col = jnp.stack([e.debias_table(t_max) for e in col_engines])
-    w_row = jnp.stack([e._w for e in row_engines])       # (I, J, J)
+    w_row = _stack_weights(row_engines)                  # (I, J, J)
     tab_row = jnp.stack([e.debias_table(t_max) for e in row_engines])
 
     def finalize(state: runtime.RunState, done: int) -> BDOTResult:
         ledger = CommLedger()
         for j, eng in enumerate(col_engines):
             ledger.log_gossip_rounds(sched_np[:done], eng.graph.adjacency,
-                                     n_samps[j] * r)
+                                     n_samps[j] * r,
+                                     bytes_per_elem=getattr(
+                                         eng, "payload_bytes_per_elem", 4.0))
         for i, eng in enumerate(row_engines):
             ledger.log_gossip_rounds(sched_np[:done], eng.graph.adjacency,
-                                     dims[i] * r)
+                                     dims[i] * r,
+                                     bytes_per_elem=getattr(
+                                         eng, "payload_bytes_per_elem", 4.0))
         ledger.log_gossip_rounds(np.full(done, passes * t_c_qr),
-                                 col_engines[0].graph.adjacency, r * r)
+                                 col_engines[0].graph.adjacency, r * r,
+                                 bytes_per_elem=getattr(
+                                     col_engines[0],
+                                     "payload_bytes_per_elem", 4.0))
         return BDOTResult(
             q_rows=[state.q[i, :di] for i, di in enumerate(dims)],
             error_trace=(np.asarray(state.errs[:done]) if trace_err

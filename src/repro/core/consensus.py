@@ -28,17 +28,20 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .compat import shard_map
+from .sparse import SparseW, auto_sparse
 from .topology import Graph, local_degree_weights, ring
 from .metrics import CommLedger
 
 __all__ = [
     "DenseConsensus",
     "FaultyConsensus",
+    "SparseConsensus",
     "SpmdConsensus",
     "consensus_schedule",
     "debias_weights",
     "debias_table",
     "debiased_gossip",
+    "gossip_mix",
     "masked_gossip",
     "realized_round_weights",
     "safe_debias_scale",
@@ -100,31 +103,47 @@ def safe_debias_scale(p):
     return jnp.where(p > 1e-6, p, jnp.ones((), p.dtype))
 
 
+def gossip_mix(wz, z):
+    """One gossip application ``out_i = sum_j w_ij z_j`` — THE dispatch
+    seam between dense and sparse mixing. ``wz`` is either a dense (N, N)
+    array (the einsum the paper-scale simulations always used — kept as
+    the correctness oracle) or a ``core.sparse.SparseW`` (ELL SpMM via
+    the Pallas kernel / gather fallback). Every consensus path — fused
+    executors included — mixes through this function, so an engine
+    switching to sparse storage changes ONLY the storage/kernel, not the
+    algebra around it.
+    """
+    if isinstance(wz, SparseW):
+        return wz.mix(z)
+    return jnp.einsum("ij,j...->i...", wz, z)
+
+
 @functools.partial(jax.jit, static_argnums=(2,))
-def _dense_gossip(w: jnp.ndarray, z_stack: jnp.ndarray, t_c: int) -> jnp.ndarray:
+def _dense_gossip(w, z_stack: jnp.ndarray, t_c: int) -> jnp.ndarray:
     wz = w.astype(z_stack.dtype)
 
     def round_(z, _):
-        return jnp.einsum("ij,j...->i...", wz, z), None
+        return gossip_mix(wz, z), None
 
     out, _ = jax.lax.scan(round_, z_stack, None, length=t_c)
     return out
 
 
-def masked_gossip(w: jnp.ndarray, z_stack: jnp.ndarray, t_c: jnp.ndarray,
+def masked_gossip(w, z_stack: jnp.ndarray, t_c: jnp.ndarray,
                   t_max: int) -> jnp.ndarray:
     """``t_c`` gossip rounds where ``t_c`` is a *traced* value (<= t_max).
 
     The scan always runs ``t_max`` rounds and masks rounds past t_c, so a
     varying per-outer-iteration consensus budget stays inside one compiled
     program (this is the inner scan of the fused S-DOT executor). Round
-    i < t_c applies exactly the same einsum as _dense_gossip, in the same
+    i < t_c applies exactly the same mix as _dense_gossip, in the same
     order — results match the eager engine to float-op identity.
+    ``w`` may be dense or a ``SparseW`` (see ``gossip_mix``).
     """
     wz = w.astype(z_stack.dtype)
 
     def round_(z, i):
-        z_next = jnp.einsum("ij,j...->i...", wz, z)
+        z_next = gossip_mix(wz, z)
         return jnp.where(i < t_c, z_next, z), None
 
     out, _ = jax.lax.scan(round_, z_stack, jnp.arange(t_max))
@@ -132,19 +151,24 @@ def masked_gossip(w: jnp.ndarray, z_stack: jnp.ndarray, t_c: jnp.ndarray,
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
-def debias_table(w: jnp.ndarray, t_max: int) -> jnp.ndarray:
+def debias_table(w, t_max: int) -> jnp.ndarray:
     """Device-side debias weights [W^t e_1] for every t in 0..t_max at once.
 
     Returns (t_max + 1, N): row t equals ``debias_weights(w, t)`` (same
     1e-6 clamp), computed as one cumulative scan of W^T matvecs instead of a
     host-side ``np.linalg.matrix_power`` per outer iteration. Row t is
     indexed *inside* the fused executor's outer scan by the traced budget.
+    ``w`` may be a ``SparseW`` (symmetric by construction, so the W^T
+    matvec is the ordinary sparse mix — O(nnz) per row of the table).
     """
     n = w.shape[0]
-    e1 = jnp.zeros((n,), w.dtype).at[0].set(1.0)
+    dtype = jnp.float32 if isinstance(w, SparseW) else w.dtype
+    e1 = jnp.zeros((n,), dtype).at[0].set(1.0)
 
     def step(p, _):
-        p_next = w.T @ p
+        # SparseW is symmetric by contract, so W^T p is the ordinary mix;
+        # the dense branch keeps the exact original matvec op
+        p_next = w.mix(p) if isinstance(w, SparseW) else w.T @ p
         return p_next, p_next
 
     _, rows = jax.lax.scan(step, e1, None, length=t_max)
@@ -212,18 +236,69 @@ def consensus_schedule(kind: str, t_outer: int, t_max: int = 50, cap: Optional[i
     return sched.astype(np.int64)
 
 
+def _record_engine_metrics(sw: SparseW) -> None:
+    """Publish a sparse engine's structure to the obs metrics registry
+    (visible in ``python -m repro.obs summary``/``prom``): nnz/density
+    gauges, plus a counter for the kernel path this process would select
+    for its gossip rounds (host-side mirror of the traced dispatch)."""
+    from ..kernels import ops as kops
+    from ..obs import metrics
+    reg = metrics()
+    reg.gauge("gossip_sparse_nnz").set(sw.nnz)
+    reg.gauge("gossip_sparse_density").set(sw.density)
+    reg.gauge("gossip_sparse_ell_width").set(sw.ell_width)
+    path = kops.ell_spmm_path(sw.n, sw.ell_width, 1)
+    reg.counter(f"gossip_kernel_{path}_total").inc()
+    if sw.payload_dtype is not None:
+        reg.counter("gossip_bf16_engines_total").inc()
+
+
 @dataclasses.dataclass
 class DenseConsensus:
-    """Single-device gossip simulator over an explicit graph."""
+    """Single-device gossip simulator over an explicit graph.
+
+    ``sparse`` selects the mixing storage/kernel: ``True`` stores W as a
+    ``SparseW`` (padded-ELL SpMM rounds — O(nnz k) instead of O(N^2 k)),
+    ``False`` forces the dense einsum, ``None`` (default) auto-enables
+    sparse mixing only for networks that are both large and sparse
+    (``sparse.auto_sparse`` — never at the paper's table scales, so
+    existing seeded results are untouched). Either storage flows through
+    the same ``gossip_mix`` seam in every fused executor, since they all
+    embed ``self._w`` as a Program operand.
+    """
 
     graph: Graph
     weights: Optional[np.ndarray] = None
+    sparse: Optional[bool] = None
+    payload_dtype: Optional[str] = None   # e.g. "bfloat16" (sparse only)
 
     def __post_init__(self):
         if self.weights is None:
             self.weights = local_degree_weights(self.graph)
-        self._w = jnp.asarray(self.weights)
+        self._sparse = auto_sparse(self.graph.n_nodes, self.graph.density,
+                                   self.sparse)
+        if self._sparse:
+            self._w = SparseW.from_dense(self.weights, self.graph.adjacency,
+                                         payload_dtype=self.payload_dtype)
+            _record_engine_metrics(self._w)
+        elif self.payload_dtype is not None:
+            raise ValueError("payload_dtype (bf16 gossip) requires the "
+                             "sparse mixing path")
+        else:
+            self._w = jnp.asarray(self.weights)
+            from ..obs import metrics
+            metrics().counter("gossip_kernel_dense_total").inc()
         self._debias_tables = {}  # t_max -> (t_max+1, N) device table
+
+    @property
+    def is_sparse(self) -> bool:
+        return self._sparse
+
+    @property
+    def payload_bytes_per_elem(self) -> float:
+        """Wire bytes per payload element (ledger pricing): 2 when the
+        sparse engine quantizes gossip payloads to bf16, else 4 (f32)."""
+        return 2.0 if self.payload_dtype == "bfloat16" else 4.0
 
     def run(self, z_stack: jnp.ndarray, t_c: int) -> jnp.ndarray:
         """t_c gossip rounds on stacked blocks z_stack: (N, ...)."""
@@ -233,16 +308,23 @@ class DenseConsensus:
                      ledger: Optional[CommLedger] = None) -> jnp.ndarray:
         """Gossip + per-node debias: approximates sum_j Z_j at every node."""
         out = self.run(z_stack, int(t_c))
-        scale = debias_weights(self.weights, int(t_c))  # (N,)
+        if self._sparse:
+            # device-table row instead of the host O(N^3) matrix_power —
+            # the whole point of the sparse engine is N where that
+            # host power is unaffordable
+            scale = self.debias_table(int(t_c))[int(t_c)]
+        else:
+            scale = jnp.asarray(debias_weights(self.weights, int(t_c)),
+                                out.dtype)
         if ledger is not None:
             payload = int(np.prod(z_stack.shape[1:]))
             # closed form (identical increments per round), not an O(t_c)
             # host loop — eager B-DOT at t_c=50 was burning host time on
             # pure accounting
             ledger.log_gossip_rounds([int(t_c)], self.graph.adjacency,
-                                     payload)
+                                     payload, self.payload_bytes_per_elem)
         bshape = (-1,) + (1,) * (z_stack.ndim - 1)
-        return out / jnp.asarray(scale, out.dtype).reshape(bshape)
+        return out / scale.astype(out.dtype).reshape(bshape)
 
     def debias_table(self, t_max: int) -> jnp.ndarray:
         """Cached (t_max + 1, N) table of [W^t e_1] rows (see debias_table)."""
@@ -273,6 +355,32 @@ class DenseConsensus:
         if table is None:
             table = self.debias_table(t_max)
         return debiased_gossip(self._w, table, z_stack, t_c, t_max)
+
+
+@dataclasses.dataclass
+class SparseConsensus(DenseConsensus):
+    """Forced-sparse gossip engine: CSR/ELL mixing regardless of size.
+
+    A ``DenseConsensus`` whose weight storage is always ``SparseW`` —
+    every gossip round is an ELL SpMM (Pallas kernel on TPU, gather/
+    einsum fallback elsewhere) and the debias table builds by sparse
+    matvec. Plugs into every fused executor through the same ``_w`` /
+    ``debias_table`` operand seam, so S-DOT/SA-DOT/F-DOT/B-DOT and the
+    baselines run sparse without touching their Program definitions.
+
+    ``payload_dtype="bfloat16"`` additionally quantizes the gossip
+    payload (the neighbor messages, not each node's own state) to bf16
+    with f32 accumulation; the comm ledger then prices bytes at 2/elem
+    (``benchmarks/sparse_gossip_bench.py`` measures the accuracy-vs-bytes
+    curve this trades on).
+    """
+
+    def __post_init__(self):
+        if self.sparse is False:
+            raise ValueError("SparseConsensus is the forced-sparse engine;"
+                             " use DenseConsensus for dense mixing")
+        self.sparse = True
+        super().__post_init__()
 
 
 class SpmdConsensus:

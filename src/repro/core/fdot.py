@@ -367,9 +367,11 @@ def fdot_program(
                                                  for p in range(passes)])
         else:
             ledger = CommLedger()
-            ledger.log_gossip_rounds(sched_np[:done], adj, n_samples * r)
+            bpe = getattr(engine, "payload_bytes_per_elem", 4.0)
+            ledger.log_gossip_rounds(sched_np[:done], adj, n_samples * r,
+                                     bytes_per_elem=bpe)
             ledger.log_gossip_rounds(np.full(done, passes * t_c_qr), adj,
-                                     r * r)
+                                     r * r, bytes_per_elem=bpe)
         return FDOTResult(
             q_blocks=unpad_feature_slabs(q_pad, dims),
             error_trace=(np.asarray(state.errs[:done]) if trace_err

@@ -94,12 +94,18 @@ class CommLedger:
     scalars    : payload element count actually moved (for byte-level rooflines)
     awake_counts: per-round awake-node counts logged by async engines
                   (empty for synchronous runs — every node is awake)
+    payload_bytes: wire bytes actually moved — ``scalars`` priced at the
+                  engine's payload element width (4 for f32 gossip, 2 when
+                  a sparse engine quantizes payloads to bf16), so the
+                  accuracy-vs-bytes tradeoff curve reads straight off the
+                  ledger
     """
 
     p2p: float = 0.0
     matrices: float = 0.0
     scalars: float = 0.0
     awake_counts: list = dataclasses.field(default_factory=list)
+    payload_bytes: float = 0.0
 
     def log_awake_rounds(self, counts) -> None:
         """Record realized per-round awake-node counts (async gossip)."""
@@ -109,14 +115,17 @@ class CommLedger:
         """Mean awake nodes per round over the logged async rounds."""
         return float(np.mean(self.awake_counts)) if self.awake_counts else float("nan")
 
-    def log_gossip_round(self, adjacency: np.ndarray, payload_elems: int) -> None:
+    def log_gossip_round(self, adjacency: np.ndarray, payload_elems: int,
+                         bytes_per_elem: float = 4.0) -> None:
         sends = float(adjacency.sum())  # directed messages this round
         self.p2p += sends
         self.matrices += sends
         self.scalars += sends * payload_elems
+        self.payload_bytes += sends * payload_elems * bytes_per_elem
 
     def log_gossip_rounds(self, schedule: np.ndarray, adjacency: np.ndarray,
-                          payload_elems: int) -> None:
+                          payload_elems: int,
+                          bytes_per_elem: float = 4.0) -> None:
         """Closed-form accounting for a whole run's consensus schedule.
 
         Equivalent to calling log_gossip_round once per round of every outer
@@ -129,6 +138,7 @@ class CommLedger:
         self.p2p += sends
         self.matrices += sends
         self.scalars += sends * payload_elems
+        self.payload_bytes += sends * payload_elems * bytes_per_elem
 
     def per_node_p2p(self, n_nodes: int) -> float:
         return self.p2p / n_nodes
@@ -139,6 +149,7 @@ class CommLedger:
             self.matrices + other.matrices,
             self.scalars + other.scalars,
             self.awake_counts + other.awake_counts,
+            self.payload_bytes + other.payload_bytes,
         )
 
     def merge_from(self, other: "CommLedger") -> None:
@@ -149,19 +160,22 @@ class CommLedger:
         self.matrices += other.matrices
         self.scalars += other.scalars
         self.awake_counts.extend(other.awake_counts)
+        self.payload_bytes += other.payload_bytes
 
 
 def _ledger_flatten(ledger: CommLedger):
     # awake_counts travels as one float64 leaf so the whole ledger round-trips
     # through array-only channels (checkpoint shards, worker result files)
     return ((ledger.p2p, ledger.matrices, ledger.scalars,
-             np.asarray(ledger.awake_counts, np.float64)), None)
+             np.asarray(ledger.awake_counts, np.float64),
+             ledger.payload_bytes), None)
 
 
 def _ledger_unflatten(_aux, children):
-    p2p, matrices, scalars, awake = children
+    p2p, matrices, scalars, awake, payload_bytes = children
     return CommLedger(float(p2p), float(matrices), float(scalars),
-                      [int(c) for c in np.asarray(awake).ravel()])
+                      [int(c) for c in np.asarray(awake).ravel()],
+                      float(payload_bytes))
 
 
 # Registered pytree: a CommLedger checkpoints through checkpoint/manager.py

@@ -55,9 +55,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .consensus import (debias_table, realized_round_weights,
-                        safe_debias_scale)
+from .consensus import (_record_engine_metrics, debias_table,
+                        realized_round_weights, safe_debias_scale)
 from .metrics import CommLedger
+from .sparse import SparseW, auto_sparse
 from .topology import Graph, local_degree_weights
 
 __all__ = ["NetFaultModel", "FaultyConsensus", "masked_faulty_rounds",
@@ -229,11 +230,97 @@ def _faulty_round(wz, adj_b, off, params, up_pair, node_up, z, p, ge,
     return z_next, p_next, ge_next, sends, count
 
 
+def _sparse_faulty_round(sw, slot_ok, params, up, node_up_f, z, p, ge,
+                         u_drop, u_burst, u_cor):
+    """ELL-form twin of ``_faulty_round``: edge masks become (N, L) mask
+    vectors over the stored slots.
+
+    The round draws are the SAME dense symmetric uniforms the dense engine
+    pre-samples — gathered at the ELL slots (``take_along_axis`` with the
+    neighbor indices), so a sparse engine realizes bit-identical fault
+    masks to its dense oracle and only the float reduction ORDER differs
+    (gather-sum over L slots instead of an N-wide einsum row). Dropped
+    mass returns to the diagonal per row (the sparse image of
+    ``realized_round_weights``), with the same exactly-1.0 pin for a
+    fully-isolated node. The Gilbert–Elliott state rides in ELL form
+    (N, L): both directions of an edge gather the same symmetric uniform
+    from an all-good start, so the slot states stay mirror-consistent with
+    the dense (N, N) chain.
+    """
+    p_drop, p_bad, p_good, p_cor, cval, guard = (params[i]
+                                                 for i in range(6))
+    bshape = (-1,) + (1,) * (z.ndim - 1)
+    axes = tuple(range(1, z.ndim))
+    idx = sw.ell_idx
+    ud = jnp.take_along_axis(u_drop, idx, axis=1)
+    ub = jnp.take_along_axis(u_burst, idx, axis=1)
+    ge_next = jnp.where(ge, ub >= p_good, ub < p_bad)
+    factor = jnp.where(u_cor < p_cor, cval, jnp.float32(1.0))
+    msg = z * factor.astype(z.dtype).reshape(bshape)
+    finite = jnp.all(jnp.isfinite(msg), axis=axes)
+    peak = jnp.max(jnp.abs(msg), axis=axes)          # NaN -> valid False
+    valid = finite & (peak <= guard)
+    # surviving slots: real (non-padded) edges between up nodes, not
+    # dropped, not in a burst, neither endpoint's payload rejected
+    mask = (slot_ok & up[:, None] & up[idx] & ~ge_next & (ud >= p_drop)
+            & valid[:, None] & valid[idx])
+    wv = sw.ell_val.astype(z.dtype)
+    zero = jnp.zeros((), z.dtype)
+    w_off = jnp.where(mask, wv, zero)
+    dropped = jnp.where(slot_ok & ~mask, wv, zero).sum(axis=1)
+    dd = sw.diag.astype(z.dtype) + dropped
+    dd = jnp.where(mask.any(axis=1), dd, jnp.ones((), z.dtype))
+    msg_clean = jnp.where(valid.reshape(bshape), msg, zero)
+    # split form as in the dense round: diagonal applies the node's OWN
+    # (uncorrupted, full-precision) state; masked off-diagonal slots apply
+    # the screened neighbor messages through the SpMM hook
+    z_next = (dd.reshape(bshape) * z
+              + sw.offdiag_mix(jnp.zeros_like(sw.diag), w_off, msg_clean))
+    p_next = dd * p + jnp.sum(w_off * jnp.take(p, idx), axis=1)
+    sends = jnp.sum(jnp.where(mask, 1.0, 0.0))
+    count = jnp.sum(node_up_f)
+    return z_next, p_next, ge_next, sends, count
+
+
+def _masked_sparse_faulty_rounds(sw, params, node_up, ge0, blocks, t_c,
+                                 z_stack):
+    """Sparse branch of ``masked_faulty_rounds`` (ge0: (N, L) ELL-form)."""
+    n = sw.n
+    slot_ok = (jnp.arange(sw.ell_width)[None, :]
+               < sw.row_nnz[:, None])
+    up = node_up > 0
+    node_up_f = node_up.astype(jnp.float32)
+
+    def round_(carry, inp):
+        z, p, ge = carry
+        u_drop, u_burst, u_cor, i = inp
+        live = i < t_c
+        z_next, p_next, ge_next, sends, count = _sparse_faulty_round(
+            sw, slot_ok, params, up, node_up_f, z, p, ge,
+            u_drop, u_burst, u_cor)
+        z = jnp.where(live, z_next, z)
+        p = jnp.where(live, p_next, p)
+        ge = jnp.where(live, ge_next, ge)
+        return (z, p, ge), (jnp.where(live, sends, 0.0),
+                            jnp.where(live, count, 0.0))
+
+    u_drop, u_burst, u_cor = blocks
+    e1 = jnp.zeros((n,), z_stack.dtype).at[0].set(1.0)
+    (z, p, ge), (sends, counts) = jax.lax.scan(
+        round_, (z_stack, e1, ge0),
+        (u_drop, u_burst, u_cor, jnp.arange(u_drop.shape[0])))
+    return z, p, ge, sends, counts
+
+
 def masked_faulty_rounds(w, adj, params, node_up, ge0, blocks, t_c,
                          z_stack):
     """Traceable faulty gossip: ``t_c`` realized edge-mask rounds.
 
-    w: (N, N) nominal weights; adj: (N, N) 0/1 adjacency; params: (6,)
+    w: (N, N) nominal weights OR a ``SparseW`` (the sparse branch gathers
+    the same dense fault draws at its ELL slots, so realized masks match
+    the dense engine exactly; its ge0 is the engine's (N, L) ELL-form
+    state); adj: (N, N) 0/1 adjacency (unused by the sparse branch — the
+    structure lives in the SparseW); params: (6,)
     ``NetFaultModel.params()``; node_up: (N,) 0/1 crash mask for this outer
     iteration; ge0: (N, N) bool Gilbert–Elliott bad-state at entry (carried
     across calls); blocks: pre-sampled draws from ``sample_fault_blocks``
@@ -247,6 +334,9 @@ def masked_faulty_rounds(w, adj, params, node_up, ge0, blocks, t_c,
     table row for the uncorrected arm benchmarks measure), the final burst
     state, and per-round send/up-node counts (masked rounds report 0.0).
     """
+    if isinstance(w, SparseW):
+        return _masked_sparse_faulty_rounds(w, params, node_up, ge0,
+                                            blocks, t_c, z_stack)
     n = w.shape[0]
     off = ~jnp.eye(n, dtype=bool)
     wz = w.astype(z_stack.dtype)
@@ -298,6 +388,13 @@ def _one_faulty_round(wz, adj_b, off, params, up_pair, node_up, z, p, ge,
                          ge, u_drop, u_burst, u_cor)
 
 
+@jax.jit
+def _one_sparse_faulty_round(sw, slot_ok, params, up, node_up, z, p, ge,
+                             u_drop, u_burst, u_cor):
+    return _sparse_faulty_round(sw, slot_ok, params, up, node_up, z, p,
+                                ge, u_drop, u_burst, u_cor)
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -324,6 +421,8 @@ class FaultyConsensus:
     seed: int = 0
     fused: bool = True           # device rounds vs host NumPy oracle
     debias: str = "realized"     # "realized" | "nominal"
+    sparse: Optional[bool] = None         # None = auto_sparse policy
+    payload_dtype: Optional[str] = None   # e.g. "bfloat16" (sparse only)
 
     def __post_init__(self):
         if self.debias not in _DEBIAS_MODES:
@@ -331,7 +430,22 @@ class FaultyConsensus:
                              f"got {self.debias!r}")
         self.faults.validate(self.graph.n_nodes)
         self.weights = local_degree_weights(self.graph)
-        self._w = jnp.asarray(self.weights, jnp.float32)
+        self._sparse = auto_sparse(self.graph.n_nodes, self.graph.density,
+                                   self.sparse)
+        if self._sparse and not self.fused:
+            raise ValueError("sparse=True requires fused=True: the NumPy "
+                             "host oracle is dense-only (use a dense "
+                             "engine as the oracle instead)")
+        if self.payload_dtype is not None and not self._sparse:
+            raise ValueError("payload_dtype (bf16 gossip) requires the "
+                             "sparse mixing path (sparse=True)")
+        if self._sparse:
+            self._w = SparseW.from_dense(self.weights,
+                                         self.graph.adjacency,
+                                         payload_dtype=self.payload_dtype)
+            _record_engine_metrics(self._w)
+        else:
+            self._w = jnp.asarray(self.weights, jnp.float32)
         self._adj = jnp.asarray(self.graph.adjacency, jnp.float32)
         self._params = self.faults.params()
         self._debias_tables = {}
@@ -349,10 +463,24 @@ class FaultyConsensus:
     def n_nodes(self) -> int:
         return self.graph.n_nodes
 
+    @property
+    def is_sparse(self) -> bool:
+        return self._sparse
+
+    @property
+    def payload_bytes_per_elem(self) -> float:
+        """Wire bytes per payload element (2.0 under bf16 gossip)."""
+        return 2.0 if self.payload_dtype == "bfloat16" else 4.0
+
     def reset(self) -> None:
-        """Rewind the fault stream: fresh key, all links in the good state."""
+        """Rewind the fault stream: fresh key, all links in the good state
+        (ELL-form (N, L) burst state for sparse engines)."""
         self._key = jax.random.PRNGKey(self.seed)
-        self._ge = jnp.zeros((self.graph.n_nodes,) * 2, bool)
+        if isinstance(self._w, SparseW):
+            self._ge = jnp.zeros((self.graph.n_nodes, self._w.ell_width),
+                                 bool)
+        else:
+            self._ge = jnp.zeros((self.graph.n_nodes,) * 2, bool)
 
     def debias_row(self, t_c: int) -> jnp.ndarray:
         """Nominal (fault-free) debias row [W^{t_c} e_1] — the uncorrected
@@ -406,6 +534,8 @@ class FaultyConsensus:
             ledger.p2p += total
             ledger.matrices += total
             ledger.scalars += total * payload
+            ledger.payload_bytes += (total * payload
+                                     * self.payload_bytes_per_elem)
             ledger.log_awake_rounds(np.asarray(counts))
         if self.debias == "realized":
             return realized_debias(zz, p)
@@ -419,17 +549,27 @@ class FaultyConsensus:
         ``masked_faulty_rounds`` bit for bit (tests/test_netfaults.py) —
         the execution-mode oracle for the whole-run executors."""
         n = self.graph.n_nodes
-        off = ~jnp.eye(n, dtype=bool)
         z = jnp.asarray(z_stack, jnp.float32)
-        wz = self._w.astype(z.dtype)
-        adj_b = self._adj > 0
         node_up = jnp.asarray(node_up, jnp.float32)
         up = node_up > 0
-        up_pair = up[:, None] & up[None, :]
         p = jnp.zeros((n,), z.dtype).at[0].set(1.0)
         ge = self._ge
         u_drop, u_burst, u_cor = faults
         sends, counts = [], []
+        if isinstance(self._w, SparseW):
+            slot_ok = (jnp.arange(self._w.ell_width)[None, :]
+                       < self._w.row_nnz[:, None])
+            for t in range(u_drop.shape[0]):
+                z, p, ge, s, c = _one_sparse_faulty_round(
+                    self._w, slot_ok, self._params, up, node_up, z, p,
+                    ge, u_drop[t], u_burst[t], u_cor[t])
+                sends.append(s)
+                counts.append(c)
+            return z, p, ge, jnp.stack(sends), jnp.stack(counts)
+        off = ~jnp.eye(n, dtype=bool)
+        wz = self._w.astype(z.dtype)
+        adj_b = self._adj > 0
+        up_pair = up[:, None] & up[None, :]
         for t in range(u_drop.shape[0]):
             z, p, ge, s, c = _one_faulty_round(
                 wz, adj_b, off, self._params, up_pair, node_up, z, p, ge,

@@ -290,7 +290,10 @@ def sdot_program(
         else:
             ledger = CommLedger()
             ledger.log_gossip_rounds(sched_np[:done],
-                                     engine.graph.adjacency, payload)
+                                     engine.graph.adjacency, payload,
+                                     bytes_per_elem=getattr(
+                                         engine, "payload_bytes_per_elem",
+                                         4.0))
         return SDOTResult(
             q_nodes=q_nodes,
             error_trace=(np.asarray(state.errs[:done]) if trace_err

@@ -210,7 +210,18 @@ def _broadcast_cases(engines, schedules, t_outer, t_c, allow_ragged=False):
     return engines, [s[:t_outer] for s in schedules]
 
 
+def _reject_sparse(engines) -> None:
+    """Sweep fleets vmap over dense (C, N, N) weight stacks; sparse
+    engines (``SparseW`` mixing) are not sweepable yet — fail with a
+    clear message instead of a pytree-stacking TypeError deep in jnp."""
+    if any(getattr(e, "is_sparse", False) for e in engines):
+        raise ValueError(
+            "sweeps require dense engines: construct with sparse=False "
+            "(SparseW-backed engines are not vmappable across cases yet)")
+
+
 def _case_stacks(engines, t_max):
+    _reject_sparse(engines)
     ws = jnp.stack([e._w for e in engines])
     tables = jnp.stack([e.debias_table(t_max) for e in engines])
     return ws, tables
@@ -219,6 +230,7 @@ def _case_stacks(engines, t_max):
 def _ragged_stacks(engines, t_max):
     """Identity-padded (C, N_max, N_max) weights + debias tables + masks for
     a mixed-node-count case axis."""
+    _reject_sparse(engines)
     n_list = [e.graph.n_nodes for e in engines]
     n_max = max(n_list)
     ws = jnp.stack([jnp.asarray(pad_weights_identity(e.weights, n_max))
@@ -419,6 +431,7 @@ def netfault_sweep(
     trace_err = q_true is not None
     s_list = [int(s) for s in seeds]
 
+    _reject_sparse(engines)
     ws = jnp.stack([e._w for e in engines])
     adjs = jnp.stack([e._adj for e in engines])
     params = jnp.stack([e._params for e in engines])          # (C, 6)
@@ -652,6 +665,7 @@ def baseline_sweep(
         if name in ("dsa", "dpgd", "deepca"):
             if covs is None or t_outer is None:
                 raise ValueError(f"{name} sweep needs covs and t_outer")
+        _reject_sparse(engine_list)
         ws = jnp.stack([engine._w])
         n_max = engine.graph.n_nodes
         masks = jnp.ones((1, n_max), jnp.float32)

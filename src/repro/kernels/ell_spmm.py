@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: ELL sparse-matrix x dense-block gossip round.
+
+One gossip round on a sparse topology is
+
+    out[i] = diag[i] * z[i] + sum_l val[i, l] * z[idx[i, l]]
+
+with (idx, val) the padded-ELL neighbor slots of ``core/sparse.SparseW``
+(slots past the row's degree self-point with weight 0, so no masking is
+needed inside the multiply-accumulate) and z the (N, K) flattened gossip
+payload. The grid tiles the ROW axis; each step owns its (block_rows, K)
+output tile:
+
+* the row tile of z (the node's own state) feeds the diagonal term at
+  full precision;
+* the FULL payload stays resident as a second input block (gossip
+  payloads are small — (N, k_payload) with k_payload = d*r/N-ish — so at
+  the 1k-10k-node target sizes it fits VMEM comfortably; ops.py guards
+  the bytes and falls back otherwise) and per-slot rows are gathered
+  from it with dynamic indices;
+* accumulation is f32 (``preferred_element_type`` on the FMA chain);
+  a bf16 payload mode is implemented OUTSIDE the kernel by quantizing
+  the gather source (ops.py) — the kernel is precision-agnostic about
+  its gather operand and always accumulates f32.
+
+The ELL width L is a static Python int, so the slot loop unrolls at
+trace time (L = max row degree, single digits on the sparse topologies
+this targets). Call through ``ops.ell_spmm``, which pads rows to a block
+multiple and falls back to the gather/einsum oracle off-TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ell_spmm_pallas"]
+
+
+def _ell_spmm_kernel(idx_ref, val_ref, diag_ref, zrow_ref, zfull_ref, o_ref,
+                     *, ell_width: int):
+    """One row-block grid step: gather + FMA over the ELL slot columns."""
+    zrow = zrow_ref[...].astype(jnp.float32)            # (br, K) own state
+    zfull = zfull_ref[...]                              # (N, K) payload
+    acc = diag_ref[...].astype(jnp.float32)[:, None] * zrow
+    for l in range(ell_width):                          # static unroll
+        cols = idx_ref[:, l]                            # (br,) int32
+        w = val_ref[:, l].astype(jnp.float32)           # (br,)
+        msgs = jnp.take(zfull, cols, axis=0)            # dynamic row gather
+        acc = acc + w[:, None] * msgs.astype(jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "interpret"))
+def ell_spmm_pallas(ell_idx: jnp.ndarray, ell_val: jnp.ndarray,
+                    diag: jnp.ndarray, z_own: jnp.ndarray,
+                    z_src: jnp.ndarray, *, block_rows: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    """out = diag*z_own + ELL-gather-sum over z_src, f32.
+
+    ell_idx/ell_val: (Np, L) with Np % block_rows == 0 (ops.py pads rows
+    with weight-0 self-pointing slots and diag 0, so padded output rows
+    are exactly zero and slicing them off is exact). z_own: (Np, K) the
+    row-aligned payload; z_src: (N, K) the gather source (bf16 in payload-
+    quantized mode, otherwise the same array as z_own's first N rows).
+    """
+    n_pad, ell_width = ell_idx.shape
+    n_src, k = z_src.shape
+    assert n_pad % block_rows == 0, "ops.py pads rows to a block multiple"
+    n_blocks = n_pad // block_rows
+
+    return pl.pallas_call(
+        functools.partial(_ell_spmm_kernel, ell_width=ell_width),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_rows, ell_width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, ell_width), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n_src, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, k), jnp.float32),
+        interpret=interpret,
+    )(ell_idx, ell_val, diag, z_own, z_src)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .ell_spmm import ell_spmm_pallas
 from .flash_attention import flash_attention_pallas
 from .gram_qr import gram_qr_pallas
 from .gram_update import batched_gram_apply_pallas, gram_apply_pallas
@@ -24,7 +25,8 @@ from .slab_ops import (batched_slab_apply_pallas, batched_slab_tq_pallas,
 
 __all__ = ["gram_apply", "batched_gram_apply", "batched_slab_tq",
            "batched_slab_apply", "grid_block_tq", "grid_block_apply",
-           "gram_qr", "flash_attention", "on_tpu"]
+           "gram_qr", "flash_attention", "ell_spmm", "ell_spmm_path",
+           "ell_densify_wins", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -198,6 +200,86 @@ def grid_block_apply(x_grid: jnp.ndarray, s_stack: jnp.ndarray, *,
     sp = _pad_to(s_stack, 1, block_n)
     v = grid_block_apply_pallas(xp, sp, block_n=block_n, interpret=interp)
     return v.astype(s_stack.dtype)
+
+
+# Above this many gathered message elements (N * L * K) the one-shot
+# gather/einsum fallback's (N, L, K) intermediate is worth trading for the
+# slot-at-a-time scan's O(N K) peak memory.
+_ELL_GATHER_ELEMS = 1 << 25
+
+# Measured CPU crossover: past L ~ N / _ELL_DENSE_RATIO the gather path
+# (O(N L K), poor constants) loses to scatter-to-dense + BLAS matmul
+# (O(N^2 K), great constants). Hub-heavy graphs (Barabasi-Albert) pad ELL
+# to the max degree, so small-N scale-free overlays land here.
+_ELL_DENSE_RATIO = 11
+
+
+def ell_densify_wins(n: int, ell_width: int) -> bool:
+    """Host-side crossover test: for this (N, L) the densified BLAS matmul
+    beats the ELL gather/scan fallbacks, so off-TPU callers that can hoist
+    the scatter (``SparseW`` caches a dense off-diagonal mirror at
+    construction) should mix through the mirror instead."""
+    return ell_width * _ELL_DENSE_RATIO >= n
+
+
+def ell_spmm_path(n: int, ell_width: int, k: int,
+                  use_pallas: bool | None = None) -> str:
+    """Which execution path ``ell_spmm`` will take for these shapes:
+    'pallas' | 'fallback_gather' | 'fallback_scan' | 'fallback_dense'
+    (host-side mirror of the traced dispatch below, for observability and
+    benchmarks)."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas and n * k * 4 <= 8 * 2**20:
+        return "pallas"
+    if ell_densify_wins(n, ell_width):
+        return "fallback_dense"
+    if n * ell_width * k <= _ELL_GATHER_ELEMS:
+        return "fallback_gather"
+    return "fallback_scan"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("payload_dtype", "block_rows",
+                                    "use_pallas", "interpret"))
+def ell_spmm(ell_idx: jnp.ndarray, ell_val: jnp.ndarray, diag: jnp.ndarray,
+             z: jnp.ndarray, *, payload_dtype: str | None = None,
+             block_rows: int = 256, use_pallas: bool | None = None,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """One sparse gossip round: out[i] = diag[i] z[i] + sum_l val[i,l]
+    z[idx[i,l]]. ell_idx/ell_val: (N, L) padded ELL slots (weight 0 past
+    the row degree), diag: (N,), z: (N, K) flattened payload -> (N, K)
+    f32.
+
+    ``payload_dtype`` (e.g. "bfloat16") quantizes the GATHER SOURCE — the
+    neighbor messages that cross the wire — before the f32 accumulation;
+    each node's own diagonal term stays full precision.
+
+    ``use_pallas=None`` auto-selects: the Pallas row-block gather kernel
+    on TPU (guarded by the full payload fitting VMEM), the gather/einsum
+    oracle elsewhere — densifying to a BLAS matmul when the padded width
+    approaches N (hub-heavy graphs) and degrading to a slot-at-a-time
+    scan when the (N, L, K) gathered block would be large (see
+    ``ell_spmm_path``).
+    """
+    n, k = z.shape
+    ell_width = ell_idx.shape[1]
+    z_src = z if payload_dtype is None else z.astype(payload_dtype)
+    path = ell_spmm_path(n, ell_width, k, use_pallas)
+    if path == "fallback_gather":
+        return ref.ell_spmm_ref(ell_idx, ell_val, diag, z, z_src)
+    if path == "fallback_dense":
+        return ref.ell_spmm_dense_ref(ell_idx, ell_val, diag, z, z_src)
+    if path == "fallback_scan":
+        return ref.ell_spmm_scan_ref(ell_idx, ell_val, diag, z, z_src)
+    interp = (not on_tpu()) if interpret is None else interpret
+    idx_p = _pad_to(ell_idx, 0, block_rows)
+    val_p = _pad_to(ell_val, 0, block_rows)
+    diag_p = _pad_to(diag, 0, block_rows)
+    z_p = _pad_to(z, 0, block_rows)
+    out = ell_spmm_pallas(idx_p, val_p, diag_p, z_p, z_src,
+                          block_rows=block_rows, interpret=interp)
+    return out[:n]
 
 
 @functools.partial(

@@ -5,7 +5,59 @@ import jax.numpy as jnp
 
 __all__ = ["gram_apply_ref", "batched_gram_apply_ref", "flash_attention_ref",
            "gram_qr_ref", "batched_slab_tq_ref", "batched_slab_apply_ref",
-           "grid_block_tq_ref", "grid_block_apply_ref"]
+           "grid_block_tq_ref", "grid_block_apply_ref", "ell_spmm_ref",
+           "ell_spmm_scan_ref"]
+
+
+def ell_spmm_ref(ell_idx: jnp.ndarray, ell_val: jnp.ndarray,
+                 diag: jnp.ndarray, z_own: jnp.ndarray,
+                 z_src: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = diag[i] z_own[i] + sum_l val[i,l] z_src[idx[i,l]], f32.
+
+    The gather/einsum oracle for the ELL SpMM gossip round: one big (N, L,
+    K) gather then a slot-contraction einsum. z_src may be a lower-
+    precision (bf16) quantization of the payload — accumulation is f32
+    either way. Padded slots carry weight 0, so no masking is needed.
+    """
+    msgs = jnp.take(z_src, ell_idx, axis=0).astype(jnp.float32)  # (N, L, K)
+    acc = diag.astype(jnp.float32)[:, None] * z_own.astype(jnp.float32)
+    return acc + jnp.einsum("nl,nlk->nk", ell_val.astype(jnp.float32), msgs)
+
+
+def ell_spmm_dense_ref(ell_idx: jnp.ndarray, ell_val: jnp.ndarray,
+                       diag: jnp.ndarray, z_own: jnp.ndarray,
+                       z_src: jnp.ndarray) -> jnp.ndarray:
+    """Densifying twin of ``ell_spmm_ref``: scatters the ELL slots back to
+    an (N, N) off-diagonal matrix and uses the dense matmul. For hub-heavy
+    graphs the padded width L approaches N and the gather path does nearly
+    dense work with far worse constants than BLAS — past the measured CPU
+    crossover (L ~ N/11) the O(N L) scatter + O(N^2 K) matmul is faster.
+    Padded slots self-point with weight 0, so scatter-add is exact."""
+    n = diag.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(n)[:, None], ell_idx.shape)
+    w_off = jnp.zeros((n, n), jnp.float32).at[rows, ell_idx].add(
+        ell_val.astype(jnp.float32))
+    acc = diag.astype(jnp.float32)[:, None] * z_own.astype(jnp.float32)
+    return acc + w_off @ z_src.astype(jnp.float32)
+
+
+def ell_spmm_scan_ref(ell_idx: jnp.ndarray, ell_val: jnp.ndarray,
+                      diag: jnp.ndarray, z_own: jnp.ndarray,
+                      z_src: jnp.ndarray) -> jnp.ndarray:
+    """Slot-at-a-time twin of ``ell_spmm_ref``: scans the L slot columns so
+    peak memory stays O(N K) instead of O(N L K) — the fallback ops.py
+    selects when the gathered message block would be large."""
+    import jax
+
+    acc0 = diag.astype(jnp.float32)[:, None] * z_own.astype(jnp.float32)
+
+    def slot(acc, inp):
+        cols, w = inp                                   # (N,), (N,)
+        msgs = jnp.take(z_src, cols, axis=0).astype(jnp.float32)
+        return acc + w.astype(jnp.float32)[:, None] * msgs, None
+
+    acc, _ = jax.lax.scan(slot, acc0, (ell_idx.T, ell_val.T))
+    return acc
 
 
 def gram_apply_ref(x: jnp.ndarray, q: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:

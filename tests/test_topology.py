@@ -2,10 +2,12 @@
 import numpy as np
 import pytest
 
-from repro.core.topology import (Graph, complete, erdos_renyi,
-                                 local_degree_weights, metropolis_weights,
-                                 mixing_time, ring, spectral_gap, star,
-                                 torus2d)
+from repro.core.topology import (Graph, barabasi_albert, complete,
+                                 erdos_renyi, local_degree_weights,
+                                 metropolis_weights, mixing_time,
+                                 power_iteration_gap, random_geometric, ring,
+                                 spectral_gap, star, torus2d,
+                                 validate_adjacency, watts_strogatz)
 
 
 @pytest.mark.parametrize("maker,n", [
@@ -14,6 +16,9 @@ from repro.core.topology import (Graph, complete, erdos_renyi,
     (lambda: star(20), 20),
     (lambda: torus2d(4, 4), 16),
     (lambda: complete(8), 8),
+    (lambda: watts_strogatz(30, k=4, p=0.2, seed=1), 30),
+    (lambda: barabasi_albert(30, m=2, seed=1), 30),
+    (lambda: random_geometric(30, seed=1), 30),
 ])
 def test_graph_basic(maker, n):
     g = maker()
@@ -21,6 +26,7 @@ def test_graph_basic(maker, n):
     assert a.shape == (n, n)
     assert np.allclose(a, a.T), "adjacency must be symmetric"
     assert np.all(np.diag(a) == 0), "no self loops"
+    assert np.isin(a, (0, 1)).all()
     assert g.is_connected()
 
 
@@ -81,3 +87,82 @@ def test_star_center_degree():
     g = star(20)
     assert g.degrees[0] == 19
     assert np.all(g.degrees[1:] == 1)
+
+
+def test_metropolis_distinct_from_local_degree_on_star():
+    """The two weight rules differ exactly in the +1 laziness term: on a
+    star, Metropolis gives every edge 1/(N-1) so the hub sheds ALL
+    self-weight (w_00 = 0), while local-degree keeps w_00 = 1/N. A
+    regression test for the bug where both rules shared one formula."""
+    n = 10
+    g = star(n)
+    wm = metropolis_weights(g)
+    wl = local_degree_weights(g)
+    assert wm[0, 1] == pytest.approx(1.0 / (n - 1))
+    assert wl[0, 1] == pytest.approx(1.0 / n)
+    assert wm[0, 0] == pytest.approx(0.0)
+    assert wl[0, 0] == pytest.approx(1.0 / n)
+    assert not np.allclose(wm, wl)
+    # both remain symmetric and doubly stochastic
+    for w in (wm, wl):
+        assert np.allclose(w, w.T)
+        assert np.allclose(w.sum(1), 1.0)
+        assert np.all(w >= -1e-15)
+
+
+def test_ring_small_n():
+    g2 = ring(2)
+    assert g2.n_edges == 1                   # single edge, not double-counted
+    assert np.array_equal(g2.adjacency, [[0, 1], [1, 0]])
+    assert ring(1).n_edges == 0              # no self loop
+    assert ring(0).n_nodes == 0
+
+
+def test_validate_adjacency_rejections():
+    with pytest.raises(ValueError, match="square"):
+        validate_adjacency(np.zeros((3, 4)))
+    bad = np.zeros((3, 3))
+    bad[0, 1] = 1.0
+    with pytest.raises(ValueError, match="symmetric"):
+        Graph(bad)
+    with pytest.raises(ValueError, match="diagonal"):
+        Graph(np.eye(3))
+    half = np.zeros((3, 3))
+    half[0, 1] = half[1, 0] = 0.5
+    with pytest.raises(ValueError, match="0 or 1"):
+        Graph(half)
+
+
+def test_watts_strogatz_degree_and_rewiring():
+    g0 = watts_strogatz(40, k=4, p=0.0, seed=0)
+    assert np.all(g0.degrees == 4)           # p=0: the pristine k-lattice
+    g1 = watts_strogatz(40, k=4, p=0.5, seed=0)
+    assert g1.n_edges == g0.n_edges          # rewiring preserves edge count
+    assert not np.array_equal(g1.adjacency, g0.adjacency)
+
+
+def test_barabasi_albert_is_hub_heavy():
+    g = barabasi_albert(200, m=3, seed=0)
+    deg = g.degrees
+    # preferential attachment: max degree far above the median
+    assert deg.max() >= 3 * np.median(deg)
+    assert deg.min() >= 3
+
+
+def test_power_iteration_gap_matches_exact():
+    for g in (watts_strogatz(40, k=6, p=0.3, seed=2),
+              barabasi_albert(40, m=2, seed=2)):
+        w = local_degree_weights(g)
+        exact = spectral_gap(w, method="exact")
+        power = power_iteration_gap(lambda x: w @ x, g.n_nodes, iters=4000)
+        assert abs(power - exact) < 1e-3
+        assert abs(spectral_gap(w, method="power", iters=4000) - exact) < 1e-3
+
+
+def test_mixing_time_bound_agrees_with_exact_order():
+    w = local_degree_weights(erdos_renyi(24, 0.4, seed=1))
+    t_exact = mixing_time(w)
+    t_bound = mixing_time(w, method="bound")
+    assert t_exact is not None and t_bound is not None
+    # the contraction bound is conservative but the same order of magnitude
+    assert t_exact <= t_bound <= 10 * t_exact + 5
